@@ -1,0 +1,87 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    WorkloadConfig,
+    make_cluster,
+    run_baseline,
+    run_oasis,
+    run_pdors,
+    synthetic_jobs,
+    trace_jobs,
+)
+
+# benchmark-scale workload defaults: paper ranges with workload scaled so a
+# meaningful fraction of jobs is completable within T (see DESIGN.md §9)
+BENCH = dict(batch=(50, 200), workload_scale=0.3)
+
+
+def make_jobs(num_jobs: int, horizon: int, seed: int, trace: bool = False,
+              mix=None, workload_scale: float = None):
+    kw = dict(BENCH)
+    if mix is not None:
+        kw["mix"] = mix
+    if workload_scale is not None:
+        kw["workload_scale"] = workload_scale
+    cfg = WorkloadConfig(num_jobs=num_jobs, horizon=horizon, seed=seed, **kw)
+    return (trace_jobs if trace else synthetic_jobs)(cfg)
+
+
+def run_policy(name: str, jobs, num_machines: int, horizon: int,
+               seed: int = 0) -> Dict:
+    """Run one scheduling policy; returns utility + timing."""
+    cluster = make_cluster(num_machines, horizon)
+    t0 = time.time()
+    if name == "pdors":
+        res = run_pdors(jobs, cluster, quanta=horizon, seed=seed)
+        util = res.total_utility
+        extra = {"admitted": len(res.admitted),
+                 "times": res.training_times(horizon)}
+    elif name == "oasis":
+        res = run_oasis(jobs, cluster, quanta=horizon, seed=seed)
+        util = res.total_utility
+        extra = {"admitted": len(res.admitted),
+                 "times": res.training_times(horizon)}
+    else:
+        out = run_baseline(name, jobs, cluster, seed=seed)
+        util = out.total_utility
+        extra = {"admitted": len(out.completions),
+                 "times": out.training_times(jobs, horizon)}
+    wall = time.time() - t0
+    return {"utility": util, "wall_s": wall,
+            "us_per_job": wall / max(len(jobs), 1) * 1e6, **extra}
+
+
+def sweep(policies: List[str], xs: List[int], make_args: Callable,
+          seeds=(0, 1)) -> List[Dict]:
+    """For each x and policy, average utility over seeds."""
+    rows = []
+    for x in xs:
+        for pol in policies:
+            utils, uspj, admitted = [], [], []
+            for seed in seeds:
+                jobs, H, T = make_args(x, seed)
+                r = run_policy(pol, jobs, H, T, seed=seed)
+                utils.append(r["utility"])
+                uspj.append(r["us_per_job"])
+                admitted.append(r["admitted"])
+            rows.append({
+                "x": x, "policy": pol,
+                "utility": float(np.mean(utils)),
+                "us_per_job": float(np.mean(uspj)),
+                "admitted": float(np.mean(admitted)),
+            })
+    return rows
+
+
+def emit(name: str, rows: List[Dict], x_label: str = "x") -> None:
+    """CSV lines: name,us_per_call,derived..."""
+    for r in rows:
+        print(f"{name}[{x_label}={r['x']},{r['policy']}],"
+              f"{r['us_per_job']:.0f},"
+              f"utility={r['utility']:.1f};admitted={r['admitted']:.1f}")

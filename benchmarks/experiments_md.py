@@ -1,0 +1,162 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from
+results/dryrun_baseline.json (single source of truth)."""
+import json
+import os
+import sys
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import roofline_terms
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.json")
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def dryrun_section(results):
+    lines = [
+        "## §Dry-run",
+        "",
+        "Every (architecture × input shape) pair lowered **and compiled** on",
+        "both production meshes — 16×16 `(data, model)` (256 chips) and",
+        "2×16×16 `(pod, data, model)` (512 chips).  Columns: compile wall",
+        "time, per-device peak bytes from `memory_analysis()`, extrapolated",
+        "HLO FLOPs (XLA counts a `lax.scan` body once — see DESIGN.md; the",
+        "dry-run probe-compiles L=1/L=2 unrolled variants and extrapolates",
+        "`total = base + L·body`), and summed collective bytes from the",
+        "compiled HLO.",
+        "",
+        "| arch | shape | mesh | compile_s | peak/dev | HLO FLOPs | coll bytes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        peak = r["memory"]["peak_bytes"] / r["devices"]
+        coll = sum(v for k, v in r["collective_bytes"].items()
+                   if k not in ("cross_pod", "intra_pod"))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f} | {fmt_bytes(peak)} | "
+            f"{r['flops']:.2e} | {fmt_bytes(coll)} |")
+    n_ok = len(results)
+    lines += ["", f"**{n_ok}/80 combinations lower and compile.**", ""]
+    return "\n".join(lines)
+
+
+def roofline_section(results):
+    lines = [
+        "## §Roofline",
+        "",
+        "Per (arch × shape) on the **single-pod 16×16 mesh** (256 chips).",
+        "Terms in seconds/step (per chip): compute = FLOPs/(chips·197e12);",
+        "memory = analytic fused HBM-traffic model /(chips·819e9) — the raw",
+        "XLA `bytes accessed` (pre-fusion upper bound) is in parentheses;",
+        "collective = intra/(chips·50e9) + cross/(chips·6.25e9).",
+        "`useful` = MODEL_FLOPS(6·N_active·D or 2·N·D) / extrapolated HLO",
+        "FLOPs — recompute (remat) and dispatch waste push it below 1.",
+        "",
+        "| arch | shape | compute_s | memory_s (upper) | collective_s |"
+        " dominant | useful | next lever |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    levers = {
+        ("compute", "train"): "drop remat to `dots` (recompute is ~25% of FLOPs)",
+        ("compute", "prefill"): "flash-attention kernel (fewer softmax passes)",
+        ("compute", "decode"): "gather-based MoE dispatch / fewer dead FLOPs",
+        ("memory", "train"): "larger per-chip batch raises arithmetic intensity",
+        ("memory", "prefill"): "KV-cache in bf16; fuse attention (flash kernel)",
+        ("memory", "decode"): "batch more sequences per step to amortize weight reads",
+        ("collective", "train"): "hierarchical pod-aware grad sync (§Perf)",
+        ("collective", "prefill"): "shard KV on model axis to kill all-gathers",
+        ("collective", "decode"): "replicate small params; avoid per-step all-gathers",
+    }
+    rows = []
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("multi_pod"):
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        t = roofline_terms(cfg, shape, r)
+        rows.append((r, t))
+        lever = levers.get((t["dominant"], shape.kind), "-")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} ({t['memory_upper_s']:.1e}) | "
+            f"{t['collective_s']:.2e} | **{t['dominant']}** | "
+            f"{t['useful_flops_frac']:.2f} | {lever} |")
+    # summary of dominant terms
+    from collections import Counter
+    doms = Counter(t["dominant"] for _, t in rows)
+    lines += ["", f"Dominant-term census: {dict(doms)}", ""]
+    return "\n".join(lines), rows
+
+
+OPTIMIZED = os.path.join(os.path.dirname(__file__), "..", "results",
+                         "dryrun_optimized.json")
+
+
+def optimized_section(base, opt):
+    from collections import Counter
+
+    lines = [
+        "### Optimized defaults vs paper-faithful baseline (all 40 pairs)",
+        "",
+        "The §Perf winners became defaults (one-hot CE, activation pinning,",
+        "EP train rules + serve overrides, unsharded-vocab embedding).  Full",
+        "re-sweep on the single-pod mesh:",
+        "",
+        "| arch | shape | collective_s base → opt | dominant base → opt |",
+        "|---|---|---|---|",
+    ]
+    bidx = {(r["arch"], r["shape"]): r for r in base if not r["multi_pod"]}
+    doms = Counter()
+    gains = []
+    for r in sorted(opt, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("multi_pod"):
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        b = bidx.get((r["arch"], r["shape"]))
+        tb = roofline_terms(cfg, shape, b)
+        to = roofline_terms(cfg, shape, r)
+        doms[to["dominant"]] += 1
+        if tb["collective_s"] > 0:
+            gains.append(tb["collective_s"] / max(to["collective_s"], 1e-12))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{tb['collective_s']:.2e} → {to['collective_s']:.2e} | "
+            f"{tb['dominant']} → **{to['dominant']}** |")
+    import numpy as np
+    improved = sum(1 for g in gains if g > 1.2)
+    big = sum(1 for g in gains if g > 2.0)
+    lines += [
+        "",
+        f"Optimized dominant-term census: {dict(doms)}.  Collective term",
+        f"improved >1.2× on {improved}/40 pairs (> 2× on {big}; max"
+        f" {max(gains):.0f}×) — the rest (decode shapes, SSM archs) were",
+        "already at their default-rule optimum; the launcher-level",
+        "`pure_fsdp` flag adds a further ~2× on the large dense/MoE train",
+        "pairs (recorded per-variant in §Perf below).",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    with open(RESULTS) as f:
+        results = json.load(f)
+    print(dryrun_section(results))
+    print(roofline_section(results)[0])
+    if os.path.exists(OPTIMIZED):
+        with open(OPTIMIZED) as f:
+            opt = json.load(f)
+        print(optimized_section(results, opt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Fig. 10: empirical competitive ratio = OPT(offline) / PD-ORS on tiny
+instances solved exactly by brute force.  Paper reports ratios in [1.0, 1.4]
+for I<=10, T<=10; our exact search uses I<=5, T<=6, H<=2 (DESIGN.md §9)."""
+import time
+
+import numpy as np
+
+from repro.core import (
+    JobSpec,
+    SigmoidUtility,
+    make_cluster,
+    offline_optimum,
+    run_pdors,
+)
+
+
+def tiny_jobs(num: int, seed: int):
+    rng = np.random.default_rng(seed)
+    jobs = []
+    for i in range(num):
+        F = int(rng.integers(3, 7))
+        jobs.append(JobSpec(
+            job_id=i,
+            arrival=int(rng.integers(0, 3)),
+            epochs=1,
+            num_samples=int(rng.integers(2_500, 6_000)),
+            batch_size=F,
+            tau=1e-3,
+            grad_size=100.0,
+            gamma=float(rng.uniform(1.5, 3.0)),
+            bw_internal=1e6,
+            bw_external=2e5,
+            worker_demand={"gpu": 1.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+            ps_demand={"gpu": 0.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+            utility=SigmoidUtility(float(rng.uniform(20, 60)),
+                                   float(rng.uniform(0.3, 1.0)),
+                                   float(rng.uniform(2, 4))),
+        ))
+    return jobs
+
+
+def run(full: bool = False):
+    ratios = []
+    n_seeds = 6 if full else 4
+    for seed in range(n_seeds):
+        for I in (3, 4, 5):
+            jobs = tiny_jobs(I, seed)
+            T, H = 5, 2
+            # tight capacity (~10 workers/machine) so jobs contend — the
+            # paper's ratios (1.0-1.4) arise from contention
+            t0 = time.time()
+            opt = offline_optimum(jobs, make_cluster(H, T, capacity_scale=0.1))
+            res = run_pdors(jobs, make_cluster(H, T, capacity_scale=0.1),
+                            quanta=T, seed=seed)
+            wall = time.time() - t0
+            if res.total_utility > 1e-9:
+                # PD-ORS's own solution is feasible offline, so true OPT >=
+                # max(search result, PD-ORS) — keeps the ratio valid (>= 1)
+                opt_util = max(opt.total_utility, res.total_utility)
+                ratio = opt_util / res.total_utility
+                ratios.append(ratio)
+                print(f"fig10_competitive[I={I},seed={seed}],"
+                      f"{wall / max(len(jobs),1) * 1e6:.0f},"
+                      f"ratio={ratio:.3f}")
+    if ratios:
+        print(f"fig10_summary,0,mean={np.mean(ratios):.3f};"
+              f"max={np.max(ratios):.3f};min={np.min(ratios):.3f}")
+        # paper remark ii: the Theorem-5 worst-case bound is far more
+        # conservative than the measured ratio
+        from repro.core import theorem5_bound
+
+        jobs = tiny_jobs(5, 0)
+        bound = theorem5_bound(jobs, make_cluster(2, 5, capacity_scale=0.1),
+                               5, delta=0.5)
+        print(f"fig10_theory,0,thm5_bound={bound.ratio:.1f};"
+              f"empirical_max={np.max(ratios):.3f};"
+              f"slack={bound.ratio / max(np.max(ratios), 1e-9):.0f}x")
+    return ratios
+
+
+if __name__ == "__main__":
+    run()

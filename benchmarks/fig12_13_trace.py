@@ -1,0 +1,32 @@
+"""Figs. 12-13: total utility on Google-cluster-trace-like arrivals
+(bursty arrival profile, trace job-class mix), vs machines and vs jobs."""
+from .common import emit, make_jobs, sweep
+
+POLICIES = ("pdors", "oasis", "fifo", "drf", "dorm")
+
+
+def run(full: bool = False):
+    T = 20
+    # vs machines
+    I = 30 if full else 20
+    hs = [10, 30, 50] if full else [8, 16]
+    rows = sweep(
+        list(POLICIES), hs,
+        lambda h, seed: (make_jobs(I, T, seed, trace=True), h, T),
+        seeds=(0, 1),
+    )
+    emit("fig12_trace_vs_machines", rows, "H")
+    # vs jobs
+    H = 30 if full else 10
+    i_s = [20, 60, 100] if full else [12, 24]
+    rows2 = sweep(
+        list(POLICIES), i_s,
+        lambda i, seed: (make_jobs(i, T, seed, trace=True), H, T),
+        seeds=(0, 1),
+    )
+    emit("fig13_trace_vs_jobs", rows2, "I")
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Figs. 14-17: sensitivity to the job-criticality mix.
+
+Paper: with the (10%, 55%, 35%) mix the PD-ORS-over-OASiS utility gain is
+larger than with the trace-realistic (30%, 69%, 1%) mix — fewer
+time-critical jobs => less advantage from smart scheduling."""
+import numpy as np
+
+from .common import make_jobs, run_policy
+
+
+def run(full: bool = False):
+    T = 20
+    H = 20 if full else 10
+    I = 40 if full else 24
+    gains = {}
+    for label, mix in (("crit35", (0.10, 0.55, 0.35)),
+                       ("crit1", (0.30, 0.69, 0.01))):
+        g = []
+        for seed in (0, 1, 2):
+            jobs = make_jobs(I, T, seed, mix=mix)
+            p = run_policy("pdors", jobs, H, T, seed=seed)["utility"]
+            o = run_policy("oasis", jobs, H, T, seed=seed)["utility"]
+            g.append(p / max(o, 1e-9))
+        gains[label] = float(np.mean(g))
+        print(f"fig14_17_jobmix[{label}],0,"
+              f"pdors_over_oasis={gains[label]:.3f}")
+    print(f"fig14_17_check,0,gain_crit35>{'=' if gains['crit35'] >= gains['crit1'] else '<'}gain_crit1 "
+          f"(paper: more critical jobs => larger gain)")
+    return gains
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Fig. 6: total utility vs number of machines (synthetic arrivals).
+Paper: T=20, I=50, H in 20..100; scaled here to CPU-budget sizes."""
+from .common import emit, make_jobs, sweep
+
+POLICIES = ("pdors", "oasis", "fifo", "drf", "dorm")
+
+
+def run(full: bool = False):
+    T, I = 20, 50 if full else 24
+    hs = [20, 40, 60, 80, 100] if full else [8, 16, 24]
+    rows = sweep(
+        list(POLICIES), hs,
+        lambda h, seed: (make_jobs(I, T, seed), h, T),
+        seeds=(0, 1),
+    )
+    emit("fig6_utility_vs_machines", rows, "H")
+    # paper's qualitative claim: PD-ORS dominates at every point
+    by_x = {}
+    for r in rows:
+        by_x.setdefault(r["x"], {})[r["policy"]] = r["utility"]
+    wins = sum(
+        1 for x, d in by_x.items()
+        if d["pdors"] >= max(v for k, v in d.items() if k != "pdors") * 0.95
+    )
+    print(f"fig6_check,0,pdors_wins_at={wins}/{len(by_x)}_points")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

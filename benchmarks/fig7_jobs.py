@@ -1,0 +1,22 @@
+"""Fig. 7: total utility vs number of jobs (synthetic arrivals).
+Paper: T=20, H=100, I sweep; scaled sizes here."""
+from .common import emit, make_jobs, sweep
+
+POLICIES = ("pdors", "oasis", "fifo", "drf", "dorm")
+
+
+def run(full: bool = False):
+    T = 20
+    H = 100 if full else 12
+    i_s = [20, 40, 60, 80, 100] if full else [10, 20, 30]
+    rows = sweep(
+        list(POLICIES), i_s,
+        lambda i, seed: (make_jobs(i, T, seed), H, T),
+        seeds=(0, 1),
+    )
+    emit("fig7_utility_vs_jobs", rows, "I")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Fig. 8: PD-ORS vs OASiS with increasing jobs — the co-location gain.
+The paper's claim: the gap widens as the number of jobs increases."""
+import numpy as np
+
+from .common import emit, make_jobs, sweep
+
+
+def run(full: bool = False):
+    T = 20
+    H = 20 if full else 10
+    i_s = [20, 40, 60, 80] if full else [10, 20, 30, 40]
+    rows = sweep(
+        ["pdors", "oasis"], i_s,
+        lambda i, seed: (make_jobs(i, T, seed), H, T),
+        seeds=(0, 1, 2),
+    )
+    emit("fig8_pdors_vs_oasis", rows, "I")
+    gains = {}
+    for r in rows:
+        gains.setdefault(r["x"], {})[r["policy"]] = r["utility"]
+    for x, d in sorted(gains.items()):
+        g = d["pdors"] / max(d["oasis"], 1e-9)
+        print(f"fig8_gain[I={x}],0,pdors_over_oasis={g:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig. 9: median actual training time per policy (unfinished jobs count
+as T — the paper's convention).  Paper: T=80, H=30, I=100; scaled here."""
+import time
+
+import numpy as np
+
+from .common import make_jobs, run_policy
+
+
+def run(full: bool = False):
+    T = 80 if full else 30
+    H = 30 if full else 12
+    I = 100 if full else 20
+    for pol in ("pdors", "oasis", "fifo", "drf", "dorm"):
+        meds, uspj = [], []
+        for seed in (0, 1):
+            # lighter jobs so most policies can finish a majority within T
+            jobs = make_jobs(I, T, seed, workload_scale=0.12)
+            r = run_policy(pol, jobs, H, T, seed=seed)
+            meds.append(float(np.median(r["times"])))
+            uspj.append(r["us_per_job"])
+        print(f"fig9_median_time[{pol}],{np.mean(uspj):.0f},"
+              f"median_slots={np.mean(meds):.1f}")
+
+
+if __name__ == "__main__":
+    run()

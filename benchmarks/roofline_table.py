@@ -1,0 +1,38 @@
+"""Deliverable (g): roofline table over all (arch x shape) baselines.
+
+Reads results/dryrun_baseline.json (written by repro.launch.dryrun --all)
+and prints the three terms + dominant bottleneck per pair on the
+single-pod mesh, plus MODEL_FLOPS/HLO_FLOPs utilization."""
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.roofline import roofline_terms
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_baseline.json")
+
+
+def run(path: str = RESULTS):
+    if not os.path.exists(path):
+        print("roofline_table,0,SKIPPED (run repro.launch.dryrun --all first)")
+        return []
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("multi_pod"):
+            continue  # roofline table is single-pod (spec)
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        t = roofline_terms(cfg, shape, r)
+        rows.append((r["arch"], r["shape"], t))
+        print(f"roofline[{r['arch']},{r['shape']}],0,"
+              f"compute={t['compute_s']:.3e};memory={t['memory_s']:.3e};"
+              f"collective={t['collective_s']:.3e};dominant={t['dominant']};"
+              f"useful={t['useful_flops_frac']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

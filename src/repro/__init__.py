@@ -1,0 +1,14 @@
+"""repro: PD-ORS online scheduling for distributed ML (paper) built as a
+production-grade JAX training/serving framework.
+
+Subpackages:
+    core        the paper's scheduler (Algorithms 1-4, baselines, theory)
+    models      model zoo for the 10 assigned architectures
+    configs     per-architecture configs + input-shape registry
+    data/optim/checkpoint/train/serve    training & serving substrates
+    parallel    sharding rules, pod-aware collectives
+    kernels     Pallas TPU kernels (flash attention, rmsnorm)
+    launch      production meshes, multi-pod dry-run, drivers
+    roofline    compiled-artifact roofline analysis
+"""
+__version__ = "1.0.0"

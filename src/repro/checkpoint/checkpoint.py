@@ -1,0 +1,112 @@
+"""Pytree checkpointing to .npz (sharding-aware gather on save, re-shard on
+restore).  Layout: <dir>/step_<N>.npz + a small JSON manifest with the tree
+structure so arbitrary nested dicts round-trip."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/{i}", v)
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten(flat: Dict[str, Any], structure) -> Any:
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}/{k}" if prefix else str(k), v)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(f"{prefix}/{i}", v) for i, v in enumerate(node)]
+            return type(node)(t)
+        return flat[prefix]
+
+    return walk("", structure)
+
+
+def _structure_of(tree):
+    if isinstance(tree, dict):
+        return {k: _structure_of(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_structure_of(v) for v in tree]
+    return None
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype.isbuiltin != 1:  # ml_dtypes (bf16, fp8, ...): store as f32
+            a = a.astype(np.float32)
+        arrays[k] = a
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    np.savez(path, **arrays)
+    manifest = os.path.join(directory, f"step_{step:08d}.json")
+    with open(manifest, "w") as f:
+        json.dump({"step": step, "structure": _structure_of(tree),
+                   "keys": sorted(arrays), "dtypes": dtypes}, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"step_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: Optional[int] = None,
+                    shardings=None):
+    """Restore; if `shardings` (matching pytree of NamedSharding) is given,
+    arrays are placed accordingly."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    manifest = os.path.join(directory, f"step_{step:08d}.json")
+    with open(manifest) as f:
+        meta = json.load(f)
+    data = np.load(path)
+    import ml_dtypes  # ships with jax
+
+    dtypes = meta.get("dtypes", {})
+    flat = {}
+    for k in meta["keys"]:
+        a = data[k]
+        want = dtypes.get(k, str(a.dtype))
+        if want != str(a.dtype):
+            try:
+                a = a.astype(np.dtype(want))
+            except TypeError:
+                a = a.astype(getattr(ml_dtypes, want))
+        flat[k] = a
+    tree = _unflatten(flat, meta["structure"])
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, step

@@ -1,0 +1,51 @@
+"""PD-ORS: the paper's contribution — online primal-dual scheduling of
+distributed ML jobs with locality-aware worker/PS placement.
+
+Public API:
+    JobSpec, SigmoidUtility, Allocation      — job model (paper §3)
+    Cluster, Machine, make_cluster           — cluster model
+    PriceParams, PriceTable, estimate_price_params — Q_h^r pricing (Eq. 12)
+    solve_theta                              — Algorithm 4
+    WorkloadDP                               — Algorithm 3
+    find_best_schedule, Schedule             — Algorithm 2
+    PDORS, run_pdors, PDORSResult            — Algorithm 1
+    run_baseline, run_oasis                  — §5 baselines
+    offline_optimum                          — Fig. 10 offline OPT
+    synthetic_jobs, trace_jobs, arch_jobs    — §5 workload generators
+"""
+from .job import JobSpec, SigmoidUtility, Allocation
+from .cluster import Cluster, Machine, make_cluster
+from .pricing import PriceParams, PriceTable, estimate_price_params
+from .subproblem import SubproblemConfig, ThetaResult, solve_theta
+from .dp import WorkloadDP
+from .schedule import Schedule, find_best_schedule
+from .pdors import PDORS, PDORSResult, run_pdors
+from .baselines import run_baseline, run_oasis, SimOutcome
+from .offline import offline_optimum
+from .workload import WorkloadConfig, synthetic_jobs, trace_jobs, arch_jobs
+from .lp import linprog, LPResult
+from .rounding import (
+    g_delta_packing,
+    g_delta_cover,
+    approximation_ratio,
+    randomized_round,
+    round_until_feasible,
+)
+
+__all__ = [
+    "JobSpec", "SigmoidUtility", "Allocation",
+    "Cluster", "Machine", "make_cluster",
+    "PriceParams", "PriceTable", "estimate_price_params",
+    "SubproblemConfig", "ThetaResult", "solve_theta",
+    "WorkloadDP", "Schedule", "find_best_schedule",
+    "PDORS", "PDORSResult", "run_pdors",
+    "run_baseline", "run_oasis", "SimOutcome",
+    "offline_optimum",
+    "WorkloadConfig", "synthetic_jobs", "trace_jobs", "arch_jobs",
+    "linprog", "LPResult",
+    "g_delta_packing", "g_delta_cover", "approximation_ratio",
+    "randomized_round", "round_until_feasible",
+]
+from .theory import CompetitiveBound, theorem5_bound  # noqa: E402
+
+__all__ += ["CompetitiveBound", "theorem5_bound"]

@@ -1,0 +1,119 @@
+"""Cluster model: machines, capacities, and the allocation ledger (Eq. 5).
+
+Two presets are provided:
+  * ``ethernet`` — the paper's own experimental setting (EC2 C5n-like):
+    resources {gpu, cpu, mem, storage}, capacities ~18x a worker's demand.
+  * ``tpu`` — the TPU adaptation (DESIGN.md §3): resources
+    {chips, hbm, host_cpu, host_mem}; a "machine" is a pod slice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from .job import JobSpec, Allocation, Resource
+
+
+@dataclass(frozen=True)
+class Machine:
+    machine_id: int
+    capacity: Dict[Resource, float]  # C_h^r
+
+
+@dataclass
+class Cluster:
+    machines: List[Machine]
+    horizon: int  # T
+
+    def __post_init__(self) -> None:
+        self.resources: List[Resource] = sorted(
+            {r for m in self.machines for r in m.capacity}
+        )
+        # rho_h^r[t]: allocated amount per (t, h, r)
+        self._used: Dict[Tuple[int, int, Resource], float] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def num_machines(self) -> int:
+        return len(self.machines)
+
+    def capacity(self, h: int, r: Resource) -> float:
+        return self.machines[h].capacity.get(r, 0.0)
+
+    def used(self, t: int, h: int, r: Resource) -> float:
+        return self._used.get((t, h, r), 0.0)
+
+    def free(self, t: int, h: int, r: Resource) -> float:
+        return self.capacity(h, r) - self.used(t, h, r)
+
+    def total_capacity(self) -> float:
+        """sum_h sum_r C_h^r (used by mu in pricing, Eq. 14)."""
+        return sum(sum(m.capacity.values()) for m in self.machines)
+
+    # ------------------------------------------------------------------
+    def fits(self, t: int, job: JobSpec, alloc: Allocation) -> bool:
+        """Capacity check for one slot (Eq. 5)."""
+        for h in set(alloc.workers) | set(alloc.ps):
+            w = alloc.workers.get(h, 0)
+            s = alloc.ps.get(h, 0)
+            for r in self.resources:
+                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
+                if need > self.free(t, h, r) + 1e-9:
+                    return False
+        return True
+
+    def commit(self, t: int, job: JobSpec, alloc: Allocation) -> None:
+        """rho update of Algorithm 1 step 3."""
+        for h in set(alloc.workers) | set(alloc.ps):
+            w = alloc.workers.get(h, 0)
+            s = alloc.ps.get(h, 0)
+            for r in self.resources:
+                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
+                if need:
+                    self._used[(t, h, r)] = self.used(t, h, r) + need
+
+    def release(self, t: int, job: JobSpec, alloc: Allocation) -> None:
+        for h in set(alloc.workers) | set(alloc.ps):
+            w = alloc.workers.get(h, 0)
+            s = alloc.ps.get(h, 0)
+            for r in self.resources:
+                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
+                if need:
+                    self._used[(t, h, r)] = self.used(t, h, r) - need
+
+    def utilization(self, t: int) -> Dict[Resource, float]:
+        out = {}
+        for r in self.resources:
+            cap = sum(self.capacity(h, r) for h in range(self.num_machines))
+            use = sum(self.used(t, h, r) for h in range(self.num_machines))
+            out[r] = use / cap if cap else 0.0
+        return out
+
+
+# ----------------------------------------------------------------------
+def make_cluster(
+    num_machines: int,
+    horizon: int,
+    preset: str = "ethernet",
+    capacity_scale: float = 1.0,
+) -> Cluster:
+    if preset == "ethernet":
+        # paper §5: capacity ≈ 18x a worker/PS demand (EC2 C5n.18xlarge-like)
+        cap = {
+            "gpu": 72.0 * capacity_scale,      # 18 x up-to-4 GPUs
+            "cpu": 180.0 * capacity_scale,     # 18 x up-to-10 vCPU
+            "mem": 576.0 * capacity_scale,     # 18 x up-to-32 GB
+            "storage": 180.0 * capacity_scale, # 18 x up-to-10 GB
+        }
+    elif preset == "tpu":
+        # a "machine" = one v5e pod slice of 16 chips (DESIGN.md §3)
+        cap = {
+            "chips": 16.0 * capacity_scale,
+            "hbm": 16.0 * 16.0 * capacity_scale,   # GB
+            "host_cpu": 224.0 * capacity_scale,
+            "host_mem": 512.0 * capacity_scale,
+        }
+    else:
+        raise ValueError(f"unknown preset {preset!r}")
+    machines = [Machine(h, dict(cap)) for h in range(num_machines)]
+    return Cluster(machines=machines, horizon=horizon)

@@ -1,0 +1,139 @@
+"""Algorithm 3: dynamic program over per-slot workload (Eq. 21).
+
+Theta(t_tilde, V) = min_{v in [0, V]} { theta(t_tilde, v) + Theta(t_tilde-1, V-v) }
+
+The paper enumerates v at sample granularity — O(T K^2 E^2) states, which is
+exact but astronomically slow for realistic K*E (~1e7).  We quantize the
+workload into ``quanta`` equal units (default 32): v ranges over multiples of
+V/quanta.  This preserves the DP structure (Eq. 21) at bounded granularity;
+quanta can be raised for exactness on small instances (the competitive-ratio
+benchmark uses the exact setting).
+
+The forward table C[t][u] = min cost to finish u units within [a_i, t]
+is shared across all completion-time candidates of Algorithm 2, which
+turns Algorithm 2+3 from O(T^2) DP runs into one pass.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cluster import Cluster
+from .job import Allocation, JobSpec
+from .pricing import PriceTable
+from .subproblem import (
+    PriceSnapshot,
+    SubproblemConfig,
+    ThetaResult,
+    solve_theta_snapshot,
+)
+
+
+@dataclass
+class DPResult:
+    cost: float
+    # slot -> ThetaResult for the chosen workloads (only active slots)
+    slots: Dict[int, ThetaResult]
+
+
+class WorkloadDP:
+    def __init__(
+        self,
+        job: JobSpec,
+        cluster: Cluster,
+        prices: PriceTable,
+        cfg: Optional[SubproblemConfig] = None,
+        quanta: int = 32,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        self.job = job
+        self.cluster = cluster
+        self.prices = prices
+        self.cfg = cfg or SubproblemConfig()
+        self.rng = rng if rng is not None else np.random.default_rng(self.cfg.seed)
+        V = job.total_workload()
+        self.quanta = max(1, min(quanta, int(math.ceil(V))))
+        self.unit = V / self.quanta
+        # theta cache: (t, units) -> Optional[ThetaResult]
+        self._theta: Dict[Tuple[int, int], Optional[ThetaResult]] = {}
+        # price snapshots are valid for the whole job (prices frozen until
+        # admission): one per slot
+        self._snaps: Dict[int, PriceSnapshot] = {}
+
+    # ------------------------------------------------------------------
+    def snapshot(self, t: int) -> PriceSnapshot:
+        if t not in self._snaps:
+            self._snaps[t] = PriceSnapshot(self.job, self.cluster, self.prices, t)
+        return self._snaps[t]
+
+    def theta(self, t: int, units: int) -> Optional[ThetaResult]:
+        key = (t, units)
+        if key not in self._theta:
+            self._theta[key] = solve_theta_snapshot(
+                self.job, self.snapshot(t), units * self.unit, self.cfg, self.rng,
+            )
+        return self._theta[key]
+
+    # ------------------------------------------------------------------
+    def solve_prefix(self, t_end: int) -> List[List[float]]:
+        """Forward DP over slots [a_i, t_end]; returns cost table C where
+        C[k][u] = min cost using the first k slots to finish u units."""
+        a = self.job.arrival
+        Q = self.quanta
+        INF = float("inf")
+        C: List[List[float]] = [[INF] * (Q + 1)]
+        C[0][0] = 0.0
+        choice: List[List[int]] = [[-1] * (Q + 1)]
+        for t in range(a, t_end + 1):
+            prev = C[-1]
+            cur = [INF] * (Q + 1)
+            ch = [-1] * (Q + 1)
+            # precompute theta(t, v) for all v once
+            tcost = [0.0] * (Q + 1)
+            tok = [True] * (Q + 1)
+            for v in range(1, Q + 1):
+                th = self.theta(t, v)
+                if th is None:
+                    tok[v] = False
+                else:
+                    tcost[v] = th.cost
+            for u in range(Q + 1):
+                best, bestv = INF, -1
+                for v in range(0, u + 1):
+                    if not tok[v] or prev[u - v] == INF:
+                        continue
+                    val = prev[u - v] + tcost[v]
+                    if val < best - 1e-12:
+                        best, bestv = val, v
+                cur[u] = best
+                ch[u] = bestv
+            C.append(cur)
+            choice.append(ch)
+        self._choice = choice
+        return C
+
+    def reconstruct(self, t_end: int, C: List[List[float]]) -> Optional[DPResult]:
+        """Walk the choice table back from (t_end, Q)."""
+        a = self.job.arrival
+        Q = self.quanta
+        k = t_end - a + 1
+        if C[k][Q] == float("inf"):
+            return None
+        slots: Dict[int, ThetaResult] = {}
+        u = Q
+        total = 0.0
+        for kk in range(k, 0, -1):
+            v = self._choice[kk][u]
+            if v is None or v < 0:
+                return None
+            if v > 0:
+                t = a + kk - 1
+                th = self.theta(t, v)
+                assert th is not None
+                slots[t] = th
+                total += th.cost
+            u -= v
+        return DPResult(cost=total, slots=slots)

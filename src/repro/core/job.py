@@ -1,0 +1,127 @@
+"""Job model for PD-ORS (paper §3.2).
+
+A training job is described exactly by the paper's tuple:
+  (a_i, E_i, K_i, F_i, tau_i, g_i, gamma_i, b_int, b_ext, alpha, beta, u_i).
+
+Units are abstract but consistent: time in "slots", bandwidth in
+"parameter-units per slot", g_i in "parameter-units".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+Resource = str  # e.g. "gpu", "cpu", "mem", "storage" | "chips", "hbm", ...
+
+
+@dataclass(frozen=True)
+class SigmoidUtility:
+    """Paper §5: u_i(t) = theta1 / (1 + exp(theta2 * (t - theta3))).
+
+    theta1: priority scale; theta2: time criticality (0 => flat);
+    theta3: target completion time.
+    """
+
+    theta1: float
+    theta2: float
+    theta3: float
+
+    def __call__(self, latency: float) -> float:
+        z = self.theta2 * (latency - self.theta3)
+        # numerically safe sigmoid
+        if z >= 0:
+            return self.theta1 * math.exp(-z) / (1.0 + math.exp(-z)) if z < 50 else 0.0
+        return self.theta1 / (1.0 + math.exp(z))
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One ML training job (paper Table 1)."""
+
+    job_id: int
+    arrival: int                      # a_i (slot index)
+    epochs: int                       # E_i
+    num_samples: int                  # K_i
+    batch_size: int                   # F_i (fixed global batch size)
+    tau: float                        # time to train one sample (slots)
+    grad_size: float                  # g_i (params+grads pushed/pulled)
+    gamma: float                      # worker:PS ratio  sum w / sum s
+    bw_internal: float                # b_i^(i)
+    bw_external: float                # b_i^(e)
+    worker_demand: Dict[Resource, float]   # alpha_i^r
+    ps_demand: Dict[Resource, float]       # beta_i^r
+    utility: SigmoidUtility
+    arch: str = "generic"             # architecture tag (configs registry id)
+
+    # ---- paper Eq. (1)-(3) helpers -------------------------------------
+    def total_workload(self) -> float:
+        """V_i = E_i * K_i: total samples that must be trained."""
+        return float(self.epochs) * float(self.num_samples)
+
+    def comm_time_per_sample(self, internal: bool) -> float:
+        """(gamma_i / F_i) * 2 g_i / b  — communication slot-cost per sample."""
+        b = self.bw_internal if internal else self.bw_external
+        return (self.gamma / self.batch_size) * (2.0 * self.grad_size / b)
+
+    def time_per_sample(self, internal: bool) -> float:
+        """tau_i + comm (denominator of Eq. (1) given locality case)."""
+        return self.tau + self.comm_time_per_sample(internal)
+
+    def throughput_per_worker(self, internal: bool) -> float:
+        """Samples/slot one worker contributes (Eq. (1) numerator=1)."""
+        return 1.0 / self.time_per_sample(internal)
+
+    def min_completion_slots(self) -> int:
+        """ceil(E K / F * (tau + 2 g gamma/(b_int F))): all-internal, max
+        workers (= F_i). Used in U^r (Eq. 13)."""
+        return int(
+            math.ceil(
+                self.total_workload()
+                / self.batch_size
+                * self.time_per_sample(internal=True)
+            )
+        )
+
+    def max_resource_slots(self) -> float:
+        """ceil(E K (tau + 2 g gamma/(b_ext F))): single worker at external
+        rate — the slowest-possible completion, used in L (Eq. 14)."""
+        return math.ceil(self.total_workload() * self.time_per_sample(internal=False))
+
+    def demand(self, n_workers: float, n_ps: float) -> Dict[Resource, float]:
+        out: Dict[Resource, float] = {}
+        for r, a in self.worker_demand.items():
+            out[r] = out.get(r, 0.0) + a * n_workers
+        for r, b in self.ps_demand.items():
+            out[r] = out.get(r, 0.0) + b * n_ps
+        return out
+
+
+@dataclass
+class Allocation:
+    """One job's placement in one time-slot: machine -> (workers, ps)."""
+
+    workers: Dict[int, int] = field(default_factory=dict)  # h -> w_ih[t]
+    ps: Dict[int, int] = field(default_factory=dict)       # h -> s_ih[t]
+
+    def total_workers(self) -> int:
+        return sum(self.workers.values())
+
+    def total_ps(self) -> int:
+        return sum(self.ps.values())
+
+    def is_internal(self) -> bool:
+        """Fact 1: internal rate iff |P| = |W| = 1 and P == W."""
+        wm = [h for h, w in self.workers.items() if w > 0]
+        pm = [h for h, s in self.ps.items() if s > 0]
+        return len(wm) == 1 and len(pm) == 1 and wm[0] == pm[0]
+
+    def empty(self) -> bool:
+        return self.total_workers() == 0 and self.total_ps() == 0
+
+    def samples_trained(self, job: JobSpec) -> float:
+        """Eq. (1) summed over machines, with Fact 1 locality resolution."""
+        w = self.total_workers()
+        if w == 0:
+            return 0.0
+        return w * job.throughput_per_worker(internal=self.is_internal())

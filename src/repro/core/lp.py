@@ -1,0 +1,160 @@
+"""Dense two-phase simplex LP solver.
+
+The container has no scipy; the paper's Algorithm 4 needs the LP relaxation
+of the mixed cover/packing program (23). The LPs are small (~2H variables,
+~RH + 3 rows), so a dense tableau simplex with Bland's anti-cycling rule is
+exact and fast.
+
+Solves:  min c^T x
+         s.t. A_ub x <= b_ub
+              A_eq x == b_eq
+              x >= 0
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class LPResult:
+    status: str           # "optimal" | "infeasible" | "unbounded"
+    x: Optional[np.ndarray]
+    objective: float
+
+
+def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
+    T[row] /= T[row, col]
+    for i in range(T.shape[0]):
+        if i != row and abs(T[i, col]) > 1e-12:
+            T[i] -= T[i, col] * T[row]
+    basis[row] = col
+
+
+def _simplex_core(T: np.ndarray, basis: np.ndarray, n_total: int,
+                  max_iter: int = 20000) -> str:
+    """Minimize the objective encoded in the last row of tableau T.
+
+    Last row = reduced costs (objective row, negated-cost convention:
+    row holds c_bar; optimal when all c_bar >= -eps). Last column = RHS.
+    """
+    m = T.shape[0] - 1
+    for _ in range(max_iter):
+        cbar = T[-1, :n_total]
+        # Bland's rule: smallest index with negative reduced cost
+        col = -1
+        for j in range(n_total):
+            if cbar[j] < -1e-9:
+                col = j
+                break
+        if col < 0:
+            return "optimal"
+        # ratio test (Bland: smallest basis index tie-break)
+        best_ratio, row = np.inf, -1
+        for i in range(m):
+            a = T[i, col]
+            if a > 1e-10:
+                ratio = T[i, -1] / a
+                if ratio < best_ratio - 1e-12 or (
+                    abs(ratio - best_ratio) <= 1e-12
+                    and (row < 0 or basis[i] < basis[row])
+                ):
+                    best_ratio, row = ratio, i
+        if row < 0:
+            return "unbounded"
+        _pivot(T, basis, row, col)
+    return "maxiter"
+
+
+def linprog(
+    c: np.ndarray,
+    A_ub: Optional[np.ndarray] = None,
+    b_ub: Optional[np.ndarray] = None,
+    A_eq: Optional[np.ndarray] = None,
+    b_eq: Optional[np.ndarray] = None,
+) -> LPResult:
+    c = np.asarray(c, dtype=np.float64)
+    n = c.size
+    A_ub = np.zeros((0, n)) if A_ub is None else np.asarray(A_ub, dtype=np.float64)
+    b_ub = np.zeros((0,)) if b_ub is None else np.asarray(b_ub, dtype=np.float64)
+    A_eq = np.zeros((0, n)) if A_eq is None else np.asarray(A_eq, dtype=np.float64)
+    b_eq = np.zeros((0,)) if b_eq is None else np.asarray(b_eq, dtype=np.float64)
+
+    m_ub, m_eq = A_ub.shape[0], A_eq.shape[0]
+    m = m_ub + m_eq
+
+    # rows: [A_ub | I_slack | RHS], [A_eq | 0 | RHS]; flip rows w/ negative RHS
+    A = np.zeros((m, n + m_ub))
+    b = np.zeros(m)
+    A[:m_ub, :n] = A_ub
+    A[:m_ub, n : n + m_ub] = np.eye(m_ub)
+    b[:m_ub] = b_ub
+    A[m_ub:, :n] = A_eq
+    b[m_ub:] = b_eq
+    neg = b < 0
+    A[neg] *= -1.0
+    b[neg] *= -1.0
+
+    n_sx = n + m_ub  # structural + slack count
+
+    # ---- Phase 1: add artificials where needed ----
+    # a slack can serve as initial basis for a <= row only if it wasn't
+    # flipped (coef +1) — flipped rows and eq rows get artificials.
+    need_art = []
+    basis = -np.ones(m, dtype=int)
+    for i in range(m):
+        if i < m_ub and not neg[i]:
+            basis[i] = n + i  # its own slack
+        else:
+            need_art.append(i)
+    n_art = len(need_art)
+    n_total = n_sx + n_art
+    T = np.zeros((m + 1, n_total + 1))
+    T[:m, :n_sx] = A
+    T[:m, -1] = b
+    for k, i in enumerate(need_art):
+        T[i, n_sx + k] = 1.0
+        basis[i] = n_sx + k
+
+    if n_art:
+        # phase-1 objective: sum of artificials
+        T[-1, n_sx:n_total] = 1.0
+        for k, i in enumerate(need_art):
+            T[-1] -= T[i]  # price out artificial basics
+        status = _simplex_core(T, basis, n_total)
+        if status != "optimal" or T[-1, -1] < -1e-7:
+            return LPResult("infeasible", None, np.inf)
+        if T[-1, -1] < -1e-7 or -T[-1, -1] > 1e-7:
+            return LPResult("infeasible", None, np.inf)
+        # drive artificials out of the basis if possible
+        for i in range(m):
+            if basis[i] >= n_sx:
+                for j in range(n_sx):
+                    if abs(T[i, j]) > 1e-9:
+                        _pivot(T, basis, i, j)
+                        break
+        # drop artificial columns
+        T = np.hstack([T[:, :n_sx], T[:, -1:]])
+        n_total = n_sx
+
+    # ---- Phase 2 ----
+    T[-1, :] = 0.0
+    T[-1, :n] = c
+    for i in range(m):
+        j = basis[i]
+        if j < n_total and abs(T[-1, j]) > 1e-12:
+            T[-1] -= T[-1, j] * T[i]
+    status = _simplex_core(T, basis, n_total)
+    if status == "unbounded":
+        return LPResult("unbounded", None, -np.inf)
+    if status != "optimal":
+        return LPResult("infeasible", None, np.inf)
+
+    x = np.zeros(n_total)
+    for i in range(m):
+        if basis[i] < n_total:
+            x[basis[i]] = T[i, -1]
+    xs = x[:n]
+    return LPResult("optimal", xs, float(c @ xs))

@@ -1,0 +1,101 @@
+"""Algorithm 1: Primal-Dual Online Resource Scheduling (PD-ORS).
+
+Upon each job arrival: find pi_i^* (Algorithm 2); admit iff payoff
+lambda_i > 0; commit the allocation to the cluster ledger, which updates
+rho_h^r[t] and therefore the prices p_h^r[t] = Q_h^r(rho_h^r[t]).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .cluster import Cluster
+from .job import JobSpec
+from .pricing import PriceParams, PriceTable, estimate_price_params
+from .schedule import Schedule, find_best_schedule
+from .subproblem import SubproblemConfig
+
+
+@dataclass
+class AdmissionRecord:
+    job: JobSpec
+    admitted: bool
+    schedule: Optional[Schedule]
+    utility: float
+
+
+@dataclass
+class PDORSResult:
+    records: List[AdmissionRecord]
+
+    @property
+    def total_utility(self) -> float:
+        return sum(r.utility for r in self.records)
+
+    @property
+    def admitted(self) -> List[AdmissionRecord]:
+        return [r for r in self.records if r.admitted]
+
+    def training_times(self, horizon: int) -> List[float]:
+        """Per-job actual training time; unfinished/rejected count as T
+        (paper Fig. 9 convention)."""
+        out = []
+        for r in self.records:
+            if r.admitted and r.schedule is not None:
+                out.append(float(r.schedule.completion - r.job.arrival))
+            else:
+                out.append(float(horizon))
+        return out
+
+
+class PDORS:
+    """Online scheduler object; feed jobs in arrival order via offer()."""
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        price_params: PriceParams,
+        cfg: Optional[SubproblemConfig] = None,
+        quanta: int = 32,
+        seed: int = 0,
+    ):
+        self.cluster = cluster
+        self.prices = PriceTable(price_params, cluster)
+        self.cfg = cfg or SubproblemConfig()
+        self.quanta = quanta
+        self.rng = np.random.default_rng(seed)
+        self.records: List[AdmissionRecord] = []
+
+    def offer(self, job: JobSpec) -> AdmissionRecord:
+        sched = find_best_schedule(
+            job, self.cluster, self.prices, self.cluster.horizon,
+            cfg=self.cfg, quanta=self.quanta, rng=self.rng,
+        )
+        if sched is not None and sched.payoff > 0:
+            # Step 3: admit; commit rho updates (prices react via Q_h^r)
+            for t, alloc in sched.slots.items():
+                self.cluster.commit(t, job, alloc)
+            rec = AdmissionRecord(job, True, sched, job.utility(sched.completion - job.arrival))
+        else:
+            rec = AdmissionRecord(job, False, None, 0.0)
+        self.records.append(rec)
+        return rec
+
+    def run(self, jobs: List[JobSpec]) -> PDORSResult:
+        for job in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
+            self.offer(job)
+        return PDORSResult(records=self.records)
+
+
+def run_pdors(
+    jobs: List[JobSpec],
+    cluster: Cluster,
+    cfg: Optional[SubproblemConfig] = None,
+    quanta: int = 32,
+    seed: int = 0,
+    price_params: Optional[PriceParams] = None,
+) -> PDORSResult:
+    params = price_params or estimate_price_params(jobs, cluster, cluster.horizon)
+    return PDORS(cluster, params, cfg=cfg, quanta=quanta, seed=seed).run(jobs)

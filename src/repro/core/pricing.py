@@ -1,0 +1,137 @@
+"""Exponential price function Q_h^r and its constants (paper Eqs. 12-14).
+
+Q_h^r(rho) = L * (U^r / L) ** (rho / C_h^r)
+
+U^r (Eq. 13): max over jobs of (best-case utility) / (alpha^r + beta^r) —
+  the highest unit-resource utility any job could extract from type-r.
+L (Eq. 14): min over jobs of (1/(2 mu)) u_i(T - a_i) /
+  (worst-case total resource-slots) — the lowest unit-time unit-resource
+  utility; resource-type independent by design (see paper's discussion).
+mu: scaling factor satisfying
+  1/mu <= ceil(EK (tau + 2 g gamma/(b_ext F))) * sum_r(alpha+beta)
+          / (T * sum_h sum_r C_h^r)   for all i.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterable, List
+
+from .cluster import Cluster
+from .job import JobSpec, Resource
+
+
+@dataclass
+class PriceParams:
+    U: Dict[Resource, float]   # U^r
+    L: float
+    mu: float
+
+    def price(self, rho: float, cap: float, r: Resource) -> float:
+        """Q_h^r(rho) — Eq. (12). A zero-capacity resource is priced at its
+        ceiling U^r (the 'exhausted' price); the capacity rows in the LP /
+        feasibility checks are what actually forbid placement there."""
+        u = max(self.U.get(r, self.L), self.L * (1.0 + 1e-9))
+        if cap <= 0:
+            return u
+        frac = min(max(rho / cap, 0.0), 1.0)
+        return self.L * (u / self.L) ** frac
+
+
+def estimate_price_params(
+    jobs: Iterable[JobSpec], cluster: Cluster, horizon: int
+) -> PriceParams:
+    """Compute U^r, L, mu from a (historical or actual) job population.
+
+    The paper notes U^r and L "can usually be estimated empirically based on
+    historical data"; in the simulator we pass either the true job set (for
+    reproducing the paper's plots) or a calibration sample.
+    """
+    jobs = list(jobs)
+    if not jobs:
+        raise ValueError("need at least one job to calibrate prices")
+
+    resources = cluster.resources
+
+    # ---- mu: the largest value satisfying the paper's bound for all i ----
+    total_cap = cluster.total_capacity()
+    inv_mu = min(
+        j.max_resource_slots()
+        * sum(j.worker_demand.get(r, 0.0) + j.ps_demand.get(r, 0.0) for r in resources)
+        / (horizon * total_cap)
+        for j in jobs
+    )
+    inv_mu = max(inv_mu, 1e-12)
+    mu = 1.0 / inv_mu
+
+    # ---- U^r (Eq. 13) ----
+    U: Dict[Resource, float] = {}
+    for r in resources:
+        best = 0.0
+        for j in jobs:
+            denom = j.worker_demand.get(r, 0.0) + j.ps_demand.get(r, 0.0)
+            if denom <= 0:
+                continue
+            best_latency = max(j.min_completion_slots(), 1)
+            best = max(best, j.utility(best_latency) / denom)
+        U[r] = best if best > 0 else 1.0
+
+    # ---- L (Eq. 14) ----
+    L = float("inf")
+    for j in jobs:
+        worst_u = j.utility(horizon - j.arrival)
+        denom = j.max_resource_slots() * sum(
+            j.worker_demand.get(r, 0.0) + j.ps_demand.get(r, 0.0) for r in resources
+        )
+        if denom <= 0:
+            continue
+        L = min(L, (1.0 / (2.0 * mu)) * worst_u / denom)
+    if not math.isfinite(L) or L <= 0:
+        # degenerate utilities (e.g. all-zero at horizon): fall back to a
+        # tiny positive floor so Q stays well-defined.
+        L = 1e-9
+    # keep U^r >= L so that U/L >= 1
+    for r in resources:
+        U[r] = max(U[r], L * math.e)
+    return PriceParams(U=U, L=L, mu=mu)
+
+
+class PriceTable:
+    """p_h^r[t] = Q_h^r(rho_h^r[t]) maintained over the cluster ledger."""
+
+    def __init__(self, params: PriceParams, cluster: Cluster):
+        self.params = params
+        self.cluster = cluster
+
+    def price(self, t: int, h: int, r: Resource) -> float:
+        return self.params.price(
+            self.cluster.used(t, h, r), self.cluster.capacity(h, r), r
+        )
+
+    def worker_price(self, t: int, h: int, job: JobSpec) -> float:
+        """p_h^w[t] = sum_r p_h^r[t] alpha_i^r (paper, below Eq. 26)."""
+        return sum(
+            self.price(t, h, r) * a for r, a in job.worker_demand.items() if a
+        )
+
+    def ps_price(self, t: int, h: int, job: JobSpec) -> float:
+        """p_h^s[t] = sum_r p_h^r[t] beta_i^r."""
+        return sum(self.price(t, h, r) * b for r, b in job.ps_demand.items() if b)
+
+    def colocated_price(self, t: int, h: int, job: JobSpec) -> float:
+        """sum_r p_h^r (alpha^r gamma + beta^r): cost of gamma workers + 1 PS
+        on machine h (Algorithm 4, internal case sort key)."""
+        out = 0.0
+        for r in self.cluster.resources:
+            p = self.price(t, h, r)
+            out += p * (
+                job.worker_demand.get(r, 0.0) * job.gamma + job.ps_demand.get(r, 0.0)
+            )
+        return out
+
+    def competitive_ratio_bound(self) -> float:
+        """max_r(1, ln U^r/L) — the epsilon of Theorems 5-6."""
+        return max(
+            1.0,
+            max(math.log(u / self.params.L) for u in self.params.U.values()),
+        )

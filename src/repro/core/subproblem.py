@@ -1,0 +1,383 @@
+"""Algorithm 4: solve theta(t, v) — the per-slot min-cost allocation
+(Problem (19)) for training v samples of job i in slot t.
+
+Two locality cases, per Fact 1:
+  * internal — all workers + all PSs co-located on ONE machine; workload
+    constraint uses b^(i).  Closed form + sort by co-located price.
+  * external — workers/PSs spread; workload uses b^(e).  LP relaxation of
+    the mixed cover/packing program (23) + randomized rounding (27)-(28).
+
+Returns the cheaper feasible of the two (Algorithm 4, final step).
+
+Implementation notes (beyond the paper, exactness preserved):
+  * prices are frozen while one job is being scheduled (Algorithm 1 only
+    reprices after admission), so per-(job, t) price vectors are computed
+    once into a ``PriceSnapshot`` and reused across all workload levels v
+    that Algorithm 3's DP probes;
+  * the external LP is solved over a cost-pruned machine subset — the
+    cheapest machines whose combined capacity covers 2x the worker (resp.
+    PS) requirement; machines more expensive than that can never enter an
+    optimal basis of this min-cost covering LP in practice.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cluster import Cluster
+from .job import Allocation, JobSpec
+from .lp import linprog
+from .pricing import PriceTable
+from .rounding import (
+    g_delta_cover,
+    g_delta_packing,
+    round_until_feasible,
+)
+
+
+@dataclass
+class ThetaResult:
+    cost: float
+    alloc: Allocation
+    mode: str                      # "internal" | "external" | "idle"
+    lp_cost: float = 0.0           # fractional optimum (approx-ratio metric)
+    rounding_attempts: int = 0
+
+
+@dataclass
+class SubproblemConfig:
+    delta: float = 0.5             # probabilistic knob of Lemmas 1-2
+    g_delta: Optional[float] = None  # override; None => derive via favor
+    favor: str = "packing"         # "packing" (Thm 3) | "cover" (Thm 4)
+    rounding_rounds: int = 50      # S in Algorithm 4
+    cover_slack: float = 0.0
+    seed: int = 0
+    prune_margin: float = 2.0      # capacity head-room factor for pruning
+    max_lp_machines: int = 48
+
+
+class PriceSnapshot:
+    """Vectorized prices + free capacities for one (job, slot)."""
+
+    def __init__(self, job: JobSpec, cluster: Cluster, prices: PriceTable, t: int):
+        H = cluster.num_machines
+        self.t = t
+        self.H = H
+        self.resources = cluster.resources
+        self.free: Dict[str, np.ndarray] = {}
+        price: Dict[str, np.ndarray] = {}
+        for r in self.resources:
+            fr = np.empty(H)
+            pr = np.empty(H)
+            for h in range(H):
+                fr[h] = cluster.free(t, h, r)
+                pr[h] = prices.price(t, h, r)
+            self.free[r] = fr
+            price[r] = pr
+        self.wprice = np.zeros(H)
+        self.sprice = np.zeros(H)
+        self.coloc = np.zeros(H)
+        for r in self.resources:
+            a = job.worker_demand.get(r, 0.0)
+            b = job.ps_demand.get(r, 0.0)
+            if a:
+                self.wprice += price[r] * a
+            if b:
+                self.sprice += price[r] * b
+            self.coloc += price[r] * (a * job.gamma + b)
+        # max workers (alone) / PSs (alone) each machine could host
+        self.max_w = np.full(H, np.inf)
+        self.max_s = np.full(H, np.inf)
+        for r in self.resources:
+            a = job.worker_demand.get(r, 0.0)
+            b = job.ps_demand.get(r, 0.0)
+            if a > 0:
+                self.max_w = np.minimum(self.max_w, self.free[r] / a)
+            if b > 0:
+                self.max_s = np.minimum(self.max_s, self.free[r] / b)
+        self.max_w = np.floor(np.maximum(self.max_w, 0.0))
+        self.max_s = np.floor(np.maximum(self.max_s, 0.0))
+        self.job = job
+
+
+def _alloc_cost(snap: PriceSnapshot, alloc: Allocation) -> float:
+    c = 0.0
+    for h, w in alloc.workers.items():
+        if w:
+            c += snap.wprice[h] * w
+    for h, s in alloc.ps.items():
+        if s:
+            c += snap.sprice[h] * s
+    return c
+
+
+# ----------------------------------------------------------------------
+def solve_theta_internal(
+    job: JobSpec, snap: PriceSnapshot, v: float
+) -> Optional[ThetaResult]:
+    """Algorithm 4 steps 2-7 (internal case)."""
+    tps = job.time_per_sample(internal=True)
+    w_need = max(1, int(math.ceil(v * tps)))
+    if w_need > job.batch_size:  # constraint (4)
+        return None
+    s_need = max(1, int(math.ceil(w_need / job.gamma)))
+
+    # vectorized feasibility: machine must host w_need workers AND s_need PSs
+    ok = np.ones(snap.H, dtype=bool)
+    for r in snap.resources:
+        a = job.worker_demand.get(r, 0.0)
+        b = job.ps_demand.get(r, 0.0)
+        if a or b:
+            ok &= snap.free[r] >= a * w_need + b * s_need - 1e-9
+    if not ok.any():
+        return None
+    idx = np.where(ok)[0]
+    h = int(idx[np.argmin(snap.coloc[idx])])
+    alloc = Allocation(workers={h: w_need}, ps={h: s_need})
+    return ThetaResult(cost=_alloc_cost(snap, alloc), alloc=alloc, mode="internal")
+
+
+# ----------------------------------------------------------------------
+def _prune_machines(snap: PriceSnapshot, need_w: float, need_s: float,
+                    cfg: SubproblemConfig) -> np.ndarray:
+    """Cheapest machines covering prune_margin x the requirement."""
+    sel = set()
+    for price, cap, need in (
+        (snap.wprice, snap.max_w, need_w),
+        (snap.sprice, snap.max_s, need_s),
+    ):
+        order = np.argsort(price, kind="stable")
+        acc = 0.0
+        for h in order:
+            if cap[h] <= 0:
+                continue
+            sel.add(int(h))
+            acc += cap[h]
+            if acc >= cfg.prune_margin * need or len(sel) >= cfg.max_lp_machines:
+                break
+    return np.array(sorted(sel), dtype=int)
+
+
+def solve_theta_external(
+    job: JobSpec,
+    snap: PriceSnapshot,
+    v: float,
+    cfg: SubproblemConfig,
+    rng: np.random.Generator,
+) -> Optional[ThetaResult]:
+    """Algorithm 4 steps 8-11 (external case): LP relax + randomized round.
+
+    Variables x = [w_0..w_{M-1}, s_0..s_{M-1}] over the pruned machine set.
+    """
+    tps = job.time_per_sample(internal=False)
+    W1 = v * tps  # cover requirement on sum of workers (Eq. 26 RHS)
+    if W1 > job.batch_size + 1e-9:  # (25) vs (26) conflict: infeasible v
+        return None
+    S1 = W1 / job.gamma
+    machines = _prune_machines(snap, W1, S1, cfg)
+    M = len(machines)
+    if M == 0 or snap.max_w[machines].sum() < W1 - 1e-9:
+        return None
+    n = 2 * M
+
+    c = np.concatenate([snap.wprice[machines], snap.sprice[machines]])
+
+    rows_ub: List[np.ndarray] = []
+    rhs_ub: List[float] = []
+    # capacity packing rows (24)
+    for k, h in enumerate(machines):
+        for r in snap.resources:
+            a = job.worker_demand.get(r, 0.0)
+            b = job.ps_demand.get(r, 0.0)
+            if a == 0.0 and b == 0.0:
+                continue
+            row = np.zeros(n)
+            row[k] = a
+            row[M + k] = b
+            rows_ub.append(row)
+            rhs_ub.append(float(snap.free[r][h]))
+    # worker cap (25)
+    row = np.zeros(n)
+    row[:M] = 1.0
+    rows_ub.append(row)
+    rhs_ub.append(float(job.batch_size))
+    # workload cover (26): -sum w <= -W1
+    row = np.zeros(n)
+    row[:M] = -1.0
+    rows_ub.append(row)
+    rhs_ub.append(-W1)
+    # worker:PS ratio (Eq. 2, covering form): sum w - gamma sum s <= 0
+    row = np.zeros(n)
+    row[:M] = 1.0
+    row[M:] = -job.gamma
+    rows_ub.append(row)
+    rhs_ub.append(0.0)
+
+    res = linprog(c, A_ub=np.vstack(rows_ub), b_ub=np.array(rhs_ub))
+    if res.status != "optimal" or res.x is None:
+        return None
+    x_frac = res.x
+
+    # ---- G_delta (Theorems 3-4) ----
+    if cfg.g_delta is not None:
+        gd = cfg.g_delta
+    elif cfg.favor == "cover":
+        gd = g_delta_cover(cfg.delta, max(W1, 1.0))
+    else:
+        # W2 = min over packing rows of rhs/coef (Theorem 3)
+        w2 = float(job.batch_size)
+        for r in snap.resources:
+            for d in (job.worker_demand.get(r, 0.0), job.ps_demand.get(r, 0.0)):
+                if d > 0:
+                    fr = snap.free[r][machines]
+                    pos = fr[fr > 0]
+                    if pos.size:
+                        w2 = min(w2, float(pos.min()) / d)
+        gd = g_delta_packing(cfg.delta, max(w2, 1e-6), num_packing_rows=len(rhs_ub) - 1)
+
+    # feasibility-check matrices for the rounding loop
+    A_cov = np.zeros((1, n))
+    A_cov[0, :M] = 1.0
+    a_cov = np.array([W1])
+    B_pack = np.vstack(rows_ub[:-2])  # capacity rows + worker cap
+    b_pack = np.array(rhs_ub[:-2])
+
+    rr = round_until_feasible(
+        x_frac, A_cov, a_cov, B_pack, b_pack, gd, rng,
+        max_rounds=cfg.rounding_rounds, cover_slack=cfg.cover_slack,
+    )
+    w_sub = rr.x[:M].astype(np.int64)
+    s_sub = rr.x[M:].astype(np.int64)
+
+    w = np.zeros(snap.H, dtype=np.int64)
+    s = np.zeros(snap.H, dtype=np.int64)
+    w[machines] = w_sub
+    s[machines] = s_sub
+
+    if not rr.feasible:
+        w, s = _repair(job, snap, w, s, W1)
+        if w is None:
+            return None
+
+    # ratio repair: ensure enough PSs for the rounded worker count
+    s = _ensure_ratio(job, snap, w, s)
+    if s is None:
+        return None
+    if int(w.sum()) == 0:
+        return None
+
+    alloc = Allocation(
+        workers={int(h): int(w[h]) for h in range(snap.H) if w[h] > 0},
+        ps={int(h): int(s[h]) for h in range(snap.H) if s[h] > 0},
+    )
+    return ThetaResult(
+        cost=_alloc_cost(snap, alloc),
+        alloc=alloc,
+        mode="external",
+        lp_cost=res.objective,
+        rounding_attempts=rr.attempts,
+    )
+
+
+def _fits_machine(job: JobSpec, snap: PriceSnapshot, h: int, w: int, s: int) -> bool:
+    for r in snap.resources:
+        need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
+        if need > snap.free[r][h] + 1e-9:
+            return False
+    return True
+
+
+def _repair(job, snap, w, s, W1):
+    """Clip per-machine packing violations, then greedily add workers on the
+    cheapest machines until the cover constraint holds."""
+    H = snap.H
+    for h in range(H):
+        while (w[h] > 0 or s[h] > 0) and not _fits_machine(job, snap, h, int(w[h]), int(s[h])):
+            if w[h] >= s[h] and w[h] > 0:
+                w[h] -= 1
+            elif s[h] > 0:
+                s[h] -= 1
+            else:
+                break
+    need = int(math.ceil(W1 - w.sum()))
+    if need > 0:
+        order = np.argsort(snap.wprice, kind="stable")
+        for h in order:
+            while need > 0 and w.sum() < job.batch_size and _fits_machine(
+                job, snap, int(h), int(w[h]) + 1, int(s[h])
+            ):
+                w[h] += 1
+                need -= 1
+            if need <= 0:
+                break
+        if need > 0:
+            return None, None
+    if w.sum() > job.batch_size:
+        order = np.argsort(-snap.wprice, kind="stable")
+        excess = int(w.sum() - job.batch_size)
+        for h in order:
+            take = min(excess, int(w[h]))
+            w[h] -= take
+            excess -= take
+            if excess <= 0:
+                break
+    return w, s
+
+
+def _ensure_ratio(job, snap, w, s):
+    """Ensure sum(s) >= ceil(sum(w)/gamma), adding PSs cheapest-first."""
+    need = max(1, int(math.ceil(w.sum() / job.gamma))) - int(s.sum())
+    if need <= 0:
+        return s
+    order = np.argsort(snap.sprice, kind="stable")
+    for h in order:
+        while need > 0 and _fits_machine(job, snap, int(h), int(w[h]), int(s[h]) + 1):
+            s[h] += 1
+            need -= 1
+        if need <= 0:
+            break
+    return s if need <= 0 else None
+
+
+# ----------------------------------------------------------------------
+def solve_theta_snapshot(
+    job: JobSpec,
+    snap: PriceSnapshot,
+    v: float,
+    cfg: Optional[SubproblemConfig] = None,
+    rng: Optional[np.random.Generator] = None,
+) -> Optional[ThetaResult]:
+    """Algorithm 4 (all steps): min over internal / external candidates."""
+    if v <= 0:
+        return ThetaResult(cost=0.0, alloc=Allocation(), mode="idle")
+    cfg = cfg or SubproblemConfig()
+    rng = rng if rng is not None else np.random.default_rng(cfg.seed)
+    cands: List[ThetaResult] = []
+    internal = solve_theta_internal(job, snap, v)
+    if internal is not None:
+        cands.append(internal)
+    external = solve_theta_external(job, snap, v, cfg, rng)
+    if external is not None:
+        cands.append(external)
+    if not cands:
+        return None
+    return min(cands, key=lambda r: r.cost)
+
+
+def solve_theta(
+    job: JobSpec,
+    cluster: Cluster,
+    prices: PriceTable,
+    t: int,
+    v: float,
+    cfg: Optional[SubproblemConfig] = None,
+    rng: Optional[np.random.Generator] = None,
+) -> Optional[ThetaResult]:
+    """Convenience wrapper building a fresh snapshot (tests, one-offs)."""
+    if v <= 0:
+        return ThetaResult(cost=0.0, alloc=Allocation(), mode="idle")
+    snap = PriceSnapshot(job, cluster, prices, t)
+    return solve_theta_snapshot(job, snap, v, cfg, rng)

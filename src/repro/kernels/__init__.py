@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the substrate's compute hot-spots.
+
+The paper (PD-ORS) is a control-plane scheduler with no kernel-level
+contribution; these kernels serve the model zoo's hot paths:
+    flash_attention — blockwise online-softmax attention (32k prefill)
+    rmsnorm         — fused normalization
+
+Each kernel ships with a pure-jnp oracle (ref.py) and a jit'd public
+wrapper (ops.py) that auto-selects interpret mode off-TPU.
+"""
+from . import ops, ref
+from .flash_attention import flash_attention as flash_attention_kernel
+from .rmsnorm import rmsnorm as rmsnorm_kernel
+
+__all__ = ["ops", "ref", "flash_attention_kernel", "rmsnorm_kernel"]

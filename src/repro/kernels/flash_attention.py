@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (forward).
+
+Blockwise online-softmax attention with explicit VMEM BlockSpecs:
+    grid = (batch*heads, n_q_blocks, n_k_blocks)
+TPU executes the grid sequentially in row-major order, so the running
+max / denominator / accumulator live in VMEM scratch across the k-block
+axis (the canonical TPU flash pattern: init at k==0, finalize at the last
+k block).  Block shapes default to (128, head_dim) — MXU-aligned.
+
+This kernel is the TPU hot-spot implementation for 32k prefill; the model
+code path uses the pure-jnp chunked reference (ref.py semantics) so the
+CPU dry-run lowers everywhere.  Validated in interpret mode against
+ref.reference_attention across shapes/dtypes (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int, window: int = 0):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * sm_scale
+
+    if causal or window:
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, dtype=bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window:
+            ok &= k_pos > q_pos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_sc[...]                                   # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_sc[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot(p, v)
+    m_sc[...] = m_new
+    l_sc[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _final():
+        o_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,              # (BH, S_q, D)
+    k: jnp.ndarray,              # (BH, S_k, D)
+    v: jnp.ndarray,              # (BH, S_k, D)
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    window: int = 0,             # >0: sliding window (long_500k carve-in)
+    interpret: bool = False,
+) -> jnp.ndarray:
+    BH, S_q, D = q.shape
+    S_k = k.shape[1]
+    assert S_q % block_q == 0 and S_k % block_k == 0, (
+        f"seq lens ({S_q},{S_k}) must divide blocks ({block_q},{block_k})")
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    n_q, n_k = S_q // block_q, S_k // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

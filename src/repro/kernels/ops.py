@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the real kernels run; anywhere else (this container's
+CPU) they execute in interpret mode — same kernel body, Python-evaluated —
+which is how the test suite validates them against the ref.py oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "window", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,              # (B, S_q, H, D) model-layout
+    k: jnp.ndarray,              # (B, S_k, H, D) (kv heads pre-broadcast)
+    v: jnp.ndarray,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    window: int = 0,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    B, S_q, H, D = q.shape
+    S_k = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S_q, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, S_k, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, S_k, D)
+    out = _fa.flash_attention(qt, kt, vt, causal=causal,
+                              block_q=min(block_q, S_q),
+                              block_k=min(block_k, S_k),
+                              window=window,
+                              interpret=interpret)
+    return out.reshape(B, H, S_q, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+            block_rows: int = 256,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    N = 1
+    for s in lead:
+        N *= s
+    x2 = x.reshape(N, d)
+    br = block_rows
+    while N % br != 0:
+        br //= 2
+    out = _rn.rmsnorm(x2, scale, eps=eps, block_rows=max(br, 1),
+                      interpret=interpret)
+    return out.reshape(*lead, d)

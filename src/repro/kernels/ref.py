@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(
+    q: jnp.ndarray,              # (BH, S_q, D)
+    k: jnp.ndarray,              # (BH, S_k, D)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    D = q.shape[-1]
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        S_q, S_k = q.shape[1], k.shape[1]
+        mask = jnp.arange(S_k)[None, :] <= jnp.arange(S_q)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+                      eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,7 @@
+"""Launchers: production meshes, the multi-pod dry-run, and train/serve
+drivers.  NOTE: importing ``repro.launch.dryrun`` sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 — never import it
+from test or benchmark processes that need the real device count."""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

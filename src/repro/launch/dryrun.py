@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) and both production meshes,
+``lower().compile()`` the appropriate step function against
+ShapeDtypeStruct inputs — no allocation — and record:
+    * memory_analysis()  (bytes per device: proves it fits)
+    * cost_analysis()    (FLOPs / bytes for the roofline)
+    * collective bytes parsed from the compiled HLO
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen3-32b --shape train_4k [--multi-pod] [--all] \
+        [--fsdp-over-pod] [--out results.json]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, SHAPES, get_config
+from ..configs.base import ArchConfig, InputShape
+from ..models import (
+    build_model,
+    decode_window,
+    input_specs,
+    serve_state_specs,
+)
+from ..optim import AdamWConfig
+from ..parallel import (
+    MeshRules,
+    batch_shardings,
+    param_shardings,
+    serve_state_shardings,
+)
+from ..roofline.analysis import collective_bytes_from_hlo, roofline_report
+from ..train import abstract_train_state, make_train_step
+from .mesh import make_production_mesh
+
+
+def _step_and_specs(cfg: ArchConfig, shape: InputShape, rules: MeshRules,
+                    opt_cfg: AdamWConfig):
+    """Build (fn, arg_specs, in_shardings, out_shardings) for the shape kind."""
+    model = build_model(cfg)
+    batch_specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(rules, batch_specs)
+
+    if shape.kind == "train":
+        state_specs = abstract_train_state(model, opt_cfg)
+        p_sh = param_shardings(rules, state_specs["params"])
+        opt_sh = {
+            "m": param_shardings(rules, state_specs["opt"]["m"]),
+            "v": param_shardings(rules, state_specs["opt"]["v"]),
+            "step": jax.tree.map(
+                lambda _: jax.sharding.NamedSharding(
+                    rules.mesh, jax.sharding.PartitionSpec()),
+                state_specs["opt"]["step"]),
+        }
+        st_sh = {"params": p_sh, "opt": opt_sh}
+        fn = make_train_step(model, opt_cfg)
+        return (fn, (state_specs, batch_specs), (st_sh, b_sh),
+                (st_sh, None))
+
+    if shape.kind == "prefill":
+        p_abs = model.init_abstract()
+        p_sh = param_shardings(rules, p_abs)
+        cache_len = shape.seq_len
+
+        def prefill_fn(params, batch):
+            logits, state = model.prefill(params, batch, cache_len)
+            return logits, state
+
+        out_state = jax.eval_shape(prefill_fn, p_abs, batch_specs)[1]
+        st_sh = serve_state_shardings(rules, out_state)
+        return (prefill_fn, (p_abs, batch_specs), (p_sh, b_sh),
+                (None, st_sh))
+
+    # decode
+    p_abs = model.init_abstract()
+    p_sh = param_shardings(rules, p_abs, serve=True)
+    state_specs = serve_state_specs(cfg, shape)
+    st_sh = serve_state_shardings(rules, state_specs)
+    win = decode_window(cfg, shape)
+
+    def decode_fn(params, tokens, state):
+        return model.decode(params, tokens, state, window_override=win)
+
+    return (decode_fn, (p_abs, batch_specs["tokens"], state_specs),
+            (p_sh, b_sh["tokens"], st_sh), (None, st_sh))
+
+
+def _compile_metrics(cfg: ArchConfig, shape: InputShape, mesh, rules,
+                     opt_cfg) -> Dict:
+    fn, arg_specs, in_sh, out_sh = _step_and_specs(cfg, shape, rules, opt_cfg)
+    from ..parallel.context import activation_sharding
+
+    act_axes = rules.batch_axes if shape.kind != "decode" else ()
+    with mesh, activation_sharding(mesh, act_axes):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*arg_specs)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": collective_bytes_from_hlo(compiled.as_text()),
+        "compiled": compiled,
+    }
+
+
+def _extrapolate(cfg: ArchConfig, m1: Dict, m2: Dict) -> Dict:
+    """XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count, so scanned layer stacks are under-counted.  Probe-compile the
+    same step at L=1 and L=2: body = m2 - m1, base = m1 - body,
+    total(L) = base + L*body (per metric, incl. each collective kind)."""
+    L = cfg.num_layers
+    out = {}
+    for key in ("flops", "hlo_bytes"):
+        body = max(m2[key] - m1[key], 0.0)
+        base = max(m1[key] - body, 0.0)
+        out[key] = base + L * body
+    coll = {}
+    keys = set(m1["collective_bytes"]) | set(m2["collective_bytes"])
+    for k in keys:
+        a = m1["collective_bytes"].get(k, 0.0)
+        b = m2["collective_bytes"].get(k, 0.0)
+        body = max(b - a, 0.0)
+        base = max(a - body, 0.0)
+        coll[k] = base + L * body
+    out["collective_bytes"] = coll
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               fsdp_over_pod: bool = False,
+               extrapolate: bool = True,
+               verbose: bool = True,
+               reduced: bool = False,
+               mesh_override=None,
+               shape_override: Optional[InputShape] = None,
+               cfg_override: Optional[ArchConfig] = None,
+               tp_over_pod: bool = False,
+               pure_fsdp: bool = False,
+               act_constraint: bool = True) -> Dict:
+    cfg = cfg_override or get_config(arch, reduced=reduced)
+    shape = shape_override or SHAPES[shape_name]
+    mesh = (mesh_override if mesh_override is not None
+            else make_production_mesh(multi_pod=multi_pod))
+    rules = MeshRules(mesh, fsdp_over_pod=fsdp_over_pod,
+                      tp_over_pod=tp_over_pod, pure_fsdp=pure_fsdp)
+    opt_cfg = AdamWConfig()
+
+    t0 = time.time()
+    fn, arg_specs, in_sh, out_sh = _step_and_specs(cfg, shape, rules, opt_cfg)
+    from ..parallel.context import activation_sharding
+
+    # decode steps skip the residual-stream constraint: pinning a 1-token
+    # activation just forces per-layer reshards (§Perf)
+    act_axes = (rules.batch_axes
+                if (shape.kind != "decode" and act_constraint) else ())
+    with mesh, activation_sharding(mesh, act_axes):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    n_dev = mesh.devices.size
+
+    extr = None
+    if extrapolate:
+        enc = cfg.encoder_layers
+        probe1 = dataclasses.replace(cfg, num_layers=1, unroll_layers=True,
+                                     encoder_layers=1 if enc else 0)
+        probe2 = dataclasses.replace(cfg, num_layers=2, unroll_layers=True,
+                                     encoder_layers=2 if enc else 0)
+        m1 = _compile_metrics(probe1, shape, mesh, rules, opt_cfg)
+        m2 = _compile_metrics(probe2, shape, mesh, rules, opt_cfg)
+        extr = _extrapolate(cfg, m1, m2)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "fsdp_over_pod": fsdp_over_pod,
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_raw": float(cost.get("flops", 0.0)),
+        "hlo_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes_raw": coll,
+        "flops": (extr or {}).get("flops", float(cost.get("flops", 0.0))),
+        "hlo_bytes": (extr or {}).get(
+            "hlo_bytes", float(cost.get("bytes accessed", 0.0))),
+        "collective_bytes": (extr or {}).get("collective_bytes", coll),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={result['mesh']} "
+              f"compile={t_compile:.1f}s flops={result['flops']:.3e} "
+              f"bytes={result['hlo_bytes']:.3e} "
+              f"coll={sum(coll.values()):.3e}")
+        print(f"  memory: {result['memory']}")
+        print(f"  roofline: {roofline_report(cfg, shape, result)}")
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(dryrun_one(
+                        arch, shape, multi_pod=mp,
+                        fsdp_over_pod=args.fsdp_over_pod))
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, repr(e)))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    print(f"\n[dryrun] {len(results)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+Two modes:
+  * ``--local``   — run real steps on the host devices (reduced config),
+                    the CPU/CI path: mesh over available devices.
+  * default       — production lowering: build the 16×16 (or 2×16×16)
+                    mesh with forced host devices, compile the train step
+                    with the full config, and report the roofline terms
+                    (the "deploy would look like this" path on a machine
+                    without TPUs).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --local \
+        --steps 50
+"""
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.local:
+        from ..configs import get_config
+        from ..configs.base import InputShape
+        from ..optim import AdamWConfig
+        from ..train import Trainer, TrainerConfig
+
+        cfg = get_config(args.arch, reduced=True)
+        shape = InputShape("local", 128, 8, "train")
+        tr = Trainer(cfg, shape, TrainerConfig(
+            steps=args.steps, log_every=max(args.steps // 10, 1),
+            checkpoint_dir=args.ckpt_dir,
+            opt=AdamWConfig(lr=args.lr, weight_decay=0.01)))
+        hist = tr.run()
+        for h in hist:
+            print(f"step {h['step']:5d}  loss {h['loss']:.4f}")
+        return 0
+
+    # production lowering path — must set device count before jax init,
+    # so re-exec through the dryrun module entry point
+    from . import dryrun  # noqa: F401  (sets XLA_FLAGS at import)
+
+    r = dryrun.dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod)
+    print("lowered + compiled OK; deploy this artifact on the real mesh.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

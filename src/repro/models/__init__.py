@@ -1,0 +1,15 @@
+"""JAX model zoo: decoder LMs (dense/GQA/MLA), MoE, Mamba-2 SSD, Hymba
+hybrid, enc-dec, and VLM/audio backbones with stub frontends."""
+from .api import (
+    Model,
+    build_model,
+    concrete_batch,
+    decode_window,
+    input_specs,
+    serve_state_specs,
+)
+
+__all__ = [
+    "Model", "build_model", "concrete_batch", "decode_window",
+    "input_specs", "serve_state_specs",
+]

@@ -1,0 +1,186 @@
+"""Unified model facade + input specs for every (arch x input-shape) pair.
+
+``Model`` wraps the decoder-only LM and the enc-dec seamless backbone
+behind one interface:
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.train_loss(params, batch)
+    logits, state = model.prefill(params, batch)        # state: serve state
+    logits, state = model.decode(params, tokens, state)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for the
+batch of a given input shape (train/prefill), and
+``serve_state_specs(cfg, shape)`` the decode-time cache — both are what
+the multi-pod dry-run lowers against (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, InputShape, SHAPES
+from . import encdec, lm
+from .layers import PyTree
+
+
+def _decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Effective window override for decode shapes.
+
+    long_500k: full-attention archs use the sliding-window carve-in;
+    windowed/hybrid archs cap *all* layers (incl. hybrid global layers) at
+    the long-context window (DESIGN.md §4).  Other shapes: no override.
+    """
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return None
+
+
+def _cache_len(cfg: ArchConfig, shape: InputShape) -> int:
+    if cfg.ssm is not None and cfg.attention == "none":
+        return 1  # attention-free: no KV cache
+    w = _decode_window(cfg, shape)
+    if w is not None:
+        return min(shape.seq_len, w)
+    return shape.seq_len
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.encoder_layers > 0
+
+    # ---------------- params ----------------
+    def init(self, key) -> PyTree:
+        return (encdec.init if self.is_encdec else lm.init)(self.cfg, key)
+
+    def init_abstract(self) -> PyTree:
+        """Param ShapeDtypeStructs without allocating (dry-run)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ---------------- train ----------------
+    def train_loss(self, params: PyTree, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        fwd = encdec.forward if self.is_encdec else lm.forward
+        return fwd(self.cfg, params, batch)
+
+    # ---------------- serve ----------------
+    def init_serve_state(self, batch_size: int, cache_len: int,
+                         src_len: int = 0) -> PyTree:
+        cfg = self.cfg
+        if self.is_encdec:
+            return {
+                "cache": encdec.init_cache(cfg, batch_size, cache_len),
+                "enc": jnp.zeros((batch_size, src_len, cfg.d_model),
+                                 cfg.dtype("compute")),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        return {
+            "cache": lm.init_cache(cfg, batch_size, cache_len),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def prefill(self, params: PyTree, batch: Dict, cache_len: int,
+                window_override: Optional[int] = None) -> Tuple[jnp.ndarray, PyTree]:
+        cfg = self.cfg
+        B = batch["tokens"].shape[0]
+        S = batch["tokens"].shape[1]
+        if self.is_encdec:
+            state = self.init_serve_state(B, cache_len, batch["frames"].shape[1])
+            logits, cache, enc = encdec.prefill(cfg, params, batch,
+                                                state["cache"], window_override)
+            return logits, {"cache": cache, "enc": enc,
+                            "pos": jnp.asarray(S, jnp.int32)}
+        state = self.init_serve_state(B, cache_len)
+        if cfg.frontend == "vision" and "image_embeds" in batch:
+            S = S + batch["image_embeds"].shape[1]
+        logits, cache = lm.prefill(cfg, params, batch, state["cache"],
+                                   window_override)
+        return logits, {"cache": cache, "pos": jnp.asarray(S, jnp.int32)}
+
+    def decode(self, params: PyTree, tokens: jnp.ndarray, state: PyTree,
+               window_override: Optional[int] = None) -> Tuple[jnp.ndarray, PyTree]:
+        cfg = self.cfg
+        if self.is_encdec:
+            logits, cache = encdec.decode_step(
+                cfg, params, tokens, state["pos"], state["cache"],
+                state["enc"], window_override)
+            return logits, {"cache": cache, "enc": state["enc"],
+                            "pos": state["pos"] + 1}
+        logits, cache = lm.decode_step(cfg, params, tokens, state["pos"],
+                                       state["cache"], window_override)
+        return logits, {"cache": cache, "pos": state["pos"] + 1}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ====================================================================
+# input specs (ShapeDtypeStruct stand-ins; dry-run contract)
+# ====================================================================
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict:
+    """Batch specs for train/prefill kinds; for decode kinds this is the
+    (tokens, ) of ONE decode step — pair with serve_state_specs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.compute_dtype)
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if cfg.encoder_layers > 0:
+        s_src, s_tgt = S // 2, S // 2
+        spec = {
+            "frames": jax.ShapeDtypeStruct((B, s_src, cfg.frontend_dim), f),
+            "tokens": jax.ShapeDtypeStruct((B, s_tgt), i32),
+        }
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B, s_tgt), i32)
+        return spec
+
+    if cfg.frontend == "vision":
+        n_img = min(cfg.frontend_tokens, S - 1)
+        s_text = S - n_img
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((B, s_text), i32),
+            "image_embeds": jax.ShapeDtypeStruct((B, n_img, cfg.frontend_dim), f),
+        }
+        if shape.kind == "train":
+            spec["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return spec
+
+    spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        spec["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return spec
+
+
+def serve_state_specs(cfg: ArchConfig, shape: InputShape) -> PyTree:
+    """Decode-time serve-state ShapeDtypeStructs (cache filled to seq_len)."""
+    model = build_model(cfg)
+    B = shape.global_batch
+    cache_len = _cache_len(cfg, shape)
+    src_len = shape.seq_len // 2 if cfg.encoder_layers > 0 else 0
+    return jax.eval_shape(
+        lambda: model.init_serve_state(B, cache_len, src_len))
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    return _decode_window(cfg, shape)
+
+
+def concrete_batch(cfg: ArchConfig, shape: InputShape, seed: int = 0) -> Dict:
+    """Materialize a random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    rng = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in specs.items():
+        rng, k = jax.random.split(rng)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+    return out

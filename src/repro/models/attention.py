@@ -1,0 +1,278 @@
+"""Attention: GQA/MQA (with qk-norm, RoPE, sliding window), MLA
+(DeepSeek-V2 / MiniCPM3 multi-head latent attention, with absorbed decode),
+cross-attention for enc-dec, and KV caches (ring-buffer for windowed
+long-context decode).
+
+Prefill/train uses a memory-bounded chunked softmax (flash-style scan over
+query chunks) so 32k-token prefill never materializes an S x S score
+matrix.  The Pallas flash kernel in ``repro.kernels`` implements the same
+contract for real TPUs; the model code stays pure-jnp so the multi-pod
+dry-run lowers on any backend (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import PyTree, apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- masking
+def _bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias: (..., S_q, S_k)."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), dtype=bool)
+    if causal:
+        ok &= k <= q
+    if window is not None:
+        ok &= k > q - window
+    ok &= k_pos[..., None, :] >= 0  # negative position = empty cache slot
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- core attn
+def grouped_attention(
+    q: jnp.ndarray,          # (B, S_q, H, D)
+    k: jnp.ndarray,          # (B, S_k, KV, D)
+    v: jnp.ndarray,          # (B, S_k, KV, Dv)
+    q_pos: jnp.ndarray,      # (S_q,)
+    k_pos: jnp.ndarray,      # (S_k,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Chunked-softmax grouped-query attention -> (B, S_q, H, Dv)."""
+    B, S_q, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S_q, KV, G, D)
+
+    def one_chunk(args):
+        qc, qp = args                              # (B, C, KV, G, D), (C,)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = s + _bias(qp, k_pos, causal, window)[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return o
+
+    if S_q <= q_chunk:
+        out = one_chunk((qg, q_pos))
+    else:
+        n = S_q // q_chunk
+        assert S_q % q_chunk == 0, "seq len must be divisible by q_chunk"
+        qs = qg.reshape(B, n, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(n, q_chunk)
+        out = jax.lax.map(one_chunk, (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S_q, KV, G, v.shape[-1])
+    return out.reshape(B, S_q, H, v.shape[-1]).astype(q.dtype)
+
+
+# ================================================================= GQA
+def init_gqa(cfg: ArchConfig, key, d_model: Optional[int] = None) -> PyTree:
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cfg.dtype("param")
+    p = {
+        "wq": dense_init(k1, (d, cfg.num_heads, hd), 0, dt),
+        "wk": dense_init(k2, (d, cfg.num_kv_heads, hd), 0, dt),
+        "wv": dense_init(k3, (d, cfg.num_kv_heads, hd), 0, dt),
+        "wo": dense_init(k4, (cfg.num_heads, hd, d), 0, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def init_gqa_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    hd = cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.num_kv_heads, hd), dtype),
+        "positions": jnp.full((cache_len,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_gqa(
+    cfg: ArchConfig,
+    params: PyTree,
+    x: jnp.ndarray,                 # (B, S, d)
+    positions: jnp.ndarray,         # (S,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[PyTree] = None,
+    kv_source: Optional[jnp.ndarray] = None,   # cross-attn encoder states
+    kv_positions: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[PyTree]]:
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    src = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kp = kv_positions if kv_positions is not None else positions
+        k = apply_rope(k, kp, cfg.rope_theta)
+
+    if cache is not None:
+        cache_len = cache["k"].shape[1]
+        slot = cache["pos"] % cache_len          # ring buffer (windowed)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["positions"], positions.astype(jnp.int32), slot, axis=0
+        )
+        new_cache = {"k": k_cache, "v": v_cache, "positions": kpos,
+                     "pos": cache["pos"] + S}
+        out = grouped_attention(q, k_cache, v_cache, positions, kpos,
+                                causal=causal, window=window,
+                                softcap=cfg.attn_logit_softcap)
+    else:
+        new_cache = None
+        kp = kv_positions if kv_positions is not None else positions
+        out = grouped_attention(q, k, v, positions, kp, causal=causal,
+                                window=window, softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ================================================================= MLA
+def init_mla(cfg: ArchConfig, key) -> PyTree:
+    m = cfg.mla
+    d = cfg.d_model
+    dt = cfg.dtype("param")
+    ks = jax.random.split(key, 6)
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), 0, dt),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dt),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, cfg.num_heads, qk_hd), 0, dt),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), 0, dt),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dt),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim), 0, dt),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, cfg.num_heads, m.v_head_dim), 0, dt),
+        "wo": dense_init(ks[5], (cfg.num_heads, m.v_head_dim, d), 0, dt),
+    }
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+        "positions": jnp.full((cache_len,), -1, jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mla_qkv(cfg, params, x, positions):
+    m = cfg.mla
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"].astype(x.dtype))
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["w_uq"].astype(x.dtype))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    dkv = x @ params["w_dkv"].astype(x.dtype)
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(dkv[..., m.kv_lora_rank:][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(
+    cfg: ArchConfig,
+    params: PyTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    window: Optional[int] = None,
+    cache: Optional[PyTree] = None,
+) -> Tuple[jnp.ndarray, Optional[PyTree]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, params, x, positions)
+
+    if cache is not None:
+        # ---- absorbed decode: O(S_cache x kv_lora) memory ----
+        cache_len = cache["c_kv"].shape[1]
+        slot = cache["pos"] % cache_len
+        c_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), slot, axis=1)
+        r_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, axis=1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["positions"], positions.astype(jnp.int32), slot, axis=0)
+        new_cache = {"c_kv": c_all, "k_rope": r_all, "positions": kpos,
+                     "pos": cache["pos"] + S}
+        # absorb W_uk into q:  (B,S,H,nope) x (lora,H,nope) -> (B,S,H,lora)
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope,
+                           params["w_uk"].astype(x.dtype))
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        s = (
+            jnp.einsum("bshl,btl->bhst", q_abs.astype(jnp.float32),
+                       c_all.astype(jnp.float32))
+            + jnp.einsum("bshr,btr->bhst", q_rope.astype(jnp.float32),
+                         r_all.astype(jnp.float32))
+        ) * scale
+        s = s + _bias(positions, kpos, causal, window)[None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        ctx_c = jnp.einsum("bhst,btl->bshl", p, c_all.astype(jnp.float32))
+        out = jnp.einsum("bshl,lhv->bshv", ctx_c.astype(x.dtype),
+                         params["w_uv"].astype(x.dtype))
+    else:
+        # ---- train/prefill: expand to per-head K/V, chunked attention ----
+        new_cache = None
+        k_nope = jnp.einsum("btl,lhn->bthn", c_kv, params["w_uk"].astype(x.dtype))
+        v = jnp.einsum("btl,lhv->bthv", c_kv, params["w_uv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = grouped_attention(q, k, v, positions, positions, causal=causal,
+                                window=window,
+                                scale=1.0 / math.sqrt(q.shape[-1]))
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ================================================================= dispatch
+def init_attention(cfg: ArchConfig, key, d_model: Optional[int] = None) -> PyTree:
+    if cfg.attention == "mla":
+        return init_mla(cfg, key)
+    return init_gqa(cfg, key, d_model)
+
+
+def init_attention_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    if cfg.attention == "mla":
+        return init_mla_cache(cfg, batch, cache_len, dtype)
+    return init_gqa_cache(cfg, batch, cache_len, dtype)
+
+
+def apply_attention(cfg, params, x, positions, **kw):
+    if cfg.attention == "mla":
+        kw.pop("kv_source", None)
+        kw.pop("kv_positions", None)
+        kw.pop("use_rope", None)
+        return apply_mla(cfg, params, x, positions, **kw)
+    return apply_gqa(cfg, params, x, positions, **kw)

@@ -1,0 +1,232 @@
+"""Unified transformer block + scanned layer stack.
+
+One block covers every assigned family:
+    dense / vlm / audio : attn -> mlp
+    moe                 : attn -> moe (+ shared experts)
+    ssm (mamba2)        : ssd mixer only
+    hybrid (hymba)      : parallel attn + ssd heads (mean-fused) -> mlp
+
+Layers are stacked (leading L axis on every param) and executed with
+``jax.lax.scan`` so compile time and HLO size are O(1) in depth.
+Per-layer heterogeneity (hybrid global-vs-sliding attention) rides along
+as a scanned ``window`` vector; everything else is homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (
+    apply_attention,
+    init_attention,
+    init_attention_cache,
+)
+from .layers import PyTree, init_mlp, init_rmsnorm, mlp, rmsnorm
+from .moe import apply_moe, init_moe
+from .ssm import apply_ssm, init_ssm, init_ssm_cache
+
+BIG_WINDOW = jnp.int32(2**30)  # "global" sentinel for per-layer windows
+
+
+def has_attention(cfg: ArchConfig) -> bool:
+    return cfg.attention != "none"
+
+
+def has_ssm(cfg: ArchConfig) -> bool:
+    return cfg.ssm is not None
+
+
+def has_mlp(cfg: ArchConfig) -> bool:
+    return cfg.d_ff > 0 and cfg.moe is None
+
+
+# ---------------------------------------------------------------- one block
+def init_block(cfg: ArchConfig, key, cross_attention: bool = False) -> PyTree:
+    keys = jax.random.split(key, 8)
+    dt = cfg.dtype("param")
+    p: PyTree = {}
+    if has_attention(cfg):
+        p["attn_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["attn"] = init_attention(cfg, keys[0])
+    if has_ssm(cfg):
+        p["ssm_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["ssm"] = init_ssm(cfg, keys[1])
+    if cfg.hybrid:
+        # per-branch output norms for mean fusion (Hymba)
+        p["attn_out_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["ssm_out_norm"] = init_rmsnorm(cfg.d_model, dt)
+    if cross_attention:
+        p["cross_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["cross_attn"] = init_attention(cfg, keys[2])
+    if cfg.moe is not None:
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["moe"] = init_moe(cfg, keys[3])
+    elif has_mlp(cfg):
+        p["ffn_norm"] = init_rmsnorm(cfg.d_model, dt)
+        p["mlp"] = init_mlp(keys[4], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    return p
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype) -> PyTree:
+    c: PyTree = {}
+    if has_attention(cfg):
+        c["attn"] = init_attention_cache(cfg, batch, cache_len, dtype)
+    if has_ssm(cfg):
+        c["ssm"] = init_ssm_cache(cfg, batch, dtype)
+    return c
+
+
+def apply_block(
+    cfg: ArchConfig,
+    params: PyTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    window,                             # None | int | int32 scalar (scanned)
+    cache: Optional[PyTree] = None,
+    causal: bool = True,
+    encoder_out: Optional[jnp.ndarray] = None,
+    encoder_positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[PyTree]]:
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: PyTree = {} if cache is not None else None
+
+    if cfg.hybrid:
+        h = rmsnorm(params["attn_norm"], x)
+        a_out, a_cache = apply_attention(
+            cfg, params["attn"], h, positions, causal=causal, window=window,
+            cache=None if cache is None else cache.get("attn"))
+        s_out, s_cache = apply_ssm(
+            cfg, params["ssm"], h,
+            cache=None if cache is None else cache.get("ssm"))
+        mixed = 0.5 * (rmsnorm(params["attn_out_norm"], a_out)
+                       + rmsnorm(params["ssm_out_norm"], s_out))
+        x = x + mixed
+        if cache is not None:
+            new_cache["attn"] = a_cache
+            new_cache["ssm"] = s_cache
+    else:
+        if has_attention(cfg):
+            h = rmsnorm(params["attn_norm"], x)
+            a_out, a_cache = apply_attention(
+                cfg, params["attn"], h, positions, causal=causal, window=window,
+                cache=None if cache is None else cache.get("attn"))
+            x = x + a_out
+            if cache is not None:
+                new_cache["attn"] = a_cache
+        if has_ssm(cfg):
+            h = rmsnorm(params["ssm_norm"], x)
+            s_out, s_cache = apply_ssm(
+                cfg, params["ssm"], h,
+                cache=None if cache is None else cache.get("ssm"))
+            x = x + s_out
+            if cache is not None:
+                new_cache["ssm"] = s_cache
+
+    if encoder_out is not None and "cross_attn" in params:
+        h = rmsnorm(params["cross_norm"], x)
+        c_out, _ = apply_attention(
+            cfg, params["cross_attn"], h, positions, causal=False,
+            window=None, kv_source=encoder_out,
+            kv_positions=encoder_positions, use_rope=False)
+        x = x + c_out
+
+    if cfg.moe is not None:
+        h = rmsnorm(params["ffn_norm"], x)
+        m_out, aux = apply_moe(cfg, params["moe"], h)
+        x = x + m_out
+    elif has_mlp(cfg):
+        h = rmsnorm(params["ffn_norm"], x)
+        x = x + mlp(params["mlp"], h, cfg.activation)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------- stack
+def layer_windows(cfg: ArchConfig, num_layers: int,
+                  override_window: Optional[int] = None) -> Optional[jnp.ndarray]:
+    """Per-layer sliding windows as a scanned vector (or None = all full)."""
+    if override_window is not None:
+        base = override_window
+    elif cfg.sliding_window is not None:
+        base = cfg.sliding_window
+    else:
+        return None
+    w = jnp.full((num_layers,), base, jnp.int32)
+    if cfg.global_attn_every:
+        idx = jnp.arange(num_layers)
+        is_global = (idx % cfg.global_attn_every == 0) | (idx == num_layers - 1)
+        w = jnp.where(is_global, BIG_WINDOW, w)
+    return w
+
+
+def init_stack(cfg: ArchConfig, key, num_layers: int,
+               cross_attention: bool = False) -> PyTree:
+    keys = jax.random.split(key, num_layers)
+    blocks = [init_block(cfg, k, cross_attention) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def init_stack_cache(cfg: ArchConfig, num_layers: int, batch: int,
+                     cache_len: int, dtype) -> PyTree:
+    one = init_block_cache(cfg, batch, cache_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (num_layers, *a.shape)).copy(), one)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(
+    cfg: ArchConfig,
+    stacked: PyTree,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    windows: Optional[jnp.ndarray],     # (L,) int32 or None
+    cache: Optional[PyTree] = None,     # stacked on L
+    causal: bool = True,
+    encoder_out: Optional[jnp.ndarray] = None,
+    encoder_positions: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[PyTree]]:
+    """Scan the stacked block params over x.  Returns (x, aux, new_cache)."""
+
+    from ..parallel.context import constrain_batch
+
+    def body(carry, scanned):
+        h, aux = carry
+        layer_params, w, layer_cache = scanned
+        h, a, new_c = apply_block(
+            cfg, layer_params, h, positions, w, cache=layer_cache,
+            causal=causal, encoder_out=encoder_out,
+            encoder_positions=encoder_positions)
+        h = constrain_batch(h)  # keep the residual stream batch-sharded
+        return (h, aux + a), new_c
+
+    body = _remat(body, cfg.remat if cache is None else "none")
+    xs = (stacked, windows, cache)
+
+    if cfg.unroll_layers:
+        # python-loop variant (dry-run cost probes; see ArchConfig)
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        caches_out = []
+        for i in range(L):
+            sl = jax.tree.map(lambda a, i=i: a[i], xs)
+            carry, c_i = body(carry, sl)
+            caches_out.append(c_i)
+        (x, aux) = carry
+        new_cache = (jax.tree.map(lambda *cs: jnp.stack(cs), *caches_out)
+                     if cache is not None else None)
+        return x, aux, new_cache
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, (new_cache if cache is not None else None)

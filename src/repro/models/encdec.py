@@ -1,0 +1,116 @@
+"""Encoder-decoder model (SeamlessM4T backbone).
+
+Encoder: bidirectional attention over stub frame embeddings (the speech
+frontend supplies (B, S_src, frontend_dim) — DESIGN.md §5).
+Decoder: causal self-attention + cross-attention to encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .blocks import apply_stack, init_stack, init_stack_cache, layer_windows
+from .layers import (
+    PyTree,
+    dense_init,
+    embed,
+    init_embedding,
+    init_rmsnorm,
+    rmsnorm,
+    unembed,
+)
+from .lm import IGNORE
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    k_e, k_enc, k_dec, k_p, k_u = jax.random.split(key, 5)
+    dt = cfg.dtype("param")
+    return {
+        "embed": init_embedding(k_e, cfg.vocab_size, cfg.d_model, dt),
+        "frontend_proj": {"w": dense_init(k_p, (cfg.frontend_dim, cfg.d_model), 0, dt)},
+        "encoder": init_stack(cfg, k_enc, cfg.encoder_layers),
+        "enc_norm": init_rmsnorm(cfg.d_model, dt),
+        "decoder": init_stack(cfg, k_dec, cfg.num_layers, cross_attention=True),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+        "unembed": init_embedding(k_u, cfg.vocab_size, cfg.d_model, dt),
+    }
+
+
+def encode(cfg: ArchConfig, params: PyTree, frames: jnp.ndarray) -> jnp.ndarray:
+    cdt = cfg.dtype("compute")
+    x = frames.astype(cdt) @ params["frontend_proj"]["w"].astype(cdt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, _ = apply_stack(cfg, params["encoder"], x, positions, None,
+                          causal=False)
+    return rmsnorm(params["enc_norm"], x)
+
+
+def forward(cfg: ArchConfig, params: PyTree, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"frames": (B,S_src,fdim), "tokens": (B,S_tgt), "labels"}."""
+    enc = encode(cfg, params, batch["frames"])
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    cdt = cfg.dtype("compute")
+    x = embed(params["embed"], batch["tokens"], cdt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, aux, _ = apply_stack(cfg, params["decoder"], x, positions, None,
+                            encoder_out=enc, encoder_positions=enc_pos)
+    x = rmsnorm(params["final_norm"], x)
+    logits = unembed(params["unembed"], x).astype(jnp.float32)
+
+    targets = batch["labels"][:, 1:]
+    mask = targets != IGNORE
+    tgt = jnp.where(mask, targets, 0)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    # one-hot contraction (not take_along_axis) — see lm.forward
+    nll = -jnp.sum(
+        logp * jax.nn.one_hot(tgt, logp.shape[-1], dtype=logp.dtype), axis=-1)
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = jnp.where(mask, nll, 0.0).sum() / denom
+    return ce, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> PyTree:
+    return init_stack_cache(cfg, cfg.num_layers, batch, cache_len,
+                            cfg.dtype("compute"))
+
+
+def prefill(
+    cfg: ArchConfig, params: PyTree, batch: Dict, cache: PyTree,
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, PyTree, jnp.ndarray]:
+    """Encode source + run target prompt; returns (logits, cache, enc)."""
+    enc = encode(cfg, params, batch["frames"])
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    cdt = cfg.dtype("compute")
+    x = embed(params["embed"], batch["tokens"], cdt)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, cache = apply_stack(cfg, params["decoder"], x, positions,
+                              layer_windows(cfg, cfg.num_layers, window_override),
+                              cache=cache, encoder_out=enc,
+                              encoder_positions=enc_pos)
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    return unembed(params["unembed"], x), cache, enc
+
+
+def decode_step(
+    cfg: ArchConfig, params: PyTree, tokens: jnp.ndarray, pos: jnp.ndarray,
+    cache: PyTree, enc: jnp.ndarray,
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    cdt = cfg.dtype("compute")
+    x = embed(params["embed"], tokens, cdt)
+    enc_pos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    positions = pos[None].astype(jnp.int32)
+    x, _, cache = apply_stack(cfg, params["decoder"], x, positions,
+                              layer_windows(cfg, cfg.num_layers, window_override),
+                              cache=cache, encoder_out=enc,
+                              encoder_positions=enc_pos)
+    x = rmsnorm(params["final_norm"], x)
+    return unembed(params["unembed"], x), cache

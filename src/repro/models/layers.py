@@ -1,0 +1,105 @@
+"""Core layers: RMSNorm, RoPE, gated MLPs, embeddings.
+
+Everything is pure-functional: ``init_*`` builds a param pytree (dict),
+``apply`` consumes it.  Logical-axis names are attached via
+``parallel.sharding`` when the tree is sharded; params here are plain.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Dict
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    std = 0.02
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------- rmsnorm
+def init_rmsnorm(d: int, dtype=jnp.float32) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: PyTree, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- rope
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- gated mlp
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+
+
+def mlp(params: PyTree, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    gate = x @ params["w_gate"].astype(x.dtype)
+    up = x @ params["w_up"].astype(x.dtype)
+    if activation == "silu":
+        act = jax.nn.silu(gate)
+    elif activation == "geglu":
+        act = jax.nn.gelu(gate, approximate=True)
+    elif activation == "gelu":
+        act = jax.nn.gelu(gate, approximate=True)
+    else:
+        raise ValueError(activation)
+    return (act * up) @ params["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32) -> PyTree:
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed(params: PyTree, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: PyTree, x: jnp.ndarray, softcap: Optional[float] = None) -> jnp.ndarray:
+    logits = x @ params["table"].astype(x.dtype).T
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.float32) -> PyTree:
+    return {"w": dense_init(key, (d_in, d_out), 0, dtype)}
+
+
+def linear(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ params["w"].astype(x.dtype)

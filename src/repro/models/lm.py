@@ -1,0 +1,165 @@
+"""Decoder-only language model (dense / MoE / SSM / hybrid / VLM).
+
+Functional API:
+    init(cfg, key)                       -> params
+    forward(cfg, params, batch)          -> (loss, metrics)       [train]
+    prefill(cfg, params, batch, cache)   -> (logits, cache)
+    decode_step(cfg, params, token, cache, window) -> (logits, cache)
+
+``batch`` is a dict: {"tokens": (B,S) int32, "labels": (B,S) int32}
+plus {"image_embeds": (B,N,fdim)} for VLM configs.
+Labels use -100 as the ignore index.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .blocks import (
+    apply_stack,
+    init_stack,
+    init_stack_cache,
+    layer_windows,
+)
+from .layers import (
+    PyTree,
+    embed,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+    unembed,
+    init_mlp,
+    mlp,
+    dense_init,
+)
+
+IGNORE = -100
+
+
+def init(cfg: ArchConfig, key) -> PyTree:
+    k_e, k_s, k_f, k_u = jax.random.split(key, 4)
+    dt = cfg.dtype("param")
+    p: PyTree = {
+        "embed": init_embedding(k_e, cfg.vocab_size, cfg.d_model, dt),
+        "layers": init_stack(cfg, k_s, cfg.num_layers),
+        "final_norm": init_rmsnorm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_embedding(k_u, cfg.vocab_size, cfg.d_model, dt)
+    if cfg.frontend == "vision":
+        # LLaVA projector: 2-layer MLP from vision hidden to d_model
+        k1, k2 = jax.random.split(k_f)
+        p["projector"] = {
+            "w1": dense_init(k1, (cfg.frontend_dim, cfg.d_model), 0, dt),
+            "w2": dense_init(k2, (cfg.d_model, cfg.d_model), 0, dt),
+        }
+    return p
+
+
+def _embed_inputs(cfg: ArchConfig, params: PyTree, batch: Dict) -> jnp.ndarray:
+    cdt = cfg.dtype("compute")
+    x = embed(params["embed"], batch["tokens"], cdt)
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(cdt)
+        h = jax.nn.gelu(img @ params["projector"]["w1"].astype(cdt))
+        img_tok = h @ params["projector"]["w2"].astype(cdt)
+        x = jnp.concatenate([img_tok, x], axis=1)  # image tokens first
+    return x
+
+
+def _logits(cfg: ArchConfig, params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed(table, x, cfg.attn_logit_softcap)
+
+
+def forward(
+    cfg: ArchConfig, params: PyTree, batch: Dict
+) -> Tuple[jnp.ndarray, Dict]:
+    """Training forward: mean next-token cross-entropy + MoE aux loss."""
+    from ..parallel.context import constrain_batch
+
+    x = constrain_batch(_embed_inputs(cfg, params, batch))
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = layer_windows(cfg, cfg.num_layers)
+    x, aux, _ = apply_stack(cfg, params["layers"], x, positions, windows)
+    x = rmsnorm(params["final_norm"], x)
+    logits = constrain_batch(_logits(cfg, params, x))
+
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        n_img = batch["image_embeds"].shape[1]
+        pad = jnp.full((labels.shape[0], n_img), IGNORE, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+
+    logits32 = logits.astype(jnp.float32)
+    # next-token shift
+    logits32 = logits32[:, :-1]
+    targets = labels[:, 1:]
+    mask = targets != IGNORE
+    tgt = jnp.where(mask, targets, 0)
+    logp = jax.nn.log_softmax(logits32, axis=-1)
+    if cfg.ce_impl == "gather":
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    else:
+        # one-hot contraction, NOT take_along_axis: a gather over the
+        # vocab-sharded dim forces SPMD to replicate the whole fp32 logits
+        # tensor (measured +10 TB/step of all-reduce; EXPERIMENTS.md §Perf)
+        nll = -jnp.sum(
+            logp * jax.nn.one_hot(tgt, logp.shape[-1], dtype=logp.dtype),
+            axis=-1)
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = jnp.where(mask, nll, 0.0).sum() / denom
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    loss = ce + aux_w * aux / max(cfg.num_layers, 1)
+    return loss, {"ce": ce, "aux": aux, "tokens": denom}
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int) -> PyTree:
+    return init_stack_cache(cfg, cfg.num_layers, batch, cache_len,
+                            cfg.dtype("compute"))
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: PyTree,
+    batch: Dict,
+    cache: PyTree,
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """Run the prompt through the stack, filling the cache.
+
+    Returns (last-position logits, cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = layer_windows(cfg, cfg.num_layers, window_override)
+    x, _, cache = apply_stack(cfg, params["layers"], x, positions, windows,
+                              cache=cache)
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    return _logits(cfg, params, x), cache
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: PyTree,
+    tokens: jnp.ndarray,            # (B, 1) int32
+    pos: jnp.ndarray,               # () int32 — absolute position
+    cache: PyTree,
+    window_override: Optional[int] = None,
+) -> Tuple[jnp.ndarray, PyTree]:
+    """One decode step: (B,1) token -> (B,1,V) logits, updated cache."""
+    cdt = cfg.dtype("compute")
+    x = embed(params["embed"], tokens, cdt)
+    positions = pos[None].astype(jnp.int32)         # (1,)
+    windows = layer_windows(cfg, cfg.num_layers, window_override)
+    x, _, cache = apply_stack(cfg, params["layers"], x, positions, windows,
+                              cache=cache)
+    x = rmsnorm(params["final_norm"], x)
+    return _logits(cfg, params, x), cache

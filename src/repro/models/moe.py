@@ -1,0 +1,100 @@
+"""Mixture-of-experts: top-k router (fp32, load-balance aux loss), shared
+experts, GShard-style capacity-based dispatch.
+
+Dispatch is grouped: tokens are partitioned into groups of
+``group_size``; each group builds a (S_g, E, C) one-hot combine tensor with
+per-expert capacity C = ceil(S_g * top_k / E * capacity_factor).  Expert
+FFNs then run as one batched einsum over the expert axis, which shards on
+the ``model`` ("expert") mesh axis — XLA inserts the all-to-all.  Tokens
+over capacity are dropped (standard GShard semantics); the router aux loss
+keeps the load balanced so drops stay rare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, MoEConfig
+from .layers import PyTree, dense_init, init_mlp, mlp
+
+
+def init_moe(cfg: ArchConfig, key) -> PyTree:
+    e = cfg.moe
+    d = cfg.d_model
+    dt = cfg.dtype("param")
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(k_r, (d, e.num_experts), 0, jnp.float32),
+        "w_gate": dense_init(k_g, (e.num_experts, d, e.expert_d_ff), 1, dt),
+        "w_up": dense_init(k_u, (e.num_experts, d, e.expert_d_ff), 1, dt),
+        "w_down": dense_init(k_d, (e.num_experts, e.expert_d_ff, d), 1, dt),
+    }
+    if e.num_shared_experts:
+        p["shared"] = init_mlp(
+            k_s, d, e.num_shared_experts * e.shared_d_ff, cfg.activation, dt
+        )
+    return p
+
+
+def _capacity(e: MoEConfig, group: int) -> int:
+    c = int(math.ceil(group * e.top_k / e.num_experts * e.capacity_factor))
+    return max(c, 1)
+
+
+def apply_moe(
+    cfg: ArchConfig, params: PyTree, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    e = cfg.moe
+    B, S, d = x.shape
+    tokens = x.reshape(B * S, d)
+    T = B * S
+    g = min(e.group_size, T)
+    n_groups = T // g
+    assert T % g == 0, f"tokens {T} not divisible by group {g}"
+    xg = tokens.reshape(n_groups, g, d)
+
+    # ---- router (fp32) ----
+    logits = (xg.astype(jnp.float32) @ params["router"])          # (G, S_g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, e.top_k)                # (G, S_g, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], e.num_experts, dtype=jnp.float32), axis=1
+    )
+    pbar = probs.mean(axis=1)
+    aux = e.num_experts * jnp.mean(jnp.sum(f * pbar, axis=-1))
+
+    # ---- capacity dispatch ----
+    C = _capacity(e, g)
+    onehot = jax.nn.one_hot(top_idx, e.num_experts, dtype=jnp.float32)  # (G,Sg,K,E)
+    # position of each (token, k) within its expert queue
+    pos_in_e = jnp.cumsum(onehot.reshape(n_groups, g * e.top_k, e.num_experts),
+                          axis=1).reshape(n_groups, g, e.top_k, e.num_experts) - 1.0
+    keep = (pos_in_e < C) & (onehot > 0)
+    pos_clip = jnp.clip(pos_in_e, 0, C - 1).astype(jnp.int32)
+    cap_oh = jax.nn.one_hot(pos_clip, C, dtype=jnp.float32) * keep[..., None]
+    # combine tensor: (G, Sg, E, C)
+    combine = jnp.einsum("gske,gskec,gsk->gsec", onehot, cap_oh,
+                         top_p.astype(jnp.float32))
+    dispatch = (combine > 0).astype(x.dtype)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)        # (G,E,C,d)
+    h_gate = jnp.einsum("gecd,edf->gecf", expert_in,
+                        params["w_gate"].astype(x.dtype))
+    h_up = jnp.einsum("gecd,edf->gecf", expert_in,
+                      params["w_up"].astype(x.dtype))
+    act = jax.nn.silu(h_gate) if cfg.activation == "silu" else jax.nn.gelu(h_gate)
+    h = jnp.einsum("gecf,efd->gecd", act * h_up,
+                   params["w_down"].astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), h)  # (G,Sg,d)
+    y = y.reshape(B, S, d)
+
+    if e.num_shared_experts:
+        y = y + mlp(params["shared"], x, cfg.activation)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,230 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside fixed-size chunks, linear recurrence across chunk boundaries
+via ``lax.scan`` (the paper's Listing 1, adapted to JAX).  Decode is the
+O(1) recurrent step on a persistent (heads, head_dim, state) tensor.
+
+Shapes follow the Mamba-2 conventions:
+    d_inner = expand * d_model, heads H = d_inner / head_dim P,
+    B/C are per-group (n_groups G) with state size N.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, SSMConfig
+from .layers import PyTree, dense_init, init_rmsnorm, rmsnorm
+
+
+def init_ssm(cfg: ArchConfig, key) -> PyTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    H = s.num_heads(d)
+    G, N = s.n_groups, s.state_dim
+    dt = cfg.dtype("param")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = di + 2 * G * N
+    p = {
+        "conv_w": dense_init(k2, (s.conv_width, conv_ch), 0, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rmsnorm(di, dt),
+        "w_out": dense_init(k3, (di, d), 0, dt),
+    }
+    if cfg.ssm_split_in_proj:
+        kz, kx, kb, kc, kt = jax.random.split(k1, 5)
+        p["w_z"] = dense_init(kz, (d, di), 0, dt)
+        p["w_x"] = dense_init(kx, (d, di), 0, dt)
+        p["w_B"] = dense_init(kb, (d, G * N), 0, dt)
+        p["w_C"] = dense_init(kc, (d, G * N), 0, dt)
+        p["w_dt"] = dense_init(kt, (d, H), 0, dt)
+    else:
+        # fused input projection: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        p["w_in"] = dense_init(k1, (d, 2 * di + 2 * G * N + H), 0, dt)
+    return p
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> PyTree:
+    s = cfg.ssm
+    d = cfg.d_model
+    H = s.num_heads(d)
+    return {
+        "state": jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1,
+                           s.d_inner(d) + 2 * s.n_groups * s.state_dim), dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    G, N = s.n_groups, s.state_dim
+    H = s.num_heads(d)
+    z = proj[..., :di]
+    xBC = proj[..., di : di + di + 2 * G * N]
+    dt = proj[..., di + di + 2 * G * N :]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv1d.  xBC: (B, S, C); conv_w: (W, C);
+    conv_state: (B, W-1, C) trailing context from previous tokens."""
+    W = conv_w.shape[0]
+    S = xBC.shape[1]
+    if conv_state is not None:
+        xfull = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    else:
+        xfull = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xfull[:, i : i + S] * conv_w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + conv_b[None, None, :])
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    S = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD forward.
+
+    x: (b, S, H, P); dt: (b, S, H); A: (H,); B, C: (b, S, G, N)
+    Returns y: (b, S, H, P), final_state: (b, H, P, G*N).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    nc = S // chunk
+    assert S % chunk == 0
+
+    rep = H // G
+    # broadcast groups to heads
+    Bh = jnp.repeat(B, rep, axis=2)                     # (b, S, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = Bh.reshape(b, nc, chunk, H, N)
+    Cc = Ch.reshape(b, nc, chunk, H, N)
+
+    dA = dtc * A[None, None, None, :]                   # (b, nc, c, H) negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (quadratic in chunk) ----
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))      # (b, nc, H, c, c)
+    scores = jnp.einsum("bnihN,bnjhN->bnhij", Cc, Bc)
+    y_diag = jnp.einsum("bnhij,bnhij,bnjh,bnjhp->bnihp",
+                        scores, L, dtc, xc)
+
+    # ---- chunk states ----
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,nc,c,H)
+    states = jnp.einsum("bnchN,bnch,bnch,bnchp->bnhpN",
+                        Bc, decay_states, dtc, xc)           # (b,nc,H,P,N)
+
+    # ---- inter-chunk recurrence (scan over chunks) ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b, nc, H)
+
+    def step(carry, inp):
+        st, dec = inp                                        # (b,H,P,N), (b,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit state BEFORE chunk
+
+    init = (jnp.zeros_like(states[:, 0]) if initial_state is None
+            else initial_state.reshape(b, H, P, N))
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,H,P,N)
+
+    # ---- contribution of previous-chunk state to outputs ----
+    state_decay = jnp.exp(dA_cum)                            # (b,nc,c,H)
+    y_off = jnp.einsum("bnchN,bnhpN,bnch->bnchp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final  # (b, H, P, N)
+
+
+def apply_ssm(
+    cfg: ArchConfig,
+    params: PyTree,
+    x: jnp.ndarray,                  # (B, S, d)
+    cache: Optional[PyTree] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Optional[PyTree]]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    G, N, P = s.n_groups, s.state_dim, s.head_dim
+    H = s.num_heads(d)
+    B_, S, _ = x.shape
+
+    if cfg.ssm_split_in_proj:
+        z = x @ params["w_z"].astype(x.dtype)
+        xBC = jnp.concatenate(
+            [x @ params["w_x"].astype(x.dtype),
+             x @ params["w_B"].astype(x.dtype),
+             x @ params["w_C"].astype(x.dtype)], axis=-1)
+        dt_raw = x @ params["w_dt"].astype(x.dtype)
+    else:
+        proj = x @ params["w_in"].astype(x.dtype)
+        z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    new_conv_state = None
+    if cache is not None:
+        new_conv_state = jnp.concatenate([cache["conv"], xBC], axis=1)[:, -(s.conv_width - 1):]
+        xBC = _causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                           params["conv_b"].astype(x.dtype), cache["conv"])
+    else:
+        xBC = _causal_conv(xBC, params["conv_w"].astype(x.dtype),
+                           params["conv_b"].astype(x.dtype))
+
+    xs = xBC[..., :di].reshape(B_, S, H, P)
+    Bmat = xBC[..., di : di + G * N].reshape(B_, S, G, N)
+    Cmat = xBC[..., di + G * N :].reshape(B_, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                         # (H,)
+
+    if cache is not None and S == 1:
+        # ---- recurrent decode step ----
+        state = cache["state"]                                # (B,H,P,G*N)
+        rep = H // G
+        Bh = jnp.repeat(Bmat, rep, axis=2)[:, 0]              # (B,H,N)
+        Ch = jnp.repeat(Cmat, rep, axis=2)[:, 0]
+        dt0 = dt[:, 0]                                        # (B,H)
+        dA = jnp.exp(dt0 * A[None, :])                        # (B,H)
+        xt = xs[:, 0].astype(jnp.float32)                     # (B,H,P)
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt0, xt, Bh.astype(jnp.float32))
+        state = state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ch.astype(jnp.float32))
+        y = y[:, None]                                        # (B,1,H,P)
+        new_cache = {"state": state, "conv": new_conv_state}
+    else:
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(
+            xs.astype(jnp.float32), dt, A,
+            Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+            chunk=min(chunk, S), initial_state=init_state,
+        )
+        new_cache = (
+            {"state": final_state, "conv": new_conv_state}
+            if cache is not None else None
+        )
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B_, S, di).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["w_out"].astype(x.dtype), new_cache

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    return final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = jnp.clip(s / max(warmup, 1), 0.0, 1.0)
+    decay = cosine_schedule(jnp.maximum(s - warmup, 0.0),
+                            max(total_steps - warmup, 1), final_frac)
+    return warm * decay

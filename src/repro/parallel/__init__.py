@@ -1,0 +1,12 @@
+from .sharding import (
+    MeshRules,
+    batch_shardings,
+    param_shardings,
+    replicated,
+    serve_state_shardings,
+)
+
+__all__ = [
+    "MeshRules", "param_shardings", "batch_shardings",
+    "serve_state_shardings", "replicated",
+]

@@ -1,0 +1,48 @@
+"""Activation-sharding context.
+
+SPMD propagates weight shardings onto activations; with d_model FSDP-
+sharded on the data axis, the propagated choice can collide with the
+batch sharding and silently REPLICATE the batch dim (measured: +10 TB of
+per-step all-reduce on command-r train — EXPERIMENTS.md §Perf pair 3).
+The launcher installs this context; model code pins the residual stream
+back to batch-sharded at block boundaries.  Without a context (unit
+tests, single-device runs) everything is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx: contextvars.ContextVar = contextvars.ContextVar(
+    "act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes: Tuple[str, ...]):
+    token = _ctx.set((mesh, tuple(batch_axes)))
+    try:
+        yield
+    finally:
+        _ctx.reset(token)
+
+
+def constrain_batch(x):
+    """Pin a (B, ...) activation to batch-on-data sharding (no-op without
+    an installed context or when the batch dim doesn't divide)."""
+    ctx = _ctx.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes = ctx
+    if not batch_axes:
+        return x
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape[a]
+    if x.shape[0] % size != 0:
+        return x
+    spec = P(batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,296 @@
+"""Sharding rules: map every param / batch / cache leaf to a PartitionSpec.
+
+Strategy (DESIGN.md §6):
+  * "tensor" dims (attention heads, FFN hidden, experts, vocab) shard on
+    the ``model`` axis;
+  * the d_model ("embed") dim shards on the ``data`` axis (FSDP-style), so
+    per-chip param+optimizer bytes scale 1/(data*model);
+  * the ``pod`` axis (multi-pod mesh) replicates params by default — pods
+    are data-parallel replicas whose gradients sync over DCI, exactly the
+    worker/PS exchange the paper's model prices at external bandwidth.
+    ``fsdp_over_pod=True`` switches to sharding d_model over (pod, data)
+    instead (a beyond-paper variant measured in EXPERIMENTS.md §Perf);
+  * any rule whose dim is not divisible by the axis size falls back to
+    replication for that dim (e.g. kv_heads=8 on a 16-way model axis).
+
+Rules are path-pattern based over the param tree; stacked layer params
+(leading L axis from the scan) are detected by path prefix "layers/".
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (path regex, per-dim logical axes, counted from the END of the shape)
+# logical names: "model" | "fsdp" | None; leading dims not listed => None
+_PARAM_RULES: List[Tuple[str, Sequence[Optional[str]]]] = [
+    # embeddings: (V, d).  The vocab dim is NOT sharded: a vocab-sharded
+    # table turns the token gather into an SPMD involuntary-full-remat
+    # (measured +TBs of per-step all-gather; EXPERIMENTS.md §Perf pair 3
+    # iteration A2) — d on fsdp keeps storage bounded instead.
+    (r"(^|/)embed/table$", (None, "fsdp")),
+    (r"(^|/)unembed/table$", ("model", "fsdp")),
+    # attention (L, d, H, hd) / (L, H, hd, d)
+    (r"/attn/wq$", ("fsdp", "model", None)),
+    (r"/attn/wk$", ("fsdp", "model", None)),
+    (r"/attn/wv$", ("fsdp", "model", None)),
+    (r"/attn/wo$", ("model", None, "fsdp")),
+    (r"/cross_attn/wq$", ("fsdp", "model", None)),
+    (r"/cross_attn/wk$", ("fsdp", "model", None)),
+    (r"/cross_attn/wv$", ("fsdp", "model", None)),
+    (r"/cross_attn/wo$", ("model", None, "fsdp")),
+    # MLA ("model2" resolves only on a re-factorized (data, model, model2)
+    # mesh — §Perf pair 1; on the canonical mesh it replicates)
+    (r"/attn/w_dq$", ("fsdp", "model2")),
+    (r"/attn/w_uq$", ("model2", "model", None)),
+    (r"/attn/w_dkv$", ("fsdp", None)),
+    (r"/attn/w_uk$", ("model2", "model", None)),
+    (r"/attn/w_uv$", ("model2", "model", None)),
+    # dense mlp (L, d, ff) / (L, ff, d)
+    (r"/mlp/w_gate$", ("fsdp", "model")),
+    (r"/mlp/w_up$", ("fsdp", "model")),
+    (r"/mlp/w_down$", ("model", "fsdp")),
+    # moe (L, E, d, ff) / (L, E, ff, d); router (L, d, E)
+    # experts shard on the MODEL axis (expert parallelism: tokens
+    # all-to-all to expert shards, expert weights never gathered) with
+    # d_model on fsdp.  Measured best for BOTH train and decode —
+    # EXPERIMENTS.md §Perf "beyond the three pairs" (train collective
+    # 121 s -> 31 s vs experts-on-data; decode unchanged-optimal).
+    (r"/moe/router$", (None, None)),
+    (r"/moe/w_gate$", ("model", "fsdp", None)),
+    (r"/moe/w_up$", ("model", "fsdp", None)),
+    (r"/moe/w_down$", ("model", None, "fsdp")),
+    (r"/moe/shared/w_gate$", ("fsdp", "model")),
+    (r"/moe/shared/w_up$", ("fsdp", "model")),
+    (r"/moe/shared/w_down$", ("model", "fsdp")),
+    # ssm
+    (r"/ssm/w_in$", ("fsdp", None)),
+    (r"/ssm/w_z$", ("fsdp", "model")),
+    (r"/ssm/w_x$", ("fsdp", "model")),
+    (r"/ssm/w_B$", ("fsdp", None)),
+    (r"/ssm/w_C$", ("fsdp", None)),
+    (r"/ssm/w_dt$", ("fsdp", "model")),
+    (r"/ssm/w_out$", ("model", "fsdp")),
+    # projector / frontend
+    (r"projector/w1$", ("fsdp", "model")),
+    (r"projector/w2$", ("model", "fsdp")),
+    (r"frontend_proj/w$", ("fsdp", None)),
+]
+
+
+# serve-time (decode) rule overrides.  Currently empty: the measured-best
+# expert layout coincides for train and decode (experts on model axis) —
+# the mechanism stays for workload-dependent layouts (EXPERIMENTS.md
+# §Perf shows EP-on-data would be a 5x decode regression if defaulted).
+_SERVE_OVERRIDES: List[Tuple[str, Sequence[Optional[str]]]] = []
+
+# the refuted experts-on-data layout, kept for the §Perf record
+# (MeshRules(moe_experts_on="data"))
+_MOE_ON_DATA: List[Tuple[str, Sequence[Optional[str]]]] = [
+    (r"/moe/w_gate$", ("fsdp", None, "model")),
+    (r"/moe/w_up$", ("fsdp", None, "model")),
+    (r"/moe/w_down$", ("fsdp", "model", None)),
+]
+
+
+def _match_rule(path: str, serve: bool = False):
+    if serve:
+        for pat, axes in _SERVE_OVERRIDES:
+            if re.search(pat, path):
+                return axes
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            return axes
+    return None
+
+
+class MeshRules:
+    """Resolve logical axis names against a concrete mesh."""
+
+    def __init__(self, mesh: Mesh, fsdp_over_pod: bool = False,
+                 tp_over_pod: bool = False, pure_fsdp: bool = False):
+        """tp_over_pod: locality-OBLIVIOUS variant — tensor-parallel axes
+        span pods, so per-layer activation collectives cross DCI.  This is
+        the 'external bandwidth' pathology the paper's co-location model
+        prices against (§Perf pair 3, variant D).
+
+        pure_fsdp: no tensor parallelism — batch and weight shards span
+        (data, model) jointly; per-layer weight all-gathers replace the
+        Megatron-TP activation all-reduces (§Perf pair 3, variant A5)."""
+        self.moe_experts_on = "model"
+        self.mesh = mesh
+        names = mesh.axis_names
+        intra = tuple(a for a in ("data", "model") if a in names)
+        if pure_fsdp:
+            self.model_axes: Tuple[str, ...] = ()
+            self.fsdp_axes: Tuple[str, ...] = intra
+            self.batch_axes: Tuple[str, ...] = (
+                ("pod",) + intra if "pod" in names else intra)
+            self.model2_axes: Tuple[str, ...] = ()
+            return
+        if "pod" in names and tp_over_pod:
+            self.model_axes = ("pod", "model")
+        else:
+            self.model_axes = ("model",) if "model" in names else ()
+        self.model2_axes = ("model2",) if "model2" in names else ()
+        if "pod" in names and fsdp_over_pod and not tp_over_pod:
+            self.fsdp_axes = ("pod", "data")
+        elif "data" in names:
+            self.fsdp_axes = ("data",)
+        else:
+            self.fsdp_axes = ()
+        if "pod" in names and not fsdp_over_pod and not tp_over_pod:
+            self.batch_axes = ("pod", "data")
+        elif "data" in names:
+            self.batch_axes = ("data",)
+        else:
+            self.batch_axes = ()
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _resolve(self, logical: Optional[str], dim: int):
+        if logical == "model":
+            axes = self.model_axes
+        elif logical == "model2":
+            axes = self.model2_axes
+        elif logical == "fsdp":
+            axes = self.fsdp_axes
+        elif logical == "batch":
+            axes = self.batch_axes
+        else:
+            return None
+        if not axes:
+            return None
+        if dim % self.axis_size(axes) != 0:
+            # fall back: try a prefix of the axes tuple
+            for k in range(len(axes) - 1, 0, -1):
+                sub = axes[:k]
+                if dim % self.axis_size(sub) == 0:
+                    return sub if len(sub) > 1 else sub[0]
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def spec_for(self, path: str, shape: Tuple[int, ...],
+                 serve: bool = False) -> P:
+        axes = None
+        if self.moe_experts_on == "data":
+            for pat, a in _MOE_ON_DATA:
+                if re.search(pat, path):
+                    axes = a
+                    break
+        if axes is None:
+            axes = _match_rule(path, serve=serve)
+        if axes is None:
+            return P()
+        n_rule = len(axes)
+        lead = len(shape) - n_rule
+        if lead < 0:
+            return P()
+        entries: List = [None] * lead
+        used = set()
+        for logical, dim in zip(axes, shape[lead:]):
+            r = self._resolve(logical, dim)
+            # one mesh axis may appear at most once in a spec
+            key = tuple(r) if isinstance(r, tuple) else (r,)
+            if r is not None and not (set(key) & used):
+                entries.append(r)
+                used.update(key)
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: Tuple[int, ...]) -> P:
+        b = self._resolve("batch", shape[0])
+        return P(b, *([None] * (len(shape) - 1)))
+
+    def cache_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        """Decode caches: (L, B, ...) — batch on data, heads/lora on model."""
+        if len(shape) < 2:
+            return P()
+        entries: List = [None] * len(shape)
+        b = self._resolve("batch", shape[1])
+        entries[1] = b
+        # try to shard the largest trailing dim on model
+        best, best_dim = None, 0
+        for i in range(2, len(shape)):
+            r = self._resolve("model", shape[i])
+            if r is not None and shape[i] > best_dim:
+                best, best_dim = i, shape[i]
+        if best is not None:
+            entries[best] = self._resolve("model", shape[best])
+        return P(*entries)
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _iter_paths(tree[k], f"{prefix}/{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def param_shardings(rules: MeshRules, params_abstract, serve: bool = False):
+    """NamedSharding pytree for a param tree (abstract or concrete)."""
+    flat = dict(_iter_paths(params_abstract))
+    specs = {p: rules.spec_for(p, v.shape, serve=serve)
+             for p, v in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return NamedSharding(rules.mesh, specs[prefix])
+
+    return rebuild(params_abstract)
+
+
+def batch_shardings(rules: MeshRules, batch_abstract):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, rules.batch_spec(s.shape)),
+        batch_abstract,
+    )
+
+
+def serve_state_shardings(rules: MeshRules, state_abstract):
+    flat = dict(_iter_paths(state_abstract))
+
+    def spec(path, s):
+        if s.ndim == 0:
+            return P()
+        if path.endswith("/positions") or path == "pos" or path.endswith("/pos"):
+            return P()
+        if path.startswith("enc"):
+            return rules.batch_spec(s.shape)
+        return rules.cache_spec(path, s.shape)
+
+    specs = {p: spec(p, v) for p, v in flat.items()}
+
+    def rebuild(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rebuild(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(rebuild(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return NamedSharding(rules.mesh, specs[prefix])
+
+    return rebuild(state_abstract)
+
+
+def replicated(rules: MeshRules, tree):
+    return jax.tree.map(
+        lambda _: NamedSharding(rules.mesh, P()), tree)

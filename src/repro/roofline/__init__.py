@@ -1,0 +1,16 @@
+from .analysis import (
+    DCI_BW,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_report,
+    roofline_terms,
+)
+
+__all__ = [
+    "PEAK_FLOPS", "HBM_BW", "ICI_BW", "DCI_BW",
+    "collective_bytes_from_hlo", "model_flops",
+    "roofline_terms", "roofline_report",
+]

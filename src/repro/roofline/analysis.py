@@ -1,0 +1,232 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), all in seconds (per-step):
+
+    compute    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = intra_bytes / (chips * ICI_bw) + cross_bytes / (chips * DCI_bw)
+
+cost_analysis() reports whole-program FLOPs/bytes for the SPMD program as
+seen by one device times... empirically XLA reports the per-device
+partitioned program; we therefore divide by chips only when the metric is
+whole-module.  We detect which convention the runtime uses by comparing
+against MODEL_FLOPS (see ``flops_convention``) and record the choice.
+
+Collective bytes are parsed from the compiled HLO text: operand bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Ops whose replica groups span pods (the leading 'pod' mesh axis) are
+charged to DCI, the rest to ICI.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, Optional, Tuple
+
+# ---- TPU v5e-class hardware constants (per chip) ----
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s/link (intra-pod)
+DCI_BW = 6.25e9            # bytes/s (cross-pod, ~8x slower; DESIGN.md §3)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Parse 'bf16[8,128]{1,0}' -> bytes.  Tuple shapes: sum elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """PER-CHIP collective link traffic from the SPMD-partitioned HLO.
+
+    Shapes in the partitioned module are per-device LOCAL buffers; ring-
+    algorithm traffic per chip as a function of the printed OUTPUT shape:
+        all-reduce:         2 x out        (reduce-scatter + all-gather)
+        all-gather:         1 x out        (out is the gathered buffer)
+        reduce-scatter:     1 x out x G    (input = G x out moves through)
+        all-to-all:         1 x out
+        collective-permute: 1 x out
+    Split into intra-pod (ICI) vs cross-pod (DCI) by whether the first
+    replica group spans a 256-device (pod) boundary."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["cross_pod"] = 0.0
+    out["intra_pod"] = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+(\S+)\(", s)
+        if not m:
+            continue
+        op = m.group(2).split(".")[0]
+        if op not in _COLLECTIVES:
+            continue
+        nbytes = _shape_bytes(m.group(1))
+
+        # group size G and cross-pod detection
+        G, cross = 1, False
+        gm = re.search(r"replica_groups=\{\{([\d,]+)", s)
+        if gm:
+            ids = [int(x) for x in gm.group(1).split(",") if x]
+            G = max(len(ids), 1)
+            if ids and (max(ids) // 256) != (min(ids) // 256):
+                cross = True
+        else:
+            gm2 = re.search(
+                r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                r"(?:T\(([\d,]+)\))?", s)
+            if gm2:
+                import numpy as _np
+
+                n_groups, G = int(gm2.group(1)), int(gm2.group(2))
+                dims = [int(x) for x in gm2.group(3).split(",")]
+                arr = _np.arange(int(_np.prod(dims))).reshape(dims)
+                if gm2.group(4):
+                    perm = [int(x) for x in gm2.group(4).split(",")]
+                    arr = arr.transpose(perm)
+                groups = arr.reshape(n_groups, G)
+                # cross iff ANY group spans the 256-device pod boundary
+                cross = bool(((groups.max(1) // 256)
+                              != (groups.min(1) // 256)).any())
+
+        if op == "all-reduce":
+            traffic = 2.0 * nbytes
+        elif op == "reduce-scatter":
+            traffic = float(G) * nbytes
+        else:
+            traffic = float(nbytes)
+        out[op] += traffic
+        if cross:
+            out["cross_pod"] += traffic
+        else:
+            out["intra_pod"] += traffic
+    return {k: v for k, v in out.items() if v > 0}
+
+
+# ----------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (dense train) / 2 N D (inference), N = active
+    params, D = tokens processed this step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n * tokens
+
+
+def hbm_traffic_model(cfg, shape, chips: int) -> float:
+    """Analytic per-chip HBM traffic (bytes/step) — the fused lower bound.
+
+    XLA's 'bytes accessed' counts every HLO operand pre-fusion and
+    overestimates real HBM traffic by 5-50x; this model counts what a
+    well-fused executable must actually move:
+      train:   params+grads+2 Adam moments r/w (~6x param bytes) +
+               activations (~12 d_model r/w per token-layer with remat)
+      prefill: params read + ~6x activation traffic
+      decode:  params read + KV/state cache read+write
+    """
+    pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    cbytes = 2 if cfg.compute_dtype == "bfloat16" else 4
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    L = cfg.num_layers + cfg.encoder_layers
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        param_traffic = n_total * pbytes * 6.0
+        act_traffic = tokens * d * L * cbytes * 12.0
+        return (param_traffic + act_traffic) / chips
+
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return (n_total * pbytes + tokens * d * L * cbytes * 6.0) / chips
+
+    # decode: one token per sequence; whole cache is streamed
+    tokens = shape.global_batch
+    cache_bytes = 0.0
+    if cfg.attention == "mla" and cfg.mla is not None:
+        per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        cache_bytes = (shape.global_batch * min(shape.seq_len, 1 << 30)
+                       * per_tok * cfg.num_layers * cbytes)
+    elif cfg.attention == "gqa":
+        win = cfg.long_context_window if shape.name == "long_500k" else None
+        s_eff = min(shape.seq_len, win or shape.seq_len)
+        per_tok = 2 * cfg.num_kv_heads * cfg.resolved_head_dim()
+        cache_bytes = (shape.global_batch * s_eff * per_tok
+                       * cfg.num_layers * cbytes)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        state = (shape.global_batch * s.num_heads(d) * s.head_dim
+                 * s.state_dim * 4)
+        cache_bytes += state * cfg.num_layers * 2  # read+write
+    return (n_total * pbytes + cache_bytes
+            + tokens * d * L * cbytes * 6.0) / chips
+
+
+def roofline_terms(cfg, shape, result: Dict) -> Dict:
+    """result: dict from dryrun_one (flops, hlo_bytes, collective_bytes)."""
+    chips = result["devices"]
+    mf = model_flops(cfg, shape)
+    flops = result["flops"]
+    hbytes = result["hlo_bytes"]
+    # XLA cost_analysis on the partitioned module reports per-device
+    # numbers; detect whole-module reporting (>= 50% of MODEL_FLOPS).
+    per_device = flops < 0.5 * mf
+    if not per_device:
+        flops = flops / chips
+        hbytes = hbytes / chips
+    coll = result.get("collective_bytes", {})
+    cross = coll.get("cross_pod", 0.0)
+    intra = sum(v for k, v in coll.items()
+                if k in _COLLECTIVES) - cross
+    compute_s = flops / PEAK_FLOPS
+    memory_upper_s = hbytes / HBM_BW
+    memory_s = hbm_traffic_model(cfg, shape, chips) / HBM_BW
+    # collective bytes are already per-chip link traffic (local shapes)
+    collective_s = intra / ICI_BW + cross / DCI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_upper_s": memory_upper_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_frac": mf / chips / max(flops, 1.0),
+        "per_device_convention": bool(per_device),
+    }
+
+
+def roofline_report(cfg, shape, result: Dict) -> str:
+    t = roofline_terms(cfg, shape, result)
+    return (f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+            f"(upper={t['memory_upper_s']:.3e}s) "
+            f"collective={t['collective_s']:.3e}s dominant={t['dominant']} "
+            f"useful={t['useful_flops_frac']:.2f}")

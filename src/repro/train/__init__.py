@@ -1,0 +1,7 @@
+from .train_step import abstract_train_state, make_train_state, make_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = [
+    "make_train_state", "abstract_train_state", "make_train_step",
+    "Trainer", "TrainerConfig",
+]

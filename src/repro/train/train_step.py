@@ -1,0 +1,51 @@
+"""Train step factory: loss -> grad -> AdamW update, as one jit-able pure
+function over a TrainState dict {"params", "opt"}.
+
+Under pjit/NamedSharding, gradients inherit the params' (fsdp, model)
+shardings, so XLA emits reduce-scatter/all-gather for the data-sharded
+dims and all-reduce across the replicated pod axis — the TPU-native
+equivalent of the paper's worker->PS push/pull (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import Model
+from ..optim import AdamWConfig, adamw_init, adamw_update, linear_warmup_cosine
+
+
+def make_train_state(model: Model, key, opt_cfg: AdamWConfig) -> Dict:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+
+def abstract_train_state(model: Model, opt_cfg: AdamWConfig) -> Dict:
+    """ShapeDtypeStruct train state (dry-run: no allocation)."""
+    return jax.eval_shape(
+        lambda: make_train_state(model, jax.random.key(0), opt_cfg))
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    total_steps: int = 10_000,
+    warmup: int = 200,
+) -> Callable:
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        lr_scale = linear_warmup_cosine(state["opt"]["step"], warmup, total_steps)
+        params, opt, opt_metrics = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg, lr_scale)
+        new_state = {"params": params, "opt": opt}
+        return new_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step

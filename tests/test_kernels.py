@@ -1,0 +1,149 @@
+"""Pallas kernel validation: interpret-mode execution vs ref.py oracles,
+swept over shapes and dtypes (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- flash
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,D", [
+    (1, 1, 128, 64),
+    (2, 2, 256, 64),
+    (1, 4, 256, 128),
+    (2, 1, 512, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes_dtypes(B, H, S, D, causal, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, S, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, S, H, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, S, H, D), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                              interpret=True)
+    BH = B * H
+    ref_out = ref.reference_attention(
+        q.transpose(0, 2, 1, 3).reshape(BH, S, D),
+        k.transpose(0, 2, 1, 3).reshape(BH, S, D),
+        v.transpose(0, 2, 1, 3).reshape(BH, S, D),
+        causal=causal,
+    ).reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref_out, np.float32),
+        **_tol(dtype))
+
+
+@pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64), (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_k):
+    B, H, S, D = 1, 2, 256, 64
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, H, D))
+    v = jax.random.normal(k3, (B, S, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, block_q=block_q,
+                              block_k=block_k, interpret=True)
+    ref_out = ops.flash_attention(q, k, v, causal=True, block_q=S,
+                                  block_k=S, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_cross_lengths():
+    """S_q != S_k (e.g. chunked prefill appending to a prefix)."""
+    B, H, D = 1, 2, 32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (B, 128, H, D))
+    k = jax.random.normal(k2, (B, 256, H, D))
+    v = jax.random.normal(k3, (B, 256, H, D))
+    out = ops.flash_attention(q, k, v, causal=False, interpret=True)
+    BH = B * H
+    ref_out = ref.reference_attention(
+        q.transpose(0, 2, 1, 3).reshape(BH, 128, D),
+        k.transpose(0, 2, 1, 3).reshape(BH, 256, D),
+        v.transpose(0, 2, 1, 3).reshape(BH, 256, D), causal=False,
+    ).reshape(B, H, 128, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_flash_rowsum_stability(seed):
+    """Softmax rows must sum to 1 -> attention of constant V is constant."""
+    B, H, S, D = 1, 1, 128, 32
+    q = jax.random.normal(jax.random.PRNGKey(seed), (B, S, H, D)) * 10.0
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (B, S, H, D)) * 10.0
+    v = jnp.ones((B, S, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("N,d", [(8, 64), (256, 128), (512, 96), (96, 512)])
+def test_rmsnorm_shapes_dtypes(N, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (N, d), jnp.float32).astype(dtype)
+    scale = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32) + 1.0
+    out = ops.rmsnorm(x, scale, interpret=True)
+    ref_out = ref.reference_rmsnorm(x, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref_out, np.float32), **_tol(dtype))
+
+
+def test_rmsnorm_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 16, 64))
+    scale = jnp.ones((64,))
+    out = ops.rmsnorm(x, scale, interpret=True)
+    assert out.shape == x.shape
+    ref_out = ref.reference_rmsnorm(x, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_rmsnorm_unit_rms(seed):
+    """With scale=1, output rows have unit RMS."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 128)) * 5.0
+    out = ops.rmsnorm(x, jnp.ones((128,)), interpret=True)
+    rms = jnp.sqrt(jnp.mean(jnp.square(out), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- window
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    """Windowed kernel vs the model-layer chunked reference."""
+    from repro.models.attention import grouped_attention
+
+    B, H, S, D = 1, 2, 256, 32
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, H, D))
+    v = jax.random.normal(k3, (B, S, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    pos = jnp.arange(S)
+    ref_out = grouped_attention(q, k, v, pos, pos, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_window_restricts_attention():
+    """With window=1 each token attends only to itself: out == v."""
+    B, H, S, D = 1, 1, 128, 16
+    q = jax.random.normal(jax.random.PRNGKey(6), (B, S, H, D)) * 3
+    k = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, D)) * 3
+    v = jax.random.normal(jax.random.PRNGKey(8), (B, S, H, D))
+    out = ops.flash_attention(q, k, v, causal=True, window=1, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v),
+                               rtol=1e-5, atol=1e-5)

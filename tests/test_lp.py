@@ -1,0 +1,93 @@
+"""Unit + property tests for the dense simplex solver (core/lp.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import linprog
+
+
+def test_basic_max():
+    # min -x1 - 2 x2 s.t. x1 + x2 <= 4, x1 <= 2  ->  x = (0, 4)
+    r = linprog(np.array([-1.0, -2.0]),
+                A_ub=np.array([[1.0, 1.0], [1.0, 0.0]]),
+                b_ub=np.array([4.0, 2.0]))
+    assert r.status == "optimal"
+    assert r.objective == pytest.approx(-8.0)
+    assert np.allclose(r.x, [0.0, 4.0])
+
+
+def test_equality_and_cover():
+    r = linprog(np.array([1.0, 1.0, 1.0]),
+                A_ub=np.array([[-1.0, -1.0, 0.0]]), b_ub=np.array([-2.0]),
+                A_eq=np.array([[0.0, 1.0, 1.0]]), b_eq=np.array([1.5]))
+    assert r.status == "optimal"
+    assert r.objective == pytest.approx(2.0)
+
+
+def test_infeasible():
+    r = linprog(np.array([1.0]),
+                A_ub=np.array([[1.0], [-1.0]]), b_ub=np.array([1.0, -3.0]))
+    assert r.status == "infeasible"
+
+
+def test_unbounded():
+    r = linprog(np.array([-1.0]))
+    assert r.status == "unbounded"
+
+
+def test_degenerate_zero_rhs():
+    # x1 <= 0 forces x1 = 0
+    r = linprog(np.array([1.0, 1.0]),
+                A_ub=np.array([[1.0, 0.0], [-1.0, -1.0]]),
+                b_ub=np.array([0.0, -1.0]))
+    assert r.status == "optimal"
+    assert r.x[0] == pytest.approx(0.0, abs=1e-9)
+    assert r.objective == pytest.approx(1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_feasible_and_not_worse_than_vertices(seed):
+    """Random small LPs: the solution must be feasible, and at least as good
+    as every feasible canonical point we can construct."""
+    rng = np.random.default_rng(seed)
+    n, m = 3, 3
+    c = rng.uniform(-1, 1, n)
+    A = rng.uniform(0.1, 1.0, (m, n))
+    b = rng.uniform(1.0, 3.0, m)
+    res = linprog(c, A_ub=A, b_ub=b)
+    if res.status == "unbounded":
+        assert (c < 0).any()
+        return
+    assert res.status == "optimal"
+    assert (A @ res.x <= b + 1e-6).all()
+    assert (res.x >= -1e-9).all()
+    # compare against axis-aligned extreme candidates
+    for j in range(n):
+        tmax = np.min(b / A[:, j])
+        x = np.zeros(n)
+        x[j] = tmax
+        assert res.objective <= c @ x + 1e-6
+    assert res.objective <= 0.0 + 1e-9 or (c >= 0).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_cover_packing_mix(seed):
+    """Cover + packing rows: optimum sits between LP bounds and respects
+    both families."""
+    rng = np.random.default_rng(seed)
+    n = 4
+    c = rng.uniform(0.1, 1.0, n)          # positive costs
+    cover = rng.uniform(0.5, 1.0, n)
+    need = rng.uniform(1.0, 4.0)
+    cap = rng.uniform(2.0, 8.0, n)
+    A_ub = np.vstack([-cover[None, :], np.eye(n)])
+    b_ub = np.concatenate([[-need], cap])
+    res = linprog(c, A_ub=A_ub, b_ub=b_ub)
+    if (cover * cap).sum() < need:        # genuinely infeasible
+        assert res.status == "infeasible"
+        return
+    assert res.status == "optimal"
+    assert cover @ res.x >= need - 1e-6
+    assert (res.x <= cap + 1e-6).all()

@@ -1,0 +1,109 @@
+"""Extra model-level tests: hybrid window vectors, enc-dec cross-attn,
+long-context windowed decode via window_override, scan-vs-unroll parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.models import build_model, concrete_batch
+from repro.models.blocks import BIG_WINDOW, layer_windows
+
+
+def test_hymba_layer_windows():
+    """Hymba: sliding windows everywhere except global layers (every k-th
+    and the last)."""
+    cfg = get_config("hymba-1.5b")
+    w = layer_windows(cfg, cfg.num_layers)
+    w = np.asarray(w)
+    assert w.shape == (32,)
+    assert w[0] == BIG_WINDOW          # layer 0 global
+    assert w[16] == BIG_WINDOW         # every 16th
+    assert w[31] == BIG_WINDOW         # last layer
+    assert w[1] == cfg.sliding_window == 1024
+
+
+def test_layer_windows_override():
+    cfg = get_config("qwen3-32b")       # full attention by default
+    assert layer_windows(cfg, cfg.num_layers) is None
+    w = layer_windows(cfg, cfg.num_layers, override_window=8192)
+    assert np.asarray(w).min() == 8192
+
+
+def test_windowed_decode_override_matches_windowed_forward():
+    """long_500k carve-in: decode with window_override through a ring
+    cache == forward with the same window."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S, W = 24, 8
+    batch = concrete_batch(cfg, InputShape("w", S, 1, "prefill"), seed=1)
+    # reference: full prefill with the window override
+    ref_logits, _ = model.prefill(params, batch, cache_len=S,
+                                  window_override=W)
+    # incremental: ring cache of exactly W slots
+    b1 = {"tokens": batch["tokens"][:, :1]}
+    logits, state = model.prefill(params, b1, cache_len=W, window_override=W)
+    for t in range(1, S):
+        logits, state = model.decode(params, batch["tokens"][:, t : t + 1],
+                                     state, window_override=W)
+    err = float(jnp.max(jnp.abs(ref_logits - logits)))
+    ref = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    assert err / ref < 5e-3
+
+
+def test_encdec_cross_attention_uses_encoder():
+    """Zeroing the encoder frames must change decoder logits."""
+    cfg = get_config("seamless-m4t-medium", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, InputShape("x", 32, 2, "train"), seed=2)
+    loss1, _ = model.train_loss(params, batch)
+    batch0 = dict(batch)
+    batch0["frames"] = jnp.zeros_like(batch["frames"])
+    loss2, _ = model.train_loss(params, batch0)
+    assert abs(float(loss1) - float(loss2)) > 1e-6
+
+
+def test_unroll_matches_scan():
+    """The dry-run probe's unrolled stack must equal the scanned stack."""
+    cfg = get_config("qwen3-32b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    batch = concrete_batch(cfg, InputShape("u", 32, 2, "train"), seed=4)
+    loss_scan, _ = model.train_loss(params, batch)
+    cfg_u = dataclasses.replace(cfg, unroll_layers=True)
+    model_u = build_model(cfg_u)
+    loss_unroll, _ = model_u.train_loss(params, batch)
+    assert float(loss_scan) == pytest.approx(float(loss_unroll), rel=1e-5)
+
+
+def test_ce_gather_matches_onehot():
+    """The §Perf before/after CE flag is numerically identical."""
+    cfg = get_config("gemma-7b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    batch = concrete_batch(cfg, InputShape("c", 32, 2, "train"), seed=6)
+    loss_oh, _ = model.train_loss(params, batch)
+    cfg_g = dataclasses.replace(cfg, ce_impl="gather")
+    loss_g, _ = build_model(cfg_g).train_loss(params, batch)
+    assert float(loss_oh) == pytest.approx(float(loss_g), rel=1e-6)
+
+
+def test_ssm_split_in_proj_runs():
+    """§Perf pair-2 flag: split-projection variant trains and serves."""
+    cfg = dataclasses.replace(get_config("mamba2-780m", reduced=True),
+                              ssm_split_in_proj=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    batch = concrete_batch(cfg, InputShape("s", 32, 2, "train"), seed=8)
+    loss, _ = model.train_loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    pre = concrete_batch(cfg, InputShape("p", 16, 2, "prefill"), seed=9)
+    logits, state = model.prefill(params, pre, cache_len=24)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, state = model.decode(params, tok, state)
+    assert bool(jnp.isfinite(logits).all())

@@ -1,0 +1,101 @@
+"""Tests for the randomized rounding scheme (Lemmas 1-2, Theorems 3-4)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rounding import (
+    approximation_ratio,
+    g_delta_cover,
+    g_delta_packing,
+    randomized_round,
+    round_until_feasible,
+)
+
+
+def test_g_delta_packing_in_unit_interval():
+    for delta in (0.02, 0.1, 0.5, 1.0):
+        for W2 in (1.0, 5.0, 15.0, 100.0):
+            g = g_delta_packing(delta, W2, num_packing_rows=401)
+            assert 0.0 < g <= 1.0
+
+
+def test_g_delta_cover_above_one():
+    for delta in (0.02, 0.1, 0.5, 1.0):
+        for W1 in (1.0, 10.0, 200.0):
+            g = g_delta_cover(delta, W1)
+            assert g > 1.0
+
+
+def test_g_delta_monotone_in_w():
+    """Larger W (more head-room) => less distortion (G closer to 1)."""
+    gs = [g_delta_packing(0.1, w, 401) for w in (2.0, 10.0, 50.0, 500.0)]
+    assert all(gs[i] <= gs[i + 1] + 1e-12 for i in range(len(gs) - 1))
+    gc = [g_delta_cover(0.1, w) for w in (2.0, 10.0, 50.0, 500.0)]
+    assert all(gc[i] >= gc[i + 1] - 1e-12 for i in range(len(gc) - 1))
+
+
+def test_eq29_solves_chernoff_fixed_point():
+    """G from Eq. (29) must satisfy exp(-(1/G - 1)^2 G W/3) = delta/(3r)."""
+    delta, W, r = 0.3, 12.0, 50
+    g = g_delta_packing(delta, W, r)
+    lhs = math.exp(-((1.0 / g - 1.0) ** 2) * g * W / 3.0)
+    assert lhs == pytest.approx(delta / (3 * r), rel=1e-6)
+
+
+def test_eq30_solves_chernoff_fixed_point():
+    """G from Eq. (30) must satisfy exp(-(1 - 1/G)^2 G W/2) = delta/3."""
+    delta, W = 0.3, 12.0
+    g = g_delta_cover(delta, W)
+    lhs = math.exp(-((1.0 - 1.0 / g) ** 2) * g * W / 2.0)
+    assert lhs == pytest.approx(delta / 3.0, rel=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rounding_unbiased_expectation(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 10, 6)
+    g = 1.0
+    draws = np.stack([randomized_round(x, g, rng) for _ in range(400)])
+    assert np.allclose(draws.mean(axis=0), x, atol=0.35)
+
+
+def test_round_until_feasible_finds_feasible_easy():
+    rng = np.random.default_rng(0)
+    x = np.array([2.5, 3.5])
+    A = np.ones((1, 2))          # cover: x1+x2 >= 5
+    a = np.array([5.0])
+    B = np.eye(2)                # packing: x_i <= 10
+    b = np.array([10.0, 10.0])
+    res = round_until_feasible(x, A, a, B, b, g_delta=1.0, rng=rng, max_rounds=64)
+    assert res.feasible
+    assert (A @ res.x >= a).all() and (B @ res.x <= b).all()
+
+
+def test_round_until_feasible_reports_violations_when_impossible():
+    rng = np.random.default_rng(0)
+    x = np.array([5.0])
+    A = np.ones((1, 1))
+    a = np.array([8.0])          # cover x >= 8 but packing x <= 6
+    B = np.eye(1)
+    b = np.array([6.0])
+    res = round_until_feasible(x, A, a, B, b, g_delta=1.0, rng=rng, max_rounds=16)
+    assert not res.feasible
+    assert res.cover_violation > 0 or res.packing_violation > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.1, 1.0))
+def test_empirical_cost_matches_lemma_scaling(seed, delta):
+    """Rounded cost averages to ~G_delta x fractional cost (Eq. 31)."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.5, 6.0, 5)
+    c = rng.uniform(0.1, 1.0, 5)
+    g = g_delta_cover(delta, float(x.sum()))
+    draws = np.stack([randomized_round(x, g, rng) for _ in range(300)])
+    mean_cost = (draws @ c).mean()
+    assert mean_cost == pytest.approx(g * (c @ x), rel=0.15)
+    # and is well within the 3G/delta Markov bound of the lemmas
+    assert mean_cost <= approximation_ratio(g, delta) * (c @ x)

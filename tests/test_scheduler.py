@@ -1,0 +1,230 @@
+"""Integration + invariant tests for the PD-ORS scheduler (Algorithms 1-4)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Allocation,
+    JobSpec,
+    SigmoidUtility,
+    SubproblemConfig,
+    WorkloadConfig,
+    estimate_price_params,
+    find_best_schedule,
+    make_cluster,
+    offline_optimum,
+    run_baseline,
+    run_oasis,
+    run_pdors,
+    solve_theta,
+    synthetic_jobs,
+)
+from repro.core.pricing import PriceTable
+
+
+def small_job(job_id=0, arrival=0, V=2000, F=16, gamma=2.0, **kw):
+    defaults = dict(
+        epochs=1, num_samples=V, batch_size=F, tau=1e-3, grad_size=100.0,
+        gamma=gamma, bw_internal=1e6, bw_external=2e5,
+        worker_demand={"gpu": 1.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        ps_demand={"gpu": 0.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        utility=SigmoidUtility(theta1=50.0, theta2=0.5, theta3=5.0),
+    )
+    defaults.update(kw)
+    return JobSpec(job_id=job_id, arrival=arrival, **defaults)
+
+
+def test_fact1_locality():
+    """Fact 1: internal rate iff one machine hosts everything."""
+    a = Allocation(workers={0: 4}, ps={0: 2})
+    assert a.is_internal()
+    assert not Allocation(workers={0: 4}, ps={1: 2}).is_internal()
+    assert not Allocation(workers={0: 2, 1: 2}, ps={0: 2}).is_internal()
+    assert not Allocation(workers={0: 4}, ps={0: 1, 1: 1}).is_internal()
+
+
+def test_samples_trained_uses_locality():
+    j = small_job()
+    co = Allocation(workers={0: 4}, ps={0: 2})
+    spread = Allocation(workers={0: 2, 1: 2}, ps={0: 2})
+    assert co.samples_trained(j) > spread.samples_trained(j)
+    # throughput matches Eq. (1) exactly
+    assert co.samples_trained(j) == pytest.approx(4 / j.time_per_sample(True))
+    assert spread.samples_trained(j) == pytest.approx(4 / j.time_per_sample(False))
+
+
+def test_theta_prefers_internal_when_it_fits():
+    j = small_job(V=1000)
+    cl = make_cluster(4, 10)
+    pt = PriceTable(estimate_price_params([j], cl, 10), cl)
+    th = solve_theta(j, cl, pt, 0, v=1000.0)
+    assert th is not None
+    # 1000 samples x ~1e-3 slots/sample ≈ 1-2 workers: fits one machine
+    assert th.mode == "internal"
+    assert th.alloc.is_internal()
+
+
+def test_theta_workload_actually_covered():
+    j = small_job(V=4000, F=32)
+    cl = make_cluster(4, 10)
+    pt = PriceTable(estimate_price_params([j], cl, 10), cl)
+    for v in (500.0, 1500.0, 3000.0):
+        th = solve_theta(j, cl, pt, 0, v)
+        if th is None:
+            continue
+        assert th.alloc.samples_trained(j) >= v - 1e-6
+
+
+def test_theta_respects_batch_cap():
+    j = small_job(V=100000, F=8)
+    cl = make_cluster(4, 10)
+    pt = PriceTable(estimate_price_params([j], cl, 10), cl)
+    th = solve_theta(j, cl, pt, 0, v=100000.0)
+    # needs more than F workers in one slot -> infeasible (constraint 4)
+    assert th is None
+
+
+def test_schedule_covers_total_workload():
+    j = small_job(V=20000, F=32)
+    cl = make_cluster(4, 12)
+    pt = PriceTable(estimate_price_params([j], cl, 12), cl)
+    s = find_best_schedule(j, cl, pt, 12, quanta=12)
+    assert s is not None
+    assert s.samples() >= j.total_workload() - 1e-6
+    assert s.completion < 12
+    assert s.payoff > 0
+
+
+def test_pdors_capacity_never_exceeded():
+    cfg = WorkloadConfig(num_jobs=15, horizon=12, seed=3, batch=(20, 100),
+                         workload_scale=0.1)
+    jobs = synthetic_jobs(cfg)
+    cl = make_cluster(8, 12)
+    run_pdors(jobs, cl, quanta=12)
+    for t in range(12):
+        for h in range(cl.num_machines):
+            for r in cl.resources:
+                assert cl.used(t, h, r) <= cl.capacity(h, r) + 1e-6
+
+
+def test_pdors_admitted_jobs_complete():
+    cfg = WorkloadConfig(num_jobs=10, horizon=12, seed=4, batch=(20, 100),
+                         workload_scale=0.1)
+    jobs = synthetic_jobs(cfg)
+    res = run_pdors(jobs, make_cluster(8, 12), quanta=12)
+    assert len(res.admitted) >= 1
+    for rec in res.admitted:
+        assert rec.schedule.samples() >= rec.job.total_workload() - 1e-6
+        assert rec.schedule.completion >= rec.job.arrival
+        assert rec.utility == pytest.approx(
+            rec.job.utility(rec.schedule.completion - rec.job.arrival)
+        )
+
+
+def test_pdors_no_allocation_before_arrival():
+    """Constraint (7)."""
+    cfg = WorkloadConfig(num_jobs=10, horizon=12, seed=5, batch=(20, 100),
+                         workload_scale=0.1)
+    jobs = synthetic_jobs(cfg)
+    res = run_pdors(jobs, make_cluster(8, 12), quanta=12)
+    for rec in res.admitted:
+        assert min(rec.schedule.slots) >= rec.job.arrival
+
+
+def test_prices_increase_with_load():
+    j = small_job()
+    cl = make_cluster(2, 10)
+    params = estimate_price_params([j], cl, 10)
+    p0 = params.price(0.0, 72.0, "gpu")
+    p_half = params.price(36.0, 72.0, "gpu")
+    p_full = params.price(72.0, 72.0, "gpu")
+    assert p0 == pytest.approx(params.L)
+    assert p0 < p_half < p_full
+    assert p_full == pytest.approx(max(params.U["gpu"], params.L * (1 + 1e-9)))
+
+
+def test_rejects_when_cluster_saturated():
+    """After enough admissions, prices must start rejecting jobs."""
+    jobs = [small_job(job_id=i, arrival=0, V=30000, F=64) for i in range(25)]
+    cl = make_cluster(1, 6)  # tiny cluster
+    res = run_pdors(jobs, cl, quanta=6)
+    assert 1 <= len(res.admitted) < len(jobs)
+
+
+def test_oasis_never_colocates():
+    cfg = WorkloadConfig(num_jobs=10, horizon=12, seed=6, batch=(20, 100),
+                         workload_scale=0.1)
+    jobs = synthetic_jobs(cfg)
+    res = run_oasis(jobs, make_cluster(8, 12), quanta=12)
+    for rec in res.admitted:
+        for alloc in rec.schedule.slots.values():
+            assert not alloc.is_internal()
+            w_machines = {h for h, w in alloc.workers.items() if w > 0}
+            p_machines = {h for h, s in alloc.ps.items() if s > 0}
+            assert not (w_machines & p_machines)
+
+
+def test_baselines_run_and_account():
+    cfg = WorkloadConfig(num_jobs=10, horizon=12, seed=7, batch=(20, 100),
+                         workload_scale=0.05)
+    jobs = synthetic_jobs(cfg)
+    for name in ("fifo", "drf", "dorm"):
+        out = run_baseline(name, jobs, make_cluster(8, 12))
+        assert out.total_utility >= 0
+        for jid, c in out.completions.items():
+            job = next(j for j in jobs if j.job_id == jid)
+            assert c >= job.arrival
+            assert out.utilities[jid] == pytest.approx(job.utility(c - job.arrival))
+
+
+def test_pdors_beats_baselines_on_average():
+    """Paper Figs. 6-9 qualitative claim, averaged over seeds."""
+    tot = {"pdors": 0.0, "fifo": 0.0, "drf": 0.0, "dorm": 0.0}
+    for seed in range(3):
+        cfg = WorkloadConfig(num_jobs=20, horizon=14, seed=seed,
+                             batch=(50, 200), workload_scale=0.3)
+        jobs = synthetic_jobs(cfg)
+        tot["pdors"] += run_pdors(jobs, make_cluster(10, 14), quanta=14).total_utility
+        for name in ("fifo", "drf", "dorm"):
+            tot[name] += run_baseline(name, jobs, make_cluster(10, 14)).total_utility
+    assert tot["pdors"] > tot["fifo"]
+    assert tot["pdors"] > tot["drf"]
+    assert tot["pdors"] > tot["dorm"]
+
+
+def test_offline_optimum_bounds_pdors():
+    """OPT >= PD-ORS on tiny instances, and ratio is moderate (Fig. 10)."""
+    jobs = [
+        small_job(job_id=i, arrival=i % 2, V=800 + 200 * i, F=6, gamma=2.0,
+                  utility=SigmoidUtility(40.0 - 5 * i, 0.5, 3.0))
+        for i in range(4)
+    ]
+    cl = make_cluster(2, 6)
+    opt = offline_optimum(jobs, cl)
+    res = run_pdors(jobs, make_cluster(2, 6), quanta=6)
+    assert opt.total_utility >= res.total_utility - 1e-6
+    if res.total_utility > 0:
+        assert opt.total_utility / res.total_utility < 4.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_scheduler_invariants(seed):
+    """For random workloads: capacity respected; admitted jobs covered;
+    utility accounting consistent."""
+    cfg = WorkloadConfig(num_jobs=6, horizon=8, seed=seed, batch=(10, 60),
+                         workload_scale=0.05)
+    jobs = synthetic_jobs(cfg)
+    cl = make_cluster(4, 8)
+    res = run_pdors(jobs, cl, quanta=8)
+    for t in range(8):
+        for h in range(4):
+            for r in cl.resources:
+                assert cl.used(t, h, r) <= cl.capacity(h, r) + 1e-6
+    for rec in res.admitted:
+        assert rec.schedule.samples() >= rec.job.total_workload() - 1e-6
+    assert res.total_utility == pytest.approx(
+        sum(r.utility for r in res.admitted)
+    )
