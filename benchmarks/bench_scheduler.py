@@ -1,0 +1,217 @@
+"""Scheduler-throughput benchmark: vectorized PD-ORS vs the frozen pre-PR
+core vs the §5 baselines, over an (H, T, num_jobs) grid.
+
+For every grid point and policy we measure wall-clock jobs/sec and the
+p50/p95 per-``offer()`` latency (per-slot step latency for the slot-driven
+baselines), plus total utility and admissions so the numbers stay tied to
+scheduling quality. The PD-ORS rows additionally record the speedup of the
+vectorized core over the pre-PR reference and assert bit-identical
+admission decisions + total utility at the shared seed (the perf claim is
+only meaningful if the answer is unchanged).
+
+Workload regime: the default grid runs the online many-small-jobs mix
+(``workload_scale=0.003`` — jobs sized so a single machine can host them,
+the regime where an *online* scheduler's own latency is the bottleneck and
+the ROADMAP's heavy-traffic goal lives). The DP granularity is the library
+default ``quanta=32``. A heavy-contention point (``workload_scale=0.3``,
+jobs needing 100+ workers spread across machines, every theta solving the
+cover/packing LP) is included so the smaller speedup of the LP-bound
+regime is reported honestly alongside.
+
+Output: ``BENCH_scheduler.json`` (or --out) with one record per
+(grid point, policy).
+
+Usage:
+    python -m benchmarks.bench_scheduler            # full grid (~tens of min)
+    python -m benchmarks.bench_scheduler --smoke    # tiny grid, < 60 s
+    python -m benchmarks.bench_scheduler --points 50x40x100 --no-reference
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    PDORS,
+    WorkloadConfig,
+    estimate_price_params,
+    make_cluster,
+    run_baseline,
+    synthetic_jobs,
+)
+from repro.core._reference import PDORSReference, make_cluster_reference
+
+# (H, T, jobs, workload_scale); acceptance point 50x40x100 runs last so
+# partial runs still produce the smaller rows first
+ONLINE_SCALE = 0.003   # many-small-jobs online mix (see module docstring)
+HEAVY_SCALE = 0.3      # LP-bound contention mix
+FULL_GRID = [
+    (10, 10, 20, ONLINE_SCALE),
+    (25, 20, 50, ONLINE_SCALE),
+    (25, 20, 50, HEAVY_SCALE),
+    (50, 40, 100, ONLINE_SCALE),
+]
+SMOKE_GRID = [(6, 8, 10, ONLINE_SCALE)]
+BENCH_BATCH = (50, 200)
+QUANTA = 32  # DP workload granularity: the run_pdors default
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.array(xs), q)) if xs else 0.0
+
+
+def _decisions(records) -> List[tuple]:
+    out = []
+    for r in records:
+        slots = None
+        if r.schedule is not None:
+            slots = tuple(
+                (t, tuple(sorted(a.workers.items())), tuple(sorted(a.ps.items())))
+                for t, a in sorted(r.schedule.slots.items())
+            )
+        out.append((r.job.job_id, r.admitted, r.utility, slots))
+    return out
+
+
+def _run_pdors_timed(jobs, cluster, scheduler_cls, seed: int) -> Dict:
+    params = estimate_price_params(jobs, cluster, cluster.horizon)
+    sched = scheduler_cls(cluster, params, quanta=QUANTA, seed=seed)
+    lat: List[float] = []
+    t0 = time.perf_counter()
+    for job in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
+        t1 = time.perf_counter()
+        sched.offer(job)
+        lat.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    records = sched.records
+    return {
+        "wall_s": wall,
+        "jobs_per_sec": len(jobs) / wall if wall else float("inf"),
+        "latency_p50_ms": _pct(lat, 50) * 1e3,
+        "latency_p95_ms": _pct(lat, 95) * 1e3,
+        "utility": float(sum(r.utility for r in records)),
+        "admitted": sum(1 for r in records if r.admitted),
+        "decisions": _decisions(records),
+    }
+
+
+def _run_baseline_timed(name: str, jobs, cluster, seed: int) -> Dict:
+    t0 = time.perf_counter()
+    out = run_baseline(name, jobs, cluster, seed=seed)
+    wall = time.perf_counter() - t0
+    return {
+        "wall_s": wall,
+        "jobs_per_sec": len(jobs) / wall if wall else float("inf"),
+        # slot-driven baselines have no per-job offer; report per-slot cost
+        "latency_p50_ms": wall / max(cluster.horizon, 1) * 1e3,
+        "latency_p95_ms": wall / max(cluster.horizon, 1) * 1e3,
+        "utility": float(out.total_utility),
+        "admitted": len(out.completions),
+    }
+
+
+def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
+                with_reference: bool, baselines: List[str]) -> List[Dict]:
+    cfg = WorkloadConfig(num_jobs=num_jobs, horizon=T, seed=seed,
+                         batch=BENCH_BATCH, workload_scale=scale)
+    jobs = synthetic_jobs(cfg)
+    point = {"H": H, "T": T, "num_jobs": num_jobs, "seed": seed,
+             "workload_scale": scale, "quanta": QUANTA}
+    rows: List[Dict] = []
+
+    vec = _run_pdors_timed(jobs, make_cluster(H, T), PDORS, seed)
+    vec_decisions = vec.pop("decisions")
+    rows.append({**point, "policy": "pdors", **vec})
+
+    if with_reference:
+        ref = _run_pdors_timed(
+            jobs, make_cluster_reference(H, T), PDORSReference, seed
+        )
+        ref_decisions = ref.pop("decisions")
+        identical = (
+            vec_decisions == ref_decisions
+            and rows[-1]["utility"] == ref["utility"]
+        )
+        speedup = ref["wall_s"] / vec["wall_s"] if vec["wall_s"] else 0.0
+        rows[-1]["speedup_vs_reference"] = speedup
+        rows[-1]["decisions_identical_to_reference"] = identical
+        rows.append({**point, "policy": "pdors_reference", **ref,
+                     "speedup_vs_reference": 1.0})
+        if not identical:
+            print(f"!! decision divergence at H={H} T={T} N={num_jobs} "
+                  f"seed={seed}", file=sys.stderr)
+
+    for name in baselines:
+        rows.append({
+            **point, "policy": name,
+            **_run_baseline_timed(name, jobs, make_cluster(H, T), seed),
+        })
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid (<60 s) for CI")
+    ap.add_argument("--points", default=None,
+                    help="comma-separated HxTxJOBS triples, e.g. 50x40x100")
+    ap.add_argument("--workload-scale", type=float, default=None,
+                    help="override workload_scale for --points entries")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-reference", action="store_true",
+                    help="skip the slow pre-PR core measurement")
+    ap.add_argument("--baselines", default="fifo,drf,dorm",
+                    help="comma-separated baseline list (may be empty)")
+    ap.add_argument("--out", default="BENCH_scheduler.json")
+    args = ap.parse_args(argv)
+
+    if args.points:
+        scale = (args.workload_scale if args.workload_scale is not None
+                 else ONLINE_SCALE)
+        try:
+            grid = [tuple(int(v) for v in p.split("x")) + (scale,)
+                    for p in args.points.split(",")]
+            if any(len(g) != 4 for g in grid):
+                raise ValueError
+        except ValueError:
+            ap.error(f"--points must be HxTxJOBS triples, got {args.points!r}")
+    else:
+        grid = SMOKE_GRID if args.smoke else FULL_GRID
+    baselines = [b for b in args.baselines.split(",") if b]
+
+    all_rows: List[Dict] = []
+    ok = True
+    for (H, T, N, scale) in grid:
+        print(f"# bench H={H} T={T} jobs={N} scale={scale} ...", flush=True)
+        t0 = time.time()
+        rows = bench_point(H, T, N, scale, args.seed,
+                           with_reference=not args.no_reference,
+                           baselines=baselines)
+        for r in rows:
+            extra = ""
+            if "speedup_vs_reference" in r and r["policy"] == "pdors":
+                extra = (f" speedup={r['speedup_vs_reference']:.1f}x"
+                         f" identical={r['decisions_identical_to_reference']}")
+                ok &= bool(r["decisions_identical_to_reference"])
+            print(f"  {r['policy']:>16}: {r['jobs_per_sec']:8.2f} jobs/s "
+                  f"p50={r['latency_p50_ms']:8.2f}ms "
+                  f"p95={r['latency_p95_ms']:8.2f}ms "
+                  f"util={r['utility']:.1f} adm={r['admitted']}{extra}",
+                  flush=True)
+        all_rows.extend(rows)
+        print(f"# point done in {time.time()-t0:.1f}s", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump({"batch": list(BENCH_BATCH), "quanta": QUANTA,
+                   "rows": all_rows}, f, indent=2)
+    print(f"# wrote {args.out} ({len(all_rows)} rows)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

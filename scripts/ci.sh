@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full test suite + the scheduler-throughput smoke benchmark.
+#
+# The smoke benchmark runs the vectorized PD-ORS core against the frozen
+# pre-PR reference on a tiny grid (< 60 s) and exits nonzero if their
+# admission decisions or total utility diverge — catching both perf-path
+# regressions and semantic drift without the multi-minute full sweep
+# (python -m benchmarks.bench_scheduler for that).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.bench_scheduler --smoke --out BENCH_scheduler_smoke.json

@@ -1,5 +1,24 @@
 """Cluster model: machines, capacities, and the allocation ledger (Eq. 5).
 
+Dense ledger memory model
+-------------------------
+The ledger rho_h^r[t] is a single preallocated ``(T, H, R)`` float64 ndarray
+(``_used``) with a fixed resource axis (``resources`` sorted once, indexed by
+``res_index``). Capacities live in a ``(H, R)`` matrix. Every hot query is a
+slice — ``free_matrix(t)`` is one vectorized subtraction, ``commit``/
+``release`` add/subtract a per-machine demand vector, and ``utilization`` is
+a pair of axis reductions. Scalar accessors (``used``/``free``/``capacity``)
+are kept for tests and cold paths and read single ndarray cells.
+
+Per-job demand vectors (alpha_i^r / beta_i^r laid out on the cluster's
+resource axis) are memoized per job object, so the per-slot ledger update of
+Algorithm 1 step 3 costs O(R) flops instead of O(R) dict lookups per machine.
+
+``release`` clamps at zero: a double-release would otherwise silently drive
+ledger entries negative and corrupt ``free()`` and therefore the prices
+Q_h^r. In debug mode (``python`` without ``-O``) it asserts instead of
+clamping silently.
+
 Two presets are provided:
   * ``ethernet`` — the paper's own experimental setting (EC2 C5n-like):
     resources {gpu, cpu, mem, storage}, capacities ~18x a worker's demand.
@@ -10,6 +29,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
+
+import numpy as np
 
 from .job import JobSpec, Allocation, Resource
 
@@ -29,8 +50,23 @@ class Cluster:
         self.resources: List[Resource] = sorted(
             {r for m in self.machines for r in m.capacity}
         )
-        # rho_h^r[t]: allocated amount per (t, h, r)
-        self._used: Dict[Tuple[int, int, Resource], float] = {}
+        self.res_index: Dict[Resource, int] = {
+            r: k for k, r in enumerate(self.resources)
+        }
+        H, R = len(self.machines), len(self.resources)
+        self.capacity_matrix = np.zeros((H, R))  # C_h^r
+        for h, m in enumerate(self.machines):
+            for r, c in m.capacity.items():
+                self.capacity_matrix[h, self.res_index[r]] = c
+        # rho_h^r[t]: the dense allocation ledger
+        self._used = np.zeros((self.horizon, H, R))
+        # bumped on every commit/release; lets PriceTable & snapshots cache
+        # per-slot derived matrices between ledger mutations
+        self.version = 0
+        # job -> (alpha vec, beta vec) on the cluster's resource axis
+        self._demand_cache: Dict[int, Tuple[JobSpec, np.ndarray, np.ndarray]] = {}
+        # t -> (version, C - rho[t]) cache for free_matrix
+        self._free_cache: Dict[int, Tuple[int, np.ndarray]] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -38,56 +74,105 @@ class Cluster:
         return len(self.machines)
 
     def capacity(self, h: int, r: Resource) -> float:
-        return self.machines[h].capacity.get(r, 0.0)
+        k = self.res_index.get(r)
+        return float(self.capacity_matrix[h, k]) if k is not None else 0.0
 
     def used(self, t: int, h: int, r: Resource) -> float:
-        return self._used.get((t, h, r), 0.0)
+        k = self.res_index.get(r)
+        if k is None or not (0 <= t < self.horizon):
+            return 0.0
+        return float(self._used[t, h, k])
 
     def free(self, t: int, h: int, r: Resource) -> float:
         return self.capacity(h, r) - self.used(t, h, r)
 
+    def used_matrix(self, t: int) -> np.ndarray:
+        """rho[t] as an (H, R) view into the ledger (do not mutate)."""
+        return self._used[t]
+
+    def free_matrix(self, t: int) -> np.ndarray:
+        """C - rho[t] as an (H, R) array, cached until the next ledger
+        mutation (callers must not write into it)."""
+        ent = self._free_cache.get(t)
+        if ent is None or ent[0] != self.version:
+            ent = (self.version, self.capacity_matrix - self._used[t])
+            self._free_cache[t] = ent
+        return ent[1]
+
     def total_capacity(self) -> float:
         """sum_h sum_r C_h^r (used by mu in pricing, Eq. 14)."""
-        return sum(sum(m.capacity.values()) for m in self.machines)
+        return float(sum(sum(m.capacity.values()) for m in self.machines))
 
     # ------------------------------------------------------------------
-    def fits(self, t: int, job: JobSpec, alloc: Allocation) -> bool:
-        """Capacity check for one slot (Eq. 5)."""
+    def demand_vectors(self, job: JobSpec) -> Tuple[np.ndarray, np.ndarray]:
+        """(alpha_i, beta_i) as (R,) vectors on this cluster's resource axis.
+
+        Memoized per job object (keyed by job_id, validated by identity so a
+        different JobSpec reusing an id recomputes)."""
+        ent = self._demand_cache.get(job.job_id)
+        if ent is None or ent[0] is not job:
+            wd = np.array(
+                [job.worker_demand.get(r, 0.0) for r in self.resources]
+            )
+            sd = np.array([job.ps_demand.get(r, 0.0) for r in self.resources])
+            ent = (job, wd, sd)
+            self._demand_cache[job.job_id] = ent
+        return ent[1], ent[2]
+
+    def _alloc_need(
+        self, job: JobSpec, alloc: Allocation
+    ) -> List[Tuple[int, np.ndarray]]:
+        """[(h, need vector)] for every machine the allocation touches."""
+        wd, sd = self.demand_vectors(job)
+        out = []
         for h in set(alloc.workers) | set(alloc.ps):
             w = alloc.workers.get(h, 0)
             s = alloc.ps.get(h, 0)
-            for r in self.resources:
-                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
-                if need > self.free(t, h, r) + 1e-9:
-                    return False
+            out.append((h, wd * w + sd * s))
+        return out
+
+    def fits(self, t: int, job: JobSpec, alloc: Allocation) -> bool:
+        """Capacity check for one slot (Eq. 5)."""
+        if 0 <= t < self.horizon:
+            free = self.capacity_matrix - self._used[t]
+        else:
+            free = self.capacity_matrix
+        for h, need in self._alloc_need(job, alloc):
+            if np.any(need > free[h] + 1e-9):
+                return False
         return True
 
     def commit(self, t: int, job: JobSpec, alloc: Allocation) -> None:
         """rho update of Algorithm 1 step 3."""
-        for h in set(alloc.workers) | set(alloc.ps):
-            w = alloc.workers.get(h, 0)
-            s = alloc.ps.get(h, 0)
-            for r in self.resources:
-                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
-                if need:
-                    self._used[(t, h, r)] = self.used(t, h, r) + need
+        if not (0 <= t < self.horizon):
+            return
+        self.version += 1
+        for h, need in self._alloc_need(job, alloc):
+            self._used[t, h] += need
 
     def release(self, t: int, job: JobSpec, alloc: Allocation) -> None:
-        for h in set(alloc.workers) | set(alloc.ps):
-            w = alloc.workers.get(h, 0)
-            s = alloc.ps.get(h, 0)
-            for r in self.resources:
-                need = job.worker_demand.get(r, 0.0) * w + job.ps_demand.get(r, 0.0) * s
-                if need:
-                    self._used[(t, h, r)] = self.used(t, h, r) - need
+        """Inverse of commit, clamped at zero (a double-release must not
+        drive the ledger negative — that would understate rho and corrupt
+        prices)."""
+        if not (0 <= t < self.horizon):
+            return
+        self.version += 1
+        for h, need in self._alloc_need(job, alloc):
+            row = self._used[t, h] - need
+            assert np.all(row >= -1e-6), (
+                f"release would drive ledger negative at t={t} h={h}: {row}"
+            )
+            np.maximum(row, 0.0, out=row)
+            self._used[t, h] = row
 
     def utilization(self, t: int) -> Dict[Resource, float]:
-        out = {}
-        for r in self.resources:
-            cap = sum(self.capacity(h, r) for h in range(self.num_machines))
-            use = sum(self.used(t, h, r) for h in range(self.num_machines))
-            out[r] = use / cap if cap else 0.0
-        return out
+        cap = self.capacity_matrix.sum(axis=0)          # (R,)
+        use = self._used[t].sum(axis=0) if 0 <= t < self.horizon else \
+            np.zeros_like(cap)
+        return {
+            r: float(use[k] / cap[k]) if cap[k] else 0.0
+            for r, k in self.res_index.items()
+        }
 
 
 # ----------------------------------------------------------------------

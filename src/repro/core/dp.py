@@ -9,6 +9,22 @@ V/quanta.  This preserves the DP structure (Eq. 21) at bounded granularity;
 quanta can be raised for exactness on small instances (the competitive-ratio
 benchmark uses the exact setting).
 
+Min-plus formulation
+--------------------
+With C[k] the cost row over finished units after k slots, one forward step is
+the min-plus (tropical) convolution
+
+    C[k][u] = min_{0 <= v <= u} C[k-1][u - v] + theta_k[v],
+
+i.e. a tropical vector-matrix product against the lower-triangular Toeplitz
+operand built from C[k-1] (see ``repro.kernels.minplus``). The step runs
+vectorized in NumPy by default (bit-identical to the scalar loop, so
+decisions never depend on the host); ``minplus_backend`` selects
+``"pallas"`` (float32 TPU kernel, auto-interpreting off-TPU) or
+``"scalar"`` (the pre-vectorization double loop, kept for parity tests
+and benchmarks). The cost table is a dense ``(k+1, Q+1)`` float64
+ndarray; the choice (backtracking) table mirrors it.
+
 The forward table C[t][u] = min cost to finish u units within [a_i, t]
 is shared across all completion-time candidates of Algorithm 2, which
 turns Algorithm 2+3 from O(T^2) DP runs into one pass.
@@ -21,6 +37,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..kernels.minplus import minplus_step
 from .cluster import Cluster
 from .job import Allocation, JobSpec
 from .pricing import PriceTable
@@ -78,44 +95,56 @@ class WorkloadDP:
         return self._theta[key]
 
     # ------------------------------------------------------------------
-    def solve_prefix(self, t_end: int) -> List[List[float]]:
+    def _theta_costs(self, t: int) -> np.ndarray:
+        """theta(t, v) cost for v = 0..Q as one vector (+inf = infeasible).
+
+        The internal candidates for every uncached workload level are
+        batch-solved up front (one (K, H, R) comparison instead of K
+        per-level passes); results land in the snapshot's memo that
+        ``solve_theta_internal`` reads, so values are unchanged."""
+        Q = self.quanta
+        job = self.job
+        snap = self.snapshot(t)
+        tps = job.time_per_sample(internal=True)
+        pairs = []
+        for v in range(1, Q + 1):
+            if (t, v) in self._theta:
+                continue
+            w_need = max(1, int(math.ceil((v * self.unit) * tps)))
+            if w_need <= job.batch_size:
+                pairs.append(
+                    (w_need, max(1, int(math.ceil(w_need / job.gamma))))
+                )
+        if pairs:
+            snap.precompute_internal(pairs)
+        tcost = np.zeros(Q + 1)
+        for v in range(1, Q + 1):
+            th = self.theta(t, v)
+            tcost[v] = np.inf if th is None else th.cost
+        return tcost
+
+    def solve_prefix(self, t_end: int) -> np.ndarray:
         """Forward DP over slots [a_i, t_end]; returns cost table C where
-        C[k][u] = min cost using the first k slots to finish u units."""
+        C[k][u] = min cost using the first k slots to finish u units.
+
+        Each slot applies one min-plus vector-matrix step (see module
+        docstring); backend selected by ``cfg.minplus_backend``."""
         a = self.job.arrival
         Q = self.quanta
-        INF = float("inf")
-        C: List[List[float]] = [[INF] * (Q + 1)]
-        C[0][0] = 0.0
-        choice: List[List[int]] = [[-1] * (Q + 1)]
+        backend = self.cfg.minplus_backend
+        k = t_end - a + 1
+        C = np.full((k + 1, Q + 1), np.inf)
+        C[0, 0] = 0.0
+        choice = np.full((k + 1, Q + 1), -1, dtype=np.int64)
         for t in range(a, t_end + 1):
-            prev = C[-1]
-            cur = [INF] * (Q + 1)
-            ch = [-1] * (Q + 1)
-            # precompute theta(t, v) for all v once
-            tcost = [0.0] * (Q + 1)
-            tok = [True] * (Q + 1)
-            for v in range(1, Q + 1):
-                th = self.theta(t, v)
-                if th is None:
-                    tok[v] = False
-                else:
-                    tcost[v] = th.cost
-            for u in range(Q + 1):
-                best, bestv = INF, -1
-                for v in range(0, u + 1):
-                    if not tok[v] or prev[u - v] == INF:
-                        continue
-                    val = prev[u - v] + tcost[v]
-                    if val < best - 1e-12:
-                        best, bestv = val, v
-                cur[u] = best
-                ch[u] = bestv
-            C.append(cur)
-            choice.append(ch)
+            tcost = self._theta_costs(t)
+            cur, ch = minplus_step(C[t - a], tcost, backend=backend)
+            C[t - a + 1] = cur
+            choice[t - a + 1] = ch
         self._choice = choice
         return C
 
-    def reconstruct(self, t_end: int, C: List[List[float]]) -> Optional[DPResult]:
+    def reconstruct(self, t_end: int, C: np.ndarray) -> Optional[DPResult]:
         """Walk the choice table back from (t_end, Q)."""
         a = self.job.arrival
         Q = self.quanta
@@ -126,8 +155,8 @@ class WorkloadDP:
         u = Q
         total = 0.0
         for kk in range(k, 0, -1):
-            v = self._choice[kk][u]
-            if v is None or v < 0:
+            v = int(self._choice[kk][u])
+            if v < 0:
                 return None
             if v > 0:
                 t = a + kk - 1

@@ -9,6 +9,18 @@ Solves:  min c^T x
          s.t. A_ub x <= b_ub
               A_eq x == b_eq
               x >= 0
+
+The pivot core is vectorized: entering column via one comparison +
+``argmax``, ratio test via one masked division, tableau update via one
+buffered outer-product subtraction. The update zeroes coefficients with
+|a| <= 1e-12 exactly like the scalar row loop of the frozen reference
+(``repro.core._reference``) skipped them, and near-tied ratio tests replay
+the scalar hysteresis logic, so the pivot trajectory — and therefore the
+solution — is bit-identical to the pre-vectorization solver.
+
+Statuses: "optimal" | "infeasible" | "unbounded" | "maxiter". "maxiter"
+(pivot budget exhausted — a solver failure, not a provably empty polytope)
+is surfaced as its own status so callers can distinguish the two.
 """
 from __future__ import annotations
 
@@ -20,17 +32,33 @@ import numpy as np
 
 @dataclass
 class LPResult:
-    status: str           # "optimal" | "infeasible" | "unbounded"
+    status: str           # "optimal" | "infeasible" | "unbounded" | "maxiter"
     x: Optional[np.ndarray]
     objective: float
 
 
 def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
+    """Scalar pivot, used only on the cold drive-artificials-out path."""
     T[row] /= T[row, col]
     for i in range(T.shape[0]):
         if i != row and abs(T[i, col]) > 1e-12:
             T[i] -= T[i, col] * T[row]
     basis[row] = col
+
+
+def _ratio_test_replay(
+    basis: np.ndarray, rows: np.ndarray, ratios: np.ndarray
+) -> int:
+    """Bland ratio test with the original 1e-12 hysteresis, replayed over the
+    candidate rows in ascending order (exact tie-break semantics)."""
+    best_ratio, row = np.inf, -1
+    for i, ratio in zip(rows, ratios):
+        if ratio < best_ratio - 1e-12 or (
+            abs(ratio - best_ratio) <= 1e-12
+            and (row < 0 or basis[i] < basis[row])
+        ):
+            best_ratio, row = ratio, int(i)
+    return row
 
 
 def _simplex_core(T: np.ndarray, basis: np.ndarray, n_total: int,
@@ -41,30 +69,43 @@ def _simplex_core(T: np.ndarray, basis: np.ndarray, n_total: int,
     row holds c_bar; optimal when all c_bar >= -eps). Last column = RHS.
     """
     m = T.shape[0] - 1
+    buf = np.empty_like(T)
     for _ in range(max_iter):
-        cbar = T[-1, :n_total]
-        # Bland's rule: smallest index with negative reduced cost
-        col = -1
-        for j in range(n_total):
-            if cbar[j] < -1e-9:
-                col = j
-                break
-        if col < 0:
+        negmask = T[-1, :n_total] < -1e-9
+        if not negmask.any():
             return "optimal"
-        # ratio test (Bland: smallest basis index tie-break)
-        best_ratio, row = np.inf, -1
-        for i in range(m):
-            a = T[i, col]
-            if a > 1e-10:
-                ratio = T[i, -1] / a
-                if ratio < best_ratio - 1e-12 or (
-                    abs(ratio - best_ratio) <= 1e-12
-                    and (row < 0 or basis[i] < basis[row])
-                ):
-                    best_ratio, row = ratio, i
-        if row < 0:
+        col = int(negmask.argmax())  # Bland: smallest index
+        colvals = T[:m, col]
+        mask = colvals > 1e-10
+        if not mask.any():
             return "unbounded"
-        _pivot(T, basis, row, col)
+        ratios = np.where(mask, T[:m, -1], np.inf)
+        np.divide(ratios, colvals, out=ratios, where=mask)
+        rmin = ratios.min()
+        cand = np.flatnonzero(ratios <= rmin + 1e-12)
+        if cand.size == 1:
+            # unique minimizer within the hysteresis window — the scalar
+            # scan provably selects a row with ratio <= rmin + 1e-12
+            row = int(cand[0])
+        else:
+            rows = np.flatnonzero(mask)
+            row = _ratio_test_replay(basis, rows, ratios[rows])
+        # outer-product pivot, bit-identical to the scalar row loop: rows
+        # with |coef| <= 1e-12 are skipped there, and here either excluded
+        # from the update set (sparse path) or zeroed (x - 0.0*y == x for
+        # all finite x, dense path). Degenerate tableaus keep most column
+        # entries at zero, so update only the touched rows when few.
+        T[row] /= T[row, col]
+        colv = T[:, col].copy()
+        colv[row] = 0.0
+        np.place(colv, np.abs(colv) <= 1e-12, 0.0)
+        nz = np.flatnonzero(colv)
+        if nz.size * 3 < T.shape[0]:
+            T[nz] -= colv[nz, None] * T[row][None, :]
+        else:
+            np.multiply(colv[:, None], T[row][None, :], out=buf)
+            np.subtract(T, buf, out=T)
+        basis[row] = col
     return "maxiter"
 
 
@@ -84,49 +125,50 @@ def linprog(
 
     m_ub, m_eq = A_ub.shape[0], A_eq.shape[0]
     m = m_ub + m_eq
-
-    # rows: [A_ub | I_slack | RHS], [A_eq | 0 | RHS]; flip rows w/ negative RHS
-    A = np.zeros((m, n + m_ub))
-    b = np.zeros(m)
-    A[:m_ub, :n] = A_ub
-    A[:m_ub, n : n + m_ub] = np.eye(m_ub)
-    b[:m_ub] = b_ub
-    A[m_ub:, :n] = A_eq
-    b[m_ub:] = b_eq
-    neg = b < 0
-    A[neg] *= -1.0
-    b[neg] *= -1.0
-
     n_sx = n + m_ub  # structural + slack count
 
-    # ---- Phase 1: add artificials where needed ----
-    # a slack can serve as initial basis for a <= row only if it wasn't
-    # flipped (coef +1) — flipped rows and eq rows get artificials.
-    need_art = []
-    basis = -np.ones(m, dtype=int)
-    for i in range(m):
-        if i < m_ub and not neg[i]:
-            basis[i] = n + i  # its own slack
-        else:
-            need_art.append(i)
-    n_art = len(need_art)
+    # negative-RHS <= rows are flipped so every RHS is nonnegative; flipped
+    # rows (slack coef -1) and eq rows then need phase-1 artificials
+    neg = b_ub < 0
+    need_art = np.concatenate(
+        [np.flatnonzero(neg), np.arange(m_ub, m)]
+    )
+    n_art = need_art.size
     n_total = n_sx + n_art
+
+    # tableau built in place: [A | slacks | artificials | RHS]
     T = np.zeros((m + 1, n_total + 1))
-    T[:m, :n_sx] = A
-    T[:m, -1] = b
-    for k, i in enumerate(need_art):
-        T[i, n_sx + k] = 1.0
-        basis[i] = n_sx + k
+    T[:m_ub, :n] = A_ub
+    T[:m_ub, -1] = b_ub
+    idx = np.arange(m_ub)
+    T[idx, n + idx] = 1.0
+    T[m_ub:m, :n] = A_eq
+    T[m_ub:m, -1] = b_eq
+    flip = np.zeros(m, dtype=bool)
+    flip[:m_ub] = neg
+    flip[m_ub:] = T[m_ub:m, -1] < 0
+    T[:m][flip] *= -1.0
+
+    basis = np.empty(m, dtype=int)
+    basis[:m_ub] = n + idx                    # own slack where unflipped
+    art_cols = n_sx + np.arange(n_art)
+    T[need_art, art_cols] = 1.0
+    basis[need_art] = art_cols
 
     if n_art:
-        # phase-1 objective: sum of artificials
+        # phase-1 objective: sum of artificials; price out artificial
+        # basics row by row (sequential subtraction keeps the float result
+        # bit-identical to the frozen reference)
         T[-1, n_sx:n_total] = 1.0
-        for k, i in enumerate(need_art):
-            T[-1] -= T[i]  # price out artificial basics
+        for i in need_art:
+            T[-1] -= T[i]
         status = _simplex_core(T, basis, n_total)
+        if status == "maxiter":
+            return LPResult("maxiter", None, np.inf)
+        # phase-1 minimizes sum of artificials (>= 0), so with the negated-
+        # cost convention T[-1,-1] == -opt: a strictly negative entry means
+        # the artificials cannot be driven to zero — the polytope is empty.
         if status != "optimal" or T[-1, -1] < -1e-7:
-            return LPResult("infeasible", None, np.inf)
-        if T[-1, -1] < -1e-7 or -T[-1, -1] > 1e-7:
             return LPResult("infeasible", None, np.inf)
         # drive artificials out of the basis if possible
         for i in range(m):
@@ -136,7 +178,7 @@ def linprog(
                         _pivot(T, basis, i, j)
                         break
         # drop artificial columns
-        T = np.hstack([T[:, :n_sx], T[:, -1:]])
+        T = np.ascontiguousarray(np.hstack([T[:, :n_sx], T[:, -1:]]))
         n_total = n_sx
 
     # ---- Phase 2 ----
@@ -149,12 +191,12 @@ def linprog(
     status = _simplex_core(T, basis, n_total)
     if status == "unbounded":
         return LPResult("unbounded", None, -np.inf)
-    if status != "optimal":
-        return LPResult("infeasible", None, np.inf)
+    if status == "maxiter":
+        # pivot budget exhausted: solver failure, NOT proof of emptiness
+        return LPResult("maxiter", None, np.inf)
 
     x = np.zeros(n_total)
-    for i in range(m):
-        if basis[i] < n_total:
-            x[basis[i]] = T[i, -1]
+    inb = basis < n_total  # a redundant row may keep a zero artificial basic
+    x[basis[inb]] = T[np.flatnonzero(inb), -1]
     xs = x[:n]
     return LPResult("optimal", xs, float(c @ xs))

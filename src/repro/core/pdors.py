@@ -3,6 +3,14 @@
 Upon each job arrival: find pi_i^* (Algorithm 2); admit iff payoff
 lambda_i > 0; commit the allocation to the cluster ledger, which updates
 rho_h^r[t] and therefore the prices p_h^r[t] = Q_h^r(rho_h^r[t]).
+
+The scheduling core under ``offer()`` is fully vectorized (dense ledger,
+cached price matrices, min-plus DP step, vectorized simplex — see
+cluster.py / pricing.py / dp.py / lp.py / subproblem.py); commits bump the
+cluster's ledger version, which is what invalidates those caches between
+admissions. ``repro.core._reference.run_pdors_reference`` is the frozen
+pre-vectorization implementation producing bit-identical decisions —
+``benchmarks/bench_scheduler.py`` measures one against the other.
 """
 from __future__ import annotations
 

@@ -17,6 +17,8 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Iterable, List
 
+import numpy as np
+
 from .cluster import Cluster
 from .job import JobSpec, Resource
 
@@ -27,15 +29,32 @@ class PriceParams:
     L: float
     mu: float
 
+    def _ceiling(self, r: Resource) -> float:
+        return max(self.U.get(r, self.L), self.L * (1.0 + 1e-9))
+
     def price(self, rho: float, cap: float, r: Resource) -> float:
         """Q_h^r(rho) — Eq. (12). A zero-capacity resource is priced at its
         ceiling U^r (the 'exhausted' price); the capacity rows in the LP /
         feasibility checks are what actually forbid placement there."""
-        u = max(self.U.get(r, self.L), self.L * (1.0 + 1e-9))
+        u = self._ceiling(r)
         if cap <= 0:
             return u
         frac = min(max(rho / cap, 0.0), 1.0)
         return self.L * (u / self.L) ** frac
+
+    def price_vector(
+        self, rho: np.ndarray, cap: np.ndarray, r: Resource
+    ) -> np.ndarray:
+        """Vectorized Q_h^r over whole (H,) machine vectors — element-for-
+        element the same arithmetic as ``price`` (clip, divide, pow), so the
+        result is bit-identical to the scalar loop it replaces."""
+        u = self._ceiling(r)
+        pos = cap > 0
+        frac = np.zeros_like(rho)
+        np.divide(rho, cap, out=frac, where=pos)
+        np.clip(frac, 0.0, 1.0, out=frac)
+        out = self.L * (u / self.L) ** frac
+        return np.where(pos, out, u)
 
 
 def estimate_price_params(
@@ -97,16 +116,41 @@ def estimate_price_params(
 
 
 class PriceTable:
-    """p_h^r[t] = Q_h^r(rho_h^r[t]) maintained over the cluster ledger."""
+    """p_h^r[t] = Q_h^r(rho_h^r[t]) maintained over the cluster ledger.
+
+    ``price_matrix`` results are memoized against the cluster's ledger
+    version: prices only move when rho moves (Algorithm 1 reprices after
+    admission), so between commits every job offer hitting slot t reuses the
+    same (H, R) table instead of recomputing H*R exponentials."""
 
     def __init__(self, params: PriceParams, cluster: Cluster):
         self.params = params
         self.cluster = cluster
+        self._matrix_cache: Dict[int, tuple] = {}  # t -> (version, (H,R))
 
     def price(self, t: int, h: int, r: Resource) -> float:
         return self.params.price(
             self.cluster.used(t, h, r), self.cluster.capacity(h, r), r
         )
+
+    def price_column(self, t: int, r: Resource) -> np.ndarray:
+        """All machines' p_h^r[t] as one (H,) vector (vectorized Eq. 12)."""
+        k = self.cluster.res_index[r]
+        return self.params.price_vector(
+            self.cluster.used_matrix(t)[:, k],
+            self.cluster.capacity_matrix[:, k],
+            r,
+        )
+
+    def price_matrix(self, t: int) -> np.ndarray:
+        """(H, R) price table for slot t, one vectorized pass per resource;
+        cached until the next ledger mutation (do not write into it)."""
+        ent = self._matrix_cache.get(t)
+        if ent is None or ent[0] != self.cluster.version:
+            cols = [self.price_column(t, r) for r in self.cluster.resources]
+            ent = (self.cluster.version, np.stack(cols, axis=1))
+            self._matrix_cache[t] = ent
+        return ent[1]
 
     def worker_price(self, t: int, h: int, job: JobSpec) -> float:
         """p_h^w[t] = sum_r p_h^r[t] alpha_i^r (paper, below Eq. 26)."""

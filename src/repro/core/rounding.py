@@ -72,6 +72,72 @@ def randomized_round(
     return (lo + up).astype(np.int64)
 
 
+def round_cover_packing_structured(
+    x_frac: np.ndarray,
+    W1: float,
+    wdem_act: np.ndarray,      # (P,) worker demand, active resources only
+    sdem_act: np.ndarray,      # (P,) PS demand, active resources only
+    free_act: np.ndarray,      # (M, P) free capacity on the LP's machines
+    batch_cap: float,          # worker-cap row RHS (constraint 25)
+    g_delta: float,
+    rng: np.random.Generator,
+    max_rounds: int = 50,
+    cover_slack: float = 0.0,
+) -> RoundingResult:
+    """``round_until_feasible`` specialized to program (23)'s structure.
+
+    The generic path evaluates X @ B.T against a (M*P+1, 2M) matrix whose
+    capacity rows hold exactly two nonzeros (w_kk alpha_r + s_kk beta_r).
+    Here those rows are evaluated directly as a (S, M, P) broadcast — ~P x
+    fewer multiply-adds — and the cover / worker-cap rows as integer sums.
+
+    Bit-identical to the generic path: the all-ones rows sum integers
+    (exact in any association below 2^53), and each capacity row reduces to
+    fl(fl(w*alpha) + fl(s*beta)) plus exact zeros, which every summation
+    order evaluates identically. The rng consumption (one (S, 2M) uniform
+    block) is also identical, keeping downstream draws aligned.
+    """
+    n = x_frac.size
+    M = n // 2
+    S = max_rounds
+    xp = np.maximum(x_frac, 0.0) * g_delta
+    lo = np.floor(xp)
+    frac = xp - lo
+    X = (lo[None, :] + (rng.random((S, n)) < frac[None, :])).astype(np.int64)
+    W = X[:, :M].astype(np.float64)
+    Sx = X[:, M:].astype(np.float64)
+
+    wsum = W.sum(axis=1)                               # integer-exact
+    # cover row: -sum w <= -W1, relative shortfall (W1 - lhs)/max(W1, eps)
+    if W1 > 0:
+        cov_v = np.maximum((W1 - wsum) / max(W1, 1e-12), 0.0)
+    else:
+        cov_v = np.zeros(S)
+    # capacity packing rows (24): lhs = w*alpha_r + s*beta_r per (machine, r)
+    cap_lhs = (W[:, :, None] * wdem_act[None, None, :]
+               + Sx[:, :, None] * sdem_act[None, None, :])   # (S, M, P)
+    b = free_act[None, :, :]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        rel = np.where(
+            b > 0,
+            (cap_lhs - b) / np.maximum(b, 1e-12),
+            np.where(cap_lhs > 0, np.inf, 0.0),
+        )
+    pack_v = rel.reshape(S, -1).max(axis=1)
+    # worker-cap row (25): sum w <= batch_cap (> 0 always)
+    relw = (wsum - batch_cap) / max(batch_cap, 1e-12)
+    pack_v = np.maximum(pack_v, relw)
+    pack_v = np.maximum(pack_v, 0.0)
+
+    feas = (cov_v <= cover_slack + 1e-9) & (pack_v <= 1e-9)
+    if feas.any():
+        i = int(np.argmax(feas))  # first feasible draw
+        return RoundingResult(X[i], True, float(cov_v[i]), float(pack_v[i]), i + 1)
+    order = np.lexsort((cov_v, pack_v))
+    i = int(order[0])
+    return RoundingResult(X[i], False, float(cov_v[i]), float(pack_v[i]), S)
+
+
 def round_until_feasible(
     x_frac: np.ndarray,
     A: Optional[np.ndarray],

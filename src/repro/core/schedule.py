@@ -55,9 +55,10 @@ def find_best_schedule(
     best_payoff = 0.0
     best_t = -1
     a = job.arrival
+    # column of full-workload completion costs, one row per candidate t_tilde
+    costs = np.asarray(C)[1:, dp.quanta]
     for t_tilde in range(a, horizon):
-        k = t_tilde - a + 1
-        cost = C[k][dp.quanta]
+        cost = costs[t_tilde - a]
         if cost == float("inf"):
             continue
         payoff = job.utility(t_tilde - a) - cost

@@ -1,15 +1,44 @@
 """Pallas TPU kernels for the substrate's compute hot-spots.
 
-The paper (PD-ORS) is a control-plane scheduler with no kernel-level
-contribution; these kernels serve the model zoo's hot paths:
     flash_attention — blockwise online-softmax attention (32k prefill)
     rmsnorm         — fused normalization
+    minplus         — tropical (min,+) vec-mat step of the scheduler's
+                      Algorithm-3 workload DP (NumPy reference + Pallas
+                      kernel, auto-fallback off-TPU)
 
-Each kernel ships with a pure-jnp oracle (ref.py) and a jit'd public
-wrapper (ops.py) that auto-selects interpret mode off-TPU.
+flash_attention/rmsnorm ship with a pure-jnp oracle (ref.py) and a jit'd
+public wrapper (ops.py) that auto-selects interpret mode off-TPU; minplus
+dispatches via ``minplus.minplus_step`` (NumPy off-TPU, Pallas on TPU).
+
+Submodules are loaded lazily (PEP 562) so that the scheduler core can use
+``minplus``'s NumPy path without importing jax — CPU-only benchmark and
+simulator runs stay light; the jax stack is pulled in only when a kernel
+attribute is first touched.
 """
-from . import ops, ref
-from .flash_attention import flash_attention as flash_attention_kernel
-from .rmsnorm import rmsnorm as rmsnorm_kernel
+import importlib
 
-__all__ = ["ops", "ref", "flash_attention_kernel", "rmsnorm_kernel"]
+__all__ = ["ops", "ref", "minplus", "flash_attention_kernel",
+           "rmsnorm_kernel", "minplus_step"]
+
+_LAZY = {
+    "ops": ("ops", None),
+    "ref": ("ref", None),
+    "minplus": ("minplus", None),
+    "flash_attention_kernel": ("flash_attention", "flash_attention"),
+    "rmsnorm_kernel": ("rmsnorm", "rmsnorm"),
+    "minplus_step": ("minplus", "minplus_step"),
+}
+
+
+def __getattr__(name):
+    if name not in _LAZY:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    mod_name, attr = _LAZY[name]
+    mod = importlib.import_module(f".{mod_name}", __name__)
+    value = mod if attr is None else getattr(mod, attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

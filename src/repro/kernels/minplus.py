@@ -1,0 +1,204 @@
+"""Min-plus (tropical) vector-matrix step for the Algorithm-3 workload DP.
+
+One forward step of the DP (Eq. 21) is a min-plus convolution
+
+    cur[u] = min_{0 <= v <= u} prev[u - v] + tcost[v],
+
+equivalently a tropical vector-matrix product ``cur = A (min,+) tcost`` with
+the lower-triangular Toeplitz operand ``A[u, v] = prev[u - v]`` (+inf above
+the diagonal). Three implementations, all returning the same values:
+
+  * ``minplus_scalar``  — the pre-vectorization double loop (reference; also
+    what the golden parity tests pin against);
+  * ``minplus_numpy``   — one fancy-indexed Toeplitz build + row-min
+    reduction; the default CPU path;
+  * ``minplus_pallas``  — a Pallas TPU kernel of the tropical vec-mat
+    product (broadcast add + lane-min reduce on the VPU), padded to the
+    float32/float64 tile grid. Off-TPU it runs in interpret mode; any
+    import/lowering failure falls back to the NumPy path (mirroring the
+    rmsnorm/ops kernel pattern).
+
+Besides the min values every implementation returns the DP ``choice`` array:
+choice[u] = the smallest v whose candidate is within 1e-12 of the row
+minimum (the scalar loop's acceptance hysteresis), or -1 for an unreachable
+state, so backtracking reconstructs identical schedules on every backend.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+_INF = float("inf")
+_pallas_broken: Optional[str] = None  # first failure reason, warn once
+
+
+def minplus_scalar(
+    prev: np.ndarray, tcost: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Reference double loop (the pre-vectorization dp.py inner loop)."""
+    Q1 = prev.size
+    cur = np.full(Q1, _INF)
+    choice = np.full(Q1, -1, dtype=np.int64)
+    for u in range(Q1):
+        best, bestv = _INF, -1
+        for v in range(0, u + 1):
+            pu = prev[u - v]
+            tc = tcost[v]
+            if pu == _INF or tc == _INF:
+                continue
+            val = pu + tc
+            if val < best - 1e-12:
+                best, bestv = val, v
+        cur[u] = best
+        choice[u] = bestv
+    return cur, choice
+
+
+def _toeplitz_vals(prev: np.ndarray, tcost: np.ndarray) -> np.ndarray:
+    """vals[u, v] = prev[u-v] + tcost[v], +inf above the diagonal."""
+    Q1 = prev.size
+    idx = np.arange(Q1)
+    diff = idx[:, None] - idx[None, :]
+    vals = np.where(diff >= 0, prev[np.abs(diff)], _INF) + tcost[None, :]
+    return vals
+
+
+def _choice_from_vals(vals: np.ndarray, best: np.ndarray) -> np.ndarray:
+    """Smallest v within the 1e-12 hysteresis of each row minimum."""
+    hit = vals <= best[:, None] + 1e-12
+    choice = np.argmax(hit, axis=1).astype(np.int64)
+    choice[~np.isfinite(best)] = -1
+    return choice
+
+
+def minplus_numpy(
+    prev: np.ndarray, tcost: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized step, bit-identical to ``minplus_scalar``.
+
+    The scalar loop's 1e-12 acceptance hysteresis can settle on a candidate
+    up to 1e-12 ABOVE the true row minimum when near-ties are present, so
+    rows whose value set contains entries strictly between the minimum and
+    minimum+2e-12 are replayed through the sequential scan (exact ties and
+    isolated minima — the overwhelmingly common cases — already agree)."""
+    vals = _toeplitz_vals(prev, tcost)
+    best = vals.min(axis=1)
+    choice = _choice_from_vals(vals, best)
+    finite = np.isfinite(best)
+    near = (vals <= best[:, None] + 2e-12) & (vals > best[:, None])
+    replay = np.flatnonzero(finite & near.any(axis=1))
+    for u in replay:
+        b, bv = _INF, -1
+        row = vals[u]
+        for v in range(u + 1):
+            val = row[v]
+            if val == _INF:
+                continue
+            if val < b - 1e-12:
+                b, bv = val, v
+        best[u] = b
+        choice[u] = bv
+    return best, choice
+
+
+# ----------------------------------------------------------------- pallas
+def _pallas_minplus_call(A, b, interpret: bool):
+    """cur[u] = min_v A[u, v] + b[v] on padded (P, P)/(1, P) operands."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(a_ref, b_ref, o_ref):
+        vals = a_ref[...] + b_ref[...]      # (P, P) broadcast over rows
+        o_ref[...] = jnp.min(vals, axis=1, keepdims=True).T
+
+    P = A.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((1, P), A.dtype),
+        interpret=interpret,
+    )(A, b)
+    return np.asarray(out[0])
+
+
+def minplus_pallas(
+    prev: np.ndarray, tcost: np.ndarray, interpret: Optional[bool] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Tropical vec-mat product on TPU (float32 accumulation).
+
+    The Toeplitz operand is built host-side (O(Q^2), tiny); the kernel does
+    the broadcast-add + min-reduce. Rows/cols are padded to the 128-lane
+    tile; padding is +inf-neutral (inf + inf = inf never wins a min)."""
+    global _pallas_broken
+    if _pallas_broken is not None:
+        return minplus_numpy(prev, tcost)
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        Q1 = prev.size
+        P = max(128, int(np.ceil(Q1 / 128)) * 128)
+        big = np.float32(3.4e38 / 4)  # inf-surrogate safe under one add
+        idx = np.arange(Q1)
+        diff = idx[:, None] - idx[None, :]
+        A = np.full((P, P), big, dtype=np.float32)
+        A[:Q1, :Q1] = np.where(
+            diff >= 0, np.minimum(prev, big)[np.abs(diff)], big
+        )
+        b = np.full((1, P), big, dtype=np.float32)
+        b[0, :Q1] = np.minimum(tcost, big)
+        cur32 = _pallas_minplus_call(jnp.asarray(A), jnp.asarray(b),
+                                     interpret)[:Q1]
+        best = np.where(cur32 >= big, _INF, cur32.astype(np.float64))
+        # backtracking pointers recovered host-side from the same operands
+        # (standard for DP kernels: the device computes values, not argmins)
+        vals32 = A[:Q1, :Q1] + b[0, :Q1][None, :]
+        choice = np.argmin(vals32, axis=1).astype(np.int64)
+        choice[~np.isfinite(best)] = -1
+        return best, choice
+    except Exception as e:  # missing jax, lowering failure, ...
+        _pallas_broken = f"{type(e).__name__}: {e}"
+        warnings.warn(
+            f"minplus Pallas path unavailable ({_pallas_broken}); "
+            "falling back to NumPy",
+            RuntimeWarning,
+        )
+        return minplus_numpy(prev, tcost)
+
+
+# --------------------------------------------------------------- dispatch
+def default_backend() -> str:
+    """Advisory: which backend a TPU-aware caller could pick.
+
+    "pallas" only when jax is already loaded AND running on TPU; never
+    imports jax itself, so CPU-only probes stay jax-free."""
+    import sys
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        try:
+            if jax.default_backend() == "tpu":
+                return "pallas"
+        except Exception:
+            pass
+    return "numpy"
+
+
+def minplus_step(
+    prev: np.ndarray, tcost: np.ndarray, backend: Optional[str] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One DP forward step; backend in {None, "numpy", "pallas", "scalar"}.
+
+    None means NumPy: the scheduler guarantees bit-identical decisions
+    across hosts, and the float32 Pallas kernel (whose own wrapper falls
+    back to NumPy off-TPU) is deliberately opt-in via
+    SubproblemConfig(minplus_backend="pallas") so admissions never depend
+    on which accelerator — or import order — a process happens to have."""
+    if backend == "pallas":
+        return minplus_pallas(prev, tcost)
+    if backend == "scalar":
+        return minplus_scalar(prev, tcost)
+    return minplus_numpy(prev, tcost)

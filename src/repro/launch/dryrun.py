@@ -49,6 +49,15 @@ from ..train import abstract_train_state, make_train_step
 from .mesh import make_production_mesh
 
 
+def _cost_dict(compiled) -> Dict:
+    """compiled.cost_analysis() returns a dict on recent jax but a
+    one-element list of dicts on older releases; normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _step_and_specs(cfg: ArchConfig, shape: InputShape, rules: MeshRules,
                     opt_cfg: AdamWConfig):
     """Build (fn, arg_specs, in_shardings, out_shardings) for the shape kind."""
@@ -110,7 +119,7 @@ def _compile_metrics(cfg: ArchConfig, shape: InputShape, mesh, rules,
         jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jitted.lower(*arg_specs)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     return {
         "flops": float(cost.get("flops", 0.0)),
         "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
@@ -177,7 +186,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_bytes_from_hlo(compiled.as_text())
     n_dev = mesh.devices.size
 

@@ -1,0 +1,125 @@
+"""Property tests for the min-plus (tropical) DP step kernels: the NumPy
+and Pallas implementations must agree with the scalar reference on random
+instances, including +inf (unreachable-state) patterns."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.minplus import (
+    default_backend,
+    minplus_numpy,
+    minplus_pallas,
+    minplus_scalar,
+    minplus_step,
+)
+
+
+def _random_instance(rng, n, inf_frac=0.2):
+    prev = rng.uniform(0.0, 100.0, n)
+    tcost = rng.uniform(0.0, 100.0, n)
+    prev[rng.random(n) < inf_frac] = np.inf
+    tcost[rng.random(n) < inf_frac] = np.inf
+    prev[0] = 0.0 if rng.random() < 0.5 else prev[0]
+    tcost[0] = 0.0  # v=0 always costs nothing in the DP
+    return prev, tcost
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 48))
+def test_property_numpy_matches_scalar(seed, n):
+    """NumPy step must be BIT-identical to the scalar reference — values
+    and backtracking choices — since the DP cost table feeds exact-equality
+    admission parity."""
+    rng = np.random.default_rng(seed)
+    prev, tcost = _random_instance(rng, n)
+    cs, chs = minplus_scalar(prev, tcost)
+    cn, chn = minplus_numpy(prev, tcost)
+    np.testing.assert_array_equal(cn, cs)
+    np.testing.assert_array_equal(chn, chs)
+
+
+def test_numpy_replays_scalar_hysteresis_in_near_ties():
+    """The scalar loop's 1e-12 acceptance hysteresis keeps the FIRST
+    candidate when a later one is less than 1e-12 better; the vectorized
+    path must reproduce that value, not the true minimum."""
+    prev = np.array([0.0, 0.3, 0.6000000000000001])
+    tcost = np.array([0.0, 0.30000000000000004, 0.6])
+    cs, chs = minplus_scalar(prev, tcost)
+    cn, chn = minplus_numpy(prev, tcost)
+    np.testing.assert_array_equal(cn, cs)
+    np.testing.assert_array_equal(chn, chs)
+    assert cs[2] == 0.6000000000000001  # hysteresis keeps v=0, not 0.6
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_pallas_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    prev, tcost = _random_instance(rng, 33)
+    cs, chs = minplus_scalar(prev, tcost)
+    cp, chp = minplus_pallas(prev, tcost, interpret=True)
+    # float32 kernel accumulation
+    finite = np.isfinite(cs)
+    assert (np.isfinite(cp) == finite).all()
+    np.testing.assert_allclose(cp[finite], cs[finite], rtol=2e-6, atol=2e-4)
+    assert ((chp < 0) == (chs < 0)).all()
+    for u in np.flatnonzero(chp >= 0):
+        v = int(chp[u])
+        assert prev[u - v] + tcost[v] == pytest.approx(cs[u], rel=2e-6, abs=2e-4)
+
+
+def test_all_unreachable():
+    prev = np.full(5, np.inf)
+    tcost = np.zeros(5)
+    for fn in (minplus_scalar, minplus_numpy):
+        cur, ch = fn(prev, tcost)
+        assert np.isinf(cur).all()
+        assert (ch == -1).all()
+
+
+def test_identity_step():
+    """tcost = [0, inf, ...] keeps prev unchanged with choice 0."""
+    prev = np.array([0.0, 3.0, np.inf, 7.0])
+    tcost = np.array([0.0, np.inf, np.inf, np.inf])
+    cur, ch = minplus_numpy(prev, tcost)
+    np.testing.assert_array_equal(cur, prev)
+    assert (ch[np.isfinite(prev)] == 0).all()
+    assert ch[2] == -1
+
+
+def test_dispatch_and_fallback():
+    assert default_backend() in ("numpy", "pallas")
+    prev = np.array([0.0, 1.0, 2.0])
+    tcost = np.array([0.0, 5.0, 50.0])
+    for backend in (None, "numpy", "scalar"):
+        cur, ch = minplus_step(prev, tcost, backend=backend)
+        np.testing.assert_allclose(cur, [0.0, 1.0, 2.0])
+    # pallas path must return (via kernel or clean numpy fallback) off-TPU
+    cur, ch = minplus_step(prev, tcost, backend="pallas")
+    np.testing.assert_allclose(cur, [0.0, 1.0, 2.0], rtol=1e-6)
+
+
+def test_dp_backends_agree_end_to_end():
+    """A full run_pdors with the scalar and numpy min-plus backends must
+    produce identical admission records (kernel swap is decision-neutral)."""
+    from repro.core import (
+        SubproblemConfig, WorkloadConfig, make_cluster, run_pdors,
+        synthetic_jobs,
+    )
+
+    jobs = synthetic_jobs(WorkloadConfig(num_jobs=8, horizon=10, seed=5,
+                                         batch=(20, 100), workload_scale=0.05))
+    outs = []
+    for backend in ("scalar", "numpy"):
+        cfg = SubproblemConfig(minplus_backend=backend)
+        res = run_pdors(jobs, make_cluster(6, 10), cfg=cfg, quanta=10, seed=0)
+        outs.append([
+            (r.job.job_id, r.admitted, r.utility,
+             sorted((t, tuple(sorted(a.workers.items())))
+                    for t, a in r.schedule.slots.items())
+             if r.schedule else None)
+            for r in res.records
+        ])
+    assert outs[0] == outs[1]

@@ -209,6 +209,111 @@ def test_offline_optimum_bounds_pdors():
         assert opt.total_utility / res.total_utility < 4.0
 
 
+# ------------------------------------------------- vectorization golden
+def _decision_trace(res):
+    out = []
+    for r in res.records:
+        slots = None
+        if r.schedule is not None:
+            slots = {
+                t: (sorted(a.workers.items()), sorted(a.ps.items()))
+                for t, a in r.schedule.slots.items()
+            }
+        out.append((r.job.job_id, r.admitted, r.utility, slots))
+    return out
+
+
+@pytest.mark.parametrize("scale,seed", [
+    (0.1, 3), (0.05, 11), (0.3, 7), (0.003, 0),
+])
+def test_golden_admissions_unchanged_by_vectorization(scale, seed):
+    """The golden pre/post-vectorization regression: run_pdors must produce
+    bit-identical admission records, per-slot allocations, and total
+    utility to the frozen pre-PR core (repro.core._reference) at fixed
+    seeds, across light and heavy workload regimes."""
+    from repro.core._reference import (
+        make_cluster_reference, run_pdors_reference,
+    )
+
+    cfg = WorkloadConfig(num_jobs=15, horizon=14, seed=seed,
+                         batch=(30, 150), workload_scale=scale)
+    jobs = synthetic_jobs(cfg)
+    vec = run_pdors(jobs, make_cluster(10, 14), quanta=14, seed=0)
+    ref = run_pdors_reference(jobs, make_cluster_reference(10, 14),
+                              quanta=14, seed=0)
+    assert _decision_trace(vec) == _decision_trace(ref)
+    assert vec.total_utility == ref.total_utility  # bit-identical, no approx
+
+
+def test_golden_acceptance_gridpoint_decisions():
+    """Down-scaled twin of the benchmark acceptance point (H=50, T=40):
+    identical decisions under the online many-small-jobs mix."""
+    from repro.core._reference import (
+        make_cluster_reference, run_pdors_reference,
+    )
+
+    cfg = WorkloadConfig(num_jobs=12, horizon=40, seed=0,
+                         batch=(50, 200), workload_scale=0.003)
+    jobs = synthetic_jobs(cfg)
+    vec = run_pdors(jobs, make_cluster(50, 40), quanta=32, seed=0)
+    ref = run_pdors_reference(jobs, make_cluster_reference(50, 40),
+                              quanta=32, seed=0)
+    assert _decision_trace(vec) == _decision_trace(ref)
+    assert vec.total_utility == ref.total_utility
+
+
+# ------------------------------------------------------- dense ledger
+def test_dense_ledger_matrix_views():
+    cl = make_cluster(3, 5)
+    j = small_job()
+    alloc = Allocation(workers={1: 2}, ps={2: 1})
+    cl.commit(2, j, alloc)
+    assert cl.used(2, 1, "gpu") == pytest.approx(2.0)
+    assert cl.used(2, 2, "gpu") == pytest.approx(0.0)  # PS needs no gpu
+    assert cl.used(2, 2, "cpu") == pytest.approx(2.0)
+    um = cl.used_matrix(2)
+    fm = cl.free_matrix(2)
+    k = cl.res_index["cpu"]
+    assert um[1, k] == pytest.approx(4.0)
+    assert fm[1, k] == pytest.approx(cl.capacity(1, "cpu") - 4.0)
+    assert cl.used_matrix(0).sum() == 0.0
+
+
+def test_release_clamps_at_zero():
+    """A double-release must not drive the ledger negative (it would
+    understate rho and corrupt prices)."""
+    cl = make_cluster(2, 4)
+    j = small_job()
+    alloc = Allocation(workers={0: 1}, ps={0: 1})
+    cl.commit(1, j, alloc)
+    cl.release(1, j, alloc)
+    assert cl.used(1, 0, "cpu") == 0.0
+    # double release: clamped (assertion active only in debug interpreters
+    # when the drift exceeds tolerance; with exact floats it asserts)
+    try:
+        cl.release(1, j, alloc)
+    except AssertionError:
+        pass  # debug mode surfaced it — acceptable contract
+    assert cl.used(1, 0, "cpu") >= 0.0
+    assert cl.free(1, 0, "cpu") <= cl.capacity(0, "cpu")
+
+
+def test_price_matrix_matches_scalar_prices():
+    j = small_job()
+    cl = make_cluster(4, 6)
+    pt = PriceTable(estimate_price_params([j], cl, 6), cl)
+    cl.commit(2, j, Allocation(workers={1: 3}, ps={1: 2}))
+    pm = pt.price_matrix(2)
+    for h in range(4):
+        for r in cl.resources:
+            assert pm[h, cl.res_index[r]] == pt.price(2, h, r)  # bit-equal
+    # cache must invalidate on ledger mutation
+    before = pt.price_matrix(2)[1, cl.res_index["gpu"]]
+    cl.commit(2, j, Allocation(workers={1: 5}, ps={}))
+    after = pt.price_matrix(2)[1, cl.res_index["gpu"]]
+    assert after > before
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 1000))
 def test_property_scheduler_invariants(seed):
