@@ -1,0 +1,151 @@
+"""Event-driven simulator benchmark: policies x trace presets x cluster
+sizes, every policy running under the unified registry + engine accounting.
+
+For each grid point a long trace (arrivals, completions, failures ->
+preemption, patience departures) is replayed through each policy via
+``repro.sim``; the per-policy record carries scheduling quality (JCT
+p50/p95, admission/completion rate, mean utilization, realized utility)
+and engine throughput (jobs/sec of wall-clock simulation). Results land in
+``BENCH_sim.json``.
+
+The default grid replays a >= 500-job Google-trace-like stream plus a
+Philly-style heavy-tail stream at two cluster sizes. ``--smoke`` is the
+CI-sized variant (< 60 s). ``pdors_ref`` (the frozen scalar core behind
+the same adapter protocol) is off by default — it is ~20x slower at equal
+decisions; enable with ``--with-reference`` to time it.
+
+Usage:
+    python -m benchmarks.bench_sim                 # full grid (~minutes)
+    python -m benchmarks.bench_sim --smoke
+    python -m benchmarks.bench_sim --policies pdors,drf --presets philly
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core import make_cluster
+from repro.sim import (
+    RollingWindow,
+    SimEngine,
+    TraceConfig,
+    available_policies,
+    calibrate_prices,
+    make_policy,
+    stream,
+)
+
+DEFAULT_POLICIES = ["pdors", "fifo", "drf", "dorm"]
+# (H machines, W lookahead, preset, num_jobs, arrival_rate, failure_rate)
+FULL_GRID = [
+    (8, 16, "google", 500, 4.0, 0.05),
+    (16, 16, "google", 500, 6.0, 0.05),
+    (8, 16, "philly", 500, 4.0, 0.08),
+]
+SMOKE_GRID = [(6, 12, "google", 60, 3.0, 0.10)]
+QUANTA = 12
+CALIB_JOBS = 48
+
+
+def run_point(
+    H: int,
+    W: int,
+    preset: str,
+    num_jobs: int,
+    rate: float,
+    failure_rate: float,
+    policies: List[str],
+    seed: int,
+    max_slots: int,
+) -> List[Dict]:
+    tcfg = TraceConfig(
+        preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
+        failure_rate=failure_rate,
+    )
+    point = {
+        "H": H, "W": W, "preset": preset, "num_jobs": num_jobs,
+        "arrival_rate": rate, "failure_rate": failure_rate, "seed": seed,
+        "quanta": QUANTA, "patience": tcfg.patience,
+    }
+    rows = []
+    for name in policies:
+        cluster = make_cluster(H, W)
+        window = RollingWindow(cluster)
+        if name.startswith("pdors"):
+            params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
+            policy = make_policy(name, price_params=params, quanta=QUANTA)
+        else:
+            policy = make_policy(name)
+        engine = SimEngine(
+            window, policy, seed=seed, max_slots=max_slots,
+            patience=tcfg.patience,
+        )
+        t0 = time.perf_counter()
+        report = engine.run(stream(tcfg))
+        wall = time.perf_counter() - t0
+        s = report.summary
+        rows.append({
+            **point, "policy": name, "wall_s": wall,
+            "jobs_per_sec": num_jobs / wall if wall else float("inf"),
+            "slots_run": report.slots_run, **s,
+        })
+        print(
+            f"  {name:>10}: {num_jobs / wall:8.1f} jobs/s "
+            f"done={s['jobs_completed']}/{s['jobs_offered']} "
+            f"adm={s['admission_rate']:.2f} pre={s['preemptions']} "
+            f"jct p50={s['jct_p50']:.1f} p95={s['jct_p95']:.1f} "
+            f"util={s['total_utility']:.1f}",
+            flush=True,
+        )
+    return rows
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (< 60 s)")
+    ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES),
+                    help=f"comma list from {available_policies()}")
+    ap.add_argument("--presets", default=None,
+                    help="restrict the grid to these presets (comma list)")
+    ap.add_argument("--with-reference", action="store_true",
+                    help="also run the frozen scalar core (pdors_ref, slow)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-slots", type=int, default=4000)
+    ap.add_argument("--out", default="BENCH_sim.json")
+    args = ap.parse_args(argv)
+
+    grid = SMOKE_GRID if args.smoke else FULL_GRID
+    if args.presets:
+        keep = set(args.presets.split(","))
+        grid = [g for g in grid if g[2] in keep]
+    policies = [p for p in args.policies.split(",") if p]
+    if args.with_reference and "pdors_ref" not in policies:
+        policies.append("pdors_ref")
+    for p in policies:
+        if p not in available_policies():
+            ap.error(f"unknown policy {p!r}; available: {available_policies()}")
+
+    all_rows: List[Dict] = []
+    for (H, W, preset, n, rate, frate) in grid:
+        print(f"# sim H={H} W={W} preset={preset} jobs={n} rate={rate} "
+              f"failures={frate} ...", flush=True)
+        t0 = time.time()
+        all_rows.extend(
+            run_point(H, W, preset, n, rate, frate, policies, args.seed,
+                      args.max_slots)
+        )
+        print(f"# point done in {time.time() - t0:.1f}s", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump({"quanta": QUANTA, "calib_jobs": CALIB_JOBS,
+                   "rows": all_rows}, f, indent=2)
+    print(f"# wrote {args.out} ({len(all_rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

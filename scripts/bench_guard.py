@@ -1,0 +1,70 @@
+"""Bench-regression guard: compare a fresh smoke benchmark run against the
+recorded baseline rows in BENCH_scheduler.json.
+
+Fails (exit 1) if the fresh pdors smoke jobs/sec drops more than
+``--max-drop`` (default 30%) below the recorded baseline at the same
+(H, T, num_jobs, workload_scale) grid point. Grid points present in only
+one of the two files are reported and skipped, so the guard never
+false-fails on a machine that has not recorded a baseline yet. Set
+``BENCH_GUARD_SKIP=1`` to bypass entirely (e.g. on known-noisy runners).
+
+Usage:
+    python scripts/bench_guard.py BENCH_scheduler_smoke.json \
+        BENCH_scheduler.json [--max-drop 0.30] [--policy pdors]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _points(doc: dict, policy: str) -> dict:
+    out = {}
+    for row in doc.get("rows", []):
+        if row.get("policy") != policy:
+            continue
+        key = (row["H"], row["T"], row["num_jobs"],
+               row.get("workload_scale"))
+        out[key] = row["jobs_per_sec"]
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="just-produced smoke benchmark json")
+    ap.add_argument("baseline", help="recorded baseline json")
+    ap.add_argument("--max-drop", type=float, default=0.30,
+                    help="max tolerated fractional jobs/sec drop")
+    ap.add_argument("--policy", default="pdors")
+    args = ap.parse_args(argv)
+
+    if os.environ.get("BENCH_GUARD_SKIP"):
+        print("bench_guard: BENCH_GUARD_SKIP set, skipping")
+        return 0
+    with open(args.fresh) as f:
+        fresh = _points(json.load(f), args.policy)
+    with open(args.baseline) as f:
+        base = _points(json.load(f), args.policy)
+
+    checked = failed = 0
+    for key, fresh_jps in sorted(fresh.items()):
+        base_jps = base.get(key)
+        if base_jps is None:
+            print(f"bench_guard: no baseline for H,T,N,scale={key} — skipped")
+            continue
+        checked += 1
+        floor = base_jps * (1.0 - args.max_drop)
+        verdict = "OK" if fresh_jps >= floor else "REGRESSION"
+        if fresh_jps < floor:
+            failed += 1
+        print(f"bench_guard: {args.policy} @ {key}: {fresh_jps:.1f} jobs/s "
+              f"vs baseline {base_jps:.1f} (floor {floor:.1f}) {verdict}")
+    if checked == 0:
+        print("bench_guard: no comparable grid points — nothing enforced")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

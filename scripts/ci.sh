@@ -1,14 +1,24 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: full test suite + the scheduler-throughput smoke benchmark.
+# Tier-1 CI gate: full test suite + scheduler-throughput smoke + simulator
+# smoke + bench-regression guard.
 #
-# The smoke benchmark runs the vectorized PD-ORS core against the frozen
-# pre-PR reference on a tiny grid (< 60 s) and exits nonzero if their
+# The scheduler smoke benchmark runs the vectorized PD-ORS core against the
+# frozen pre-PR reference on a tiny grid (< 60 s) and exits nonzero if their
 # admission decisions or total utility diverge — catching both perf-path
 # regressions and semantic drift without the multi-minute full sweep
 # (python -m benchmarks.bench_scheduler for that).
+#
+# The sim smoke replays a short google-trace stream (completions, failures/
+# preemption, departures) through all four policies via the unified
+# registry (python -m benchmarks.bench_sim for the full sweep). Finally the
+# guard fails if the fresh pdors smoke jobs/sec drops >30% below the smoke
+# baseline recorded in BENCH_scheduler.json (BENCH_GUARD_SKIP=1 to bypass
+# on noisy runners).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python -m benchmarks.bench_scheduler --smoke --out BENCH_scheduler_smoke.json
+python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
+python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json --max-drop 0.30

@@ -3,6 +3,8 @@ production-grade JAX training/serving framework.
 
 Subpackages:
     core        the paper's scheduler (Algorithms 1-4, baselines, theory)
+    sim         event-driven rolling-horizon cluster simulator (trace
+                replay, job dynamics, unified policy registry)
     models      model zoo for the 10 assigned architectures
     configs     per-architecture configs + input-shape registry
     data/optim/checkpoint/train/serve    training & serving substrates

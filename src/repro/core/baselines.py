@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -41,6 +41,132 @@ class SimOutcome:
             c = self.completions.get(j.job_id)
             out.append(float(c - j.arrival) if c is not None else float(horizon))
         return out
+
+
+def place_round_robin_free(
+    free: Dict[tuple, float],
+    H: int,
+    job: JobSpec,
+    n_workers: int,
+    n_ps: int,
+    rng: np.random.Generator,
+) -> Optional[Allocation]:
+    """First-fit round-robin placement over a mutable free-capacity map
+    ``{(h, resource): amount}``; mutates ``free`` as it places and returns
+    None (with ``free`` partially drained) if the request doesn't fit.
+
+    Shared between the static ``_SlotSim`` baselines and the event-driven
+    adapters in ``repro.sim.policy``, so both harnesses place fifo/drf/dorm
+    bundles with the exact same scan order and tolerances."""
+    alloc = Allocation()
+
+    def fit(h: int, demand: Dict[str, float]) -> bool:
+        return all(free[(h, r)] >= d - 1e-9 for r, d in demand.items() if d)
+
+    def take(h: int, demand: Dict[str, float]) -> None:
+        for r, d in demand.items():
+            if d:
+                free[(h, r)] -= d
+
+    h = int(rng.integers(0, H))
+    for kind, count in (("w", n_workers), ("s", n_ps)):
+        demand = job.worker_demand if kind == "w" else job.ps_demand
+        placed = 0
+        scans = 0
+        while placed < count and scans < H * count + H:
+            if fit(h, demand):
+                take(h, demand)
+                d = alloc.workers if kind == "w" else alloc.ps
+                d[h] = d.get(h, 0) + 1
+                placed += 1
+            else:
+                scans += 1
+            h = (h + 1) % H
+        if placed < count:
+            return None
+    return alloc
+
+
+def drf_grant_loop(
+    actives: List[JobSpec],
+    total: Dict[str, float],
+    place_fn,
+) -> Dict[int, Allocation]:
+    """The DRF bundle-granting loop, shared verbatim between the static
+    ``DRFScheduler`` and the event-driven ``repro.sim.policy.DRFPolicy``.
+
+    Repeatedly grants one worker-bundle (round(gamma) workers + 1 PS) to
+    the active job with the smallest dominant share until nothing fits.
+    ``place_fn(job, n_workers, n_ps) -> Optional[Allocation]`` must place
+    AND update its accounting substrate (ledger commit / free-map drain) on
+    success, so successive placements see each other. Returns the merged
+    per-job allocations."""
+    allocs = {j.job_id: Allocation() for j in actives}
+    used: Dict[int, Dict[str, float]] = {}
+    granted = True
+    while granted:
+        granted = False
+
+        def dom(j: JobSpec) -> float:
+            u = used.get(j.job_id, {})
+            return max(
+                (u.get(r, 0.0) / total[r]) for r in total if total[r] > 0
+            ) if u else 0.0
+
+        for j in sorted(actives, key=dom):
+            a = allocs[j.job_id]
+            if a.total_workers() >= j.batch_size:
+                continue
+            nw = max(1, int(round(j.gamma)))
+            nw = min(nw, j.batch_size - a.total_workers())
+            add = place_fn(j, nw, 1)
+            if add is None:
+                continue
+            for h, w in add.workers.items():
+                a.workers[h] = a.workers.get(h, 0) + w
+            for h, s in add.ps.items():
+                a.ps[h] = a.ps.get(h, 0) + s
+            u = used.setdefault(j.job_id, {})
+            for r in total:
+                u[r] = u.get(r, 0.0) + j.worker_demand.get(r, 0.0) * nw \
+                    + j.ps_demand.get(r, 0.0)
+            granted = True
+            break
+    return allocs
+
+
+def dorm_grant_loop(
+    actives: List[JobSpec],
+    progress: Dict[int, float],
+    held_ids,
+    adjust_cap: float,
+    place_fn,
+) -> List[Tuple[JobSpec, Allocation]]:
+    """Dorm's placement pass, shared between the static ``DormScheduler``
+    and ``repro.sim.policy.DormPolicy``: least-progressed waiting jobs
+    first, utilization-maximizing worker-count ladder, at most
+    ``max(1, adjust_cap * len(actives))`` new placements per slot.
+    ``place_fn`` has the same commit-on-success contract as in
+    ``drf_grant_loop``. Returns the (job, allocation) pairs newly placed."""
+    budget = max(1, int(adjust_cap * len(actives)))
+    placed: List[Tuple[JobSpec, Allocation]] = []
+
+    def frac_done(j: JobSpec) -> float:
+        return progress.get(j.job_id, 0.0) / max(j.total_workload(), 1.0)
+
+    for j in sorted(actives, key=frac_done):
+        if len(placed) >= budget:
+            break
+        if j.job_id in held_ids:
+            continue
+        for nw in (j.batch_size, j.batch_size // 2, 8, 4, 2, 1):
+            nw = int(max(1, min(nw, j.batch_size)))
+            ns = max(1, int(math.ceil(nw / j.gamma)))
+            alloc = place_fn(j, nw, ns)
+            if alloc is not None:
+                placed.append((j, alloc))
+                break
+    return placed
 
 
 class _SlotSim:
@@ -109,38 +235,11 @@ class _SlotSim:
     ) -> Optional[Allocation]:
         """First-fit round-robin over machines; None if it doesn't fit."""
         H = self.cluster.num_machines
-        alloc = Allocation()
         free = {
             (h, r): self.cluster.free(t, h, r)
             for h in range(H) for r in self.cluster.resources
         }
-
-        def fit(h: int, demand: Dict[str, float]) -> bool:
-            return all(free[(h, r)] >= d - 1e-9 for r, d in demand.items() if d)
-
-        def take(h: int, demand: Dict[str, float]) -> None:
-            for r, d in demand.items():
-                if d:
-                    free[(h, r)] -= d
-
-        h = int(self.rng.integers(0, H))
-        for kind, count in (("w", n_workers), ("s", n_ps)):
-            demand = job.worker_demand if kind == "w" else job.ps_demand
-            placed = 0
-            scans = 0
-            while placed < count and scans < H * count + H:
-                if fit(h, demand):
-                    take(h, demand)
-                    d = alloc.workers if kind == "w" else alloc.ps
-                    d[h] = d.get(h, 0) + 1
-                    placed += 1
-                else:
-                    scans += 1
-                h = (h + 1) % H
-                scans += 0
-            if placed < count:
-                return None
-        return alloc
+        return place_round_robin_free(free, H, job, n_workers, n_ps, self.rng)
 
 
 class FIFOScheduler(_SlotSim):
@@ -168,7 +267,9 @@ class FIFOScheduler(_SlotSim):
 
 
 class DRFScheduler(_SlotSim):
-    """Dominant-resource fairness, re-computed every slot."""
+    """Dominant-resource fairness, re-computed every slot (the grant loop
+    itself lives in ``drf_grant_loop``, shared with the event-driven
+    adapter)."""
 
     def step(self, t: int) -> None:
         # fresh allocation each slot
@@ -179,40 +280,17 @@ class DRFScheduler(_SlotSim):
             r: sum(self.cluster.capacity(h, r) for h in range(self.cluster.num_machines))
             for r in self.cluster.resources
         }
-        used: Dict[int, Dict[str, float]] = {}
         actives = self.active(t)
         if not actives:
             return
-        allocs = {j.job_id: Allocation() for j in actives}
-        granted = True
-        while granted:
-            granted = False
-            # dominant share per job
-            def dom(j: JobSpec) -> float:
-                u = used.get(j.job_id, {})
-                return max(
-                    (u.get(r, 0.0) / total[r]) for r in total if total[r] > 0
-                ) if u else 0.0
-            for j in sorted(actives, key=dom):
-                a = allocs[j.job_id]
-                if a.total_workers() >= j.batch_size:
-                    continue
-                nw = max(1, int(round(j.gamma)))
-                nw = min(nw, j.batch_size - a.total_workers())
-                add = self.place_round_robin(t, j, nw, 1)
-                if add is None:
-                    continue
+
+        def place_and_commit(j: JobSpec, nw: int, ns: int):
+            add = self.place_round_robin(t, j, nw, ns)
+            if add is not None:
                 self.cluster.commit(t, j, add)
-                for h, w in add.workers.items():
-                    a.workers[h] = a.workers.get(h, 0) + w
-                for h, s in add.ps.items():
-                    a.ps[h] = a.ps.get(h, 0) + s
-                u = used.setdefault(j.job_id, {})
-                for r in total:
-                    u[r] = u.get(r, 0.0) + j.worker_demand.get(r, 0.0) * nw \
-                        + j.ps_demand.get(r, 0.0)
-                granted = True
-                break
+            return add
+
+        allocs = drf_grant_loop(actives, total, place_and_commit)
         for j in actives:
             if not allocs[j.job_id].empty():
                 self.current[j.job_id] = allocs[j.job_id]
@@ -224,7 +302,9 @@ class DRFScheduler(_SlotSim):
 
 
 class DormScheduler(_SlotSim):
-    """Utilization-maximizing greedy with fairness + adjustment cap."""
+    """Utilization-maximizing greedy with fairness + adjustment cap (the
+    placement pass lives in ``dorm_grant_loop``, shared with the
+    event-driven adapter)."""
 
     def __init__(self, jobs, cluster, seed: int = 0, adjust_cap: float = 0.5):
         super().__init__(jobs, cluster, seed)
@@ -234,31 +314,18 @@ class DormScheduler(_SlotSim):
         actives = self.active(t)
         if not actives:
             return
-        # adjustment-overhead constraint: only a fraction may change alloc
-        adjustable = set(
-            j.job_id for j in actives if j.job_id not in self.current
-        )
-        budget = max(1, int(self.adjust_cap * len(actives)))
-        for j in actives:
-            if len(adjustable) >= budget:
-                break
-            adjustable.add(j.job_id)
-        # fairness: grant bundles to the least-progressed adjustable jobs,
-        # maximizing utilization (larger bundles first)
-        def frac_done(j: JobSpec) -> float:
-            return self.progress[j.job_id] / max(j.total_workload(), 1.0)
-        for j in sorted(actives, key=frac_done):
-            if j.job_id not in adjustable or j.job_id in self.current:
-                continue
-            # utilization-max: try large worker counts first
-            for nw in (j.batch_size, j.batch_size // 2, 8, 4, 2, 1):
-                nw = int(max(1, min(nw, j.batch_size)))
-                ns = max(1, int(math.ceil(nw / j.gamma)))
-                alloc = self.place_round_robin(t, j, nw, ns)
-                if alloc is not None:
-                    self.current[j.job_id] = alloc
-                    self.cluster.commit(t, j, alloc)
-                    break
+
+        def place_and_commit(j: JobSpec, nw: int, ns: int):
+            alloc = self.place_round_robin(t, j, nw, ns)
+            if alloc is not None:
+                self.cluster.commit(t, j, alloc)
+            return alloc
+
+        for j, alloc in dorm_grant_loop(
+            actives, self.progress, set(self.current), self.adjust_cap,
+            place_and_commit,
+        ):
+            self.current[j.job_id] = alloc
 
 
 # ----------------------------------------------------------------------

@@ -165,6 +165,24 @@ class Cluster:
             np.maximum(row, 0.0, out=row)
             self._used[t, h] = row
 
+    def advance(self, steps: int = 1) -> None:
+        """Slide the ledger left by ``steps`` slots (rolling-horizon mode).
+
+        Row 0 — the slot that just elapsed — drops off the front and a zero
+        row appears at the back, so index k afterwards refers to the slot
+        that was index k+steps before. The static PD-ORS path never calls
+        this; ``repro.sim`` advances the window as wall-clock slots elapse.
+        All derived caches invalidate via the version bump."""
+        if steps <= 0:
+            return
+        self.version += 1
+        k = min(steps, self.horizon)
+        if k >= self.horizon:
+            self._used[:] = 0.0
+        else:
+            self._used[:-k] = self._used[k:]
+            self._used[-k:] = 0.0
+
     def utilization(self, t: int) -> Dict[Resource, float]:
         cap = self.capacity_matrix.sum(axis=0)          # (R,)
         use = self._used[t].sum(axis=0) if 0 <= t < self.horizon else \

@@ -86,11 +86,33 @@ class WorkloadDP:
             self._snaps[t] = PriceSnapshot(self.job, self.cluster, self.prices, t)
         return self._snaps[t]
 
+    def _theta_rng(self, t: int, units: int) -> np.random.Generator:
+        """rng for one theta(t, units) evaluation.
+
+        In "compat" mode this is the scheduler's sequential stream (kept
+        bit-aligned with core/_reference.py). In "derived" mode each
+        (job, t, v) gets its own generator seeded from
+        (cfg.seed, job_id, t, units), so the result is a pure function of
+        the ledger state — independent of the order in which the simulator
+        (or a batched offer path) happens to evaluate thetas."""
+        if self.cfg.rng_mode != "derived":
+            return self.rng
+        # negative seeds map above 2**63 (not onto their positive twins),
+        # keeping the key path injective
+        s = int(self.cfg.seed)
+        s = s if s >= 0 else (1 << 63) - s
+        return np.random.default_rng(
+            np.random.SeedSequence(
+                (s, int(self.job.job_id), int(t), int(units))
+            )
+        )
+
     def theta(self, t: int, units: int) -> Optional[ThetaResult]:
         key = (t, units)
         if key not in self._theta:
             self._theta[key] = solve_theta_snapshot(
-                self.job, self.snapshot(t), units * self.unit, self.cfg, self.rng,
+                self.job, self.snapshot(t), units * self.unit, self.cfg,
+                self._theta_rng(t, units),
             )
         return self._theta[key]
 

@@ -70,9 +70,20 @@ class SubproblemConfig:
     seed: int = 0
     prune_margin: float = 2.0      # capacity head-room factor for pruning
     max_lp_machines: int = 48
-    # min-plus DP step: None = auto (pallas on TPU, numpy otherwise);
-    # "numpy" | "pallas" | "scalar" force a path (see kernels/minplus.py).
+    # min-plus DP step: None = the bit-stable NumPy path; "pallas" (float32
+    # TPU kernel, opt-in — see minplus_step's docstring for why it is never
+    # auto-selected) | "scalar" | "numpy" force a path (kernels/minplus.py).
     minplus_backend: Optional[str] = None
+    # rounding-rng discipline:
+    #   "compat"  — one sequential stream shared with the scheduler, kept
+    #               bit-aligned with core/_reference.py via the burn
+    #               accounting in _external_dominated (golden-parity mode);
+    #   "derived" — each theta(t, v) evaluation draws from a fresh
+    #               np.random.Generator seeded per (cfg.seed, job_id, t,
+    #               units), so results are independent of evaluation order
+    #               and no burn accounting is needed (the mode the
+    #               event-driven simulator uses; see repro/sim).
+    rng_mode: str = "compat"
 
 
 class PriceSnapshot:
@@ -474,6 +485,10 @@ def _external_dominated(
         return True                       # reference bails pre-rounding
     if bundle_sum < W1 + 1e-6:
         return False                      # can't certify LP feasibility
+    if cfg.rng_mode == "derived":
+        # per-(job, t, v) derived rngs: skipping a solve cannot desync any
+        # other draw, so there is no stream to keep aligned
+        return True
     # burn the (S, 2M) uniform block the reference's rounding would draw.
     # Generator.random consumes one PCG64 step per double, so advancing the
     # bit generator is stream-equivalent to drawing and discarding (covered

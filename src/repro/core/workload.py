@@ -76,42 +76,50 @@ def _arrivals(rng: np.random.Generator, cfg: WorkloadConfig) -> List[int]:
     return sorted(rng.choice(T, size=n, p=weights).tolist())
 
 
+def draw_job(
+    rng: np.random.Generator, cfg: WorkloadConfig, job_id: int, arrival: int
+) -> JobSpec:
+    """Draw one job's parameters from ``rng`` (the §5 synthetic ranges).
+
+    This is the loop body of ``synthetic_jobs`` factored out so streaming
+    generators (``repro.sim.traces``) can call it with a per-job *derived*
+    generator — every (job_id, parameter) pair is then reproducible without
+    replaying the whole sequential stream. The draw order is frozen: E, K,
+    F, g, tau, gamma, b_int, worker demands, PS demands, utility."""
+    E = int(rng.integers(cfg.epochs[0], cfg.epochs[1] + 1))
+    K = int(rng.integers(cfg.samples[0], cfg.samples[1] + 1))
+    if cfg.workload_scale != 1.0:
+        K = max(1, int(K * cfg.workload_scale))
+    F = int(rng.integers(cfg.batch[0], cfg.batch[1] + 1))
+    g = rng.uniform(*cfg.grad_mb)
+    tau = rng.uniform(*cfg.tau)
+    gamma = rng.uniform(*cfg.gamma)
+    b_int = rng.uniform(*cfg.bw_internal)
+    worker = {
+        "gpu": float(rng.integers(0, 5)),
+        "cpu": float(rng.integers(1, 11)),
+        "mem": float(rng.integers(2, 33)),
+        "storage": float(rng.integers(5, 11)),
+    }
+    ps = {
+        "gpu": 0.0,
+        "cpu": float(rng.integers(1, 11)),
+        "mem": float(rng.integers(2, 33)),
+        "storage": float(rng.integers(5, 11)),
+    }
+    return JobSpec(
+        job_id=job_id, arrival=int(arrival), epochs=E, num_samples=K,
+        batch_size=F, tau=tau, grad_size=g, gamma=gamma,
+        bw_internal=b_int, bw_external=b_int * cfg.ext_over_int,
+        worker_demand=worker, ps_demand=ps,
+        utility=_utility(rng, cfg),
+    )
+
+
 def synthetic_jobs(cfg: WorkloadConfig) -> List[JobSpec]:
     rng = np.random.default_rng(cfg.seed)
     arrivals = _arrivals(rng, cfg)
-    jobs: List[JobSpec] = []
-    for i, a in enumerate(arrivals):
-        E = int(rng.integers(cfg.epochs[0], cfg.epochs[1] + 1))
-        K = int(rng.integers(cfg.samples[0], cfg.samples[1] + 1))
-        if cfg.workload_scale != 1.0:
-            K = max(1, int(K * cfg.workload_scale))
-        F = int(rng.integers(cfg.batch[0], cfg.batch[1] + 1))
-        g = rng.uniform(*cfg.grad_mb)
-        tau = rng.uniform(*cfg.tau)
-        gamma = rng.uniform(*cfg.gamma)
-        b_int = rng.uniform(*cfg.bw_internal)
-        worker = {
-            "gpu": float(rng.integers(0, 5)),
-            "cpu": float(rng.integers(1, 11)),
-            "mem": float(rng.integers(2, 33)),
-            "storage": float(rng.integers(5, 11)),
-        }
-        ps = {
-            "gpu": 0.0,
-            "cpu": float(rng.integers(1, 11)),
-            "mem": float(rng.integers(2, 33)),
-            "storage": float(rng.integers(5, 11)),
-        }
-        jobs.append(
-            JobSpec(
-                job_id=i, arrival=int(a), epochs=E, num_samples=K,
-                batch_size=F, tau=tau, grad_size=g, gamma=gamma,
-                bw_internal=b_int, bw_external=b_int * cfg.ext_over_int,
-                worker_demand=worker, ps_demand=ps,
-                utility=_utility(rng, cfg),
-            )
-        )
-    return jobs
+    return [draw_job(rng, cfg, i, a) for i, a in enumerate(arrivals)]
 
 
 def trace_jobs(cfg: WorkloadConfig) -> List[JobSpec]:

@@ -18,10 +18,15 @@ the diagonal). Three implementations, all returning the same values:
     import/lowering failure falls back to the NumPy path (mirroring the
     rmsnorm/ops kernel pattern).
 
-Besides the min values every implementation returns the DP ``choice`` array:
+Besides the min values every implementation returns the DP ``choice`` array
+(-1 for an unreachable state). Scalar and NumPy share the exact contract —
 choice[u] = the smallest v whose candidate is within 1e-12 of the row
-minimum (the scalar loop's acceptance hysteresis), or -1 for an unreachable
-state, so backtracking reconstructs identical schedules on every backend.
+minimum (the scalar loop's acceptance hysteresis) — so backtracking
+reconstructs bit-identical schedules on either. The Pallas path recovers
+choice host-side via a plain float32 argmin (no hysteresis): near-ties
+within ~1e-12, or values float32 rounding reorders, may backtrack
+differently — one more reason the float32 kernel is opt-in and excluded
+from the parity-guaranteed paths (see ``minplus_step``).
 """
 from __future__ import annotations
 

@@ -1,0 +1,321 @@
+"""The discrete-event simulation engine.
+
+One slot of simulated time is processed as:
+
+  1. advance the rolling window to the slot (elapsed ledger rows roll off);
+  2. drain the event queue for the slot in deterministic order — failures
+     (running job -> PREEMPT: release held rows, notify the policy, sit the
+     job out for the failed slot — a uniform one-slot minimum penalty
+     across policy shapes — and for arrival-driven policies requeue the
+     residual workload as a fresh arrival next slot), then the arrival
+     batch, then exogenous departures (after the batch, so a same-slot
+     DEPARTURE + ARRIVAL pair departs instead of being dropped);
+  3. offer the slot's arrival *batch* to the policy in one call (the
+     batched-offer path: one price-tensor prewarm amortizes across every
+     same-slot job);
+  4. slot-driven policies get the SLOT tick with the active set + progress;
+  5. progress accounting: every job's committed allocation for this slot
+     earns ``Allocation.samples_trained`` (Eq. 1 / Fact 1 — the same
+     throughput model for every policy); jobs crossing V_i complete, their
+     remaining rows are released, utility u_i(actual JCT) is realized;
+  6. patience: queued-but-never-served jobs depart after ``patience``
+     slots; metrics record the slot's utilization/active/queued counts.
+
+The engine owns ALL accounting (progress, completions, utility, metrics);
+policies only decide allocations. That is what makes the per-policy
+numbers in ``BENCH_sim.json`` apples-to-apples.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, Iterator, List, Optional
+
+from ..core.job import Allocation, JobSpec
+from .events import Event, EventKind, EventQueue
+from .metrics import MetricsCollector
+from .policy import SchedulingPolicy
+from .window import RollingWindow
+
+
+@dataclass
+class JobState:
+    """Engine-side state of one job across attempts (a preempted job's
+    residual workload is a new attempt with a fresh, smaller spec)."""
+
+    job: JobSpec                 # current attempt's spec
+    orig_arrival: int
+    attempt: int = 0
+    progress: float = 0.0        # trained samples of the CURRENT attempt
+    active: bool = False         # in the system (admitted or queued)
+    finished: bool = False       # completed, departed, or rejected
+    awaiting_requeue: bool = False
+    down_at: int = -1            # slot a failure knocked this job out for
+
+
+@dataclass
+class SimReport:
+    summary: Dict
+    metrics: MetricsCollector
+    states: Dict[int, JobState]
+    slots_run: int
+
+
+class SimEngine:
+    def __init__(
+        self,
+        window: RollingWindow,
+        policy: SchedulingPolicy,
+        seed: int = 0,
+        max_slots: int = 100_000,
+        patience: Optional[int] = None,
+        check_ledger: bool = True,
+    ):
+        self.window = window
+        self.policy = policy
+        self.seed = seed
+        self.max_slots = max_slots
+        self.patience = patience
+        self.check_ledger = check_ledger
+        self.metrics = MetricsCollector(window.cluster.resources)
+        self.states: Dict[int, JobState] = {}
+        self.queue = EventQueue()
+        policy.bind(window, seed)
+
+    # ------------------------------------------------------------------
+    def _notify(self, kind: EventKind, job_id: int, t: int) -> None:
+        self.policy.offer(
+            Event(time=t, kind=kind, job_id=job_id), self.window
+        )
+
+    def _residual(self, js: JobState, t: int) -> Optional[JobSpec]:
+        """The preempted job's remaining workload as a next-slot re-offer."""
+        remaining = js.job.total_workload() - js.progress
+        if remaining <= 1e-6:
+            return None
+        return replace(
+            js.job, epochs=1, num_samples=max(1, int(math.ceil(remaining))),
+            arrival=t + 1,
+        )
+
+    def _fail(self, job_id: int, t: int) -> None:
+        js = self.states.get(job_id)
+        if js is None or js.finished or not js.active:
+            return  # not running (never served / already done): fault is moot
+        oc = self.metrics.outcome(job_id, js.orig_arrival)
+        released = self.window.release_from(job_id, t)
+        if released == 0 and js.progress <= 0:
+            return  # never served: the fault hit a queued job, nothing to kill
+        oc.preemptions += 1
+        # the failed slot is lost for every policy shape: the job sits out
+        # slot t's tick (slot-driven) / restarts no earlier than t+1
+        # (arrival-driven), so a failure costs at least one service slot
+        # uniformly — arrival-driven policies additionally lose their
+        # committed forward schedule and must re-admit the residual
+        js.down_at = t
+        self.metrics.count("preempt")
+        self._notify(EventKind.PREEMPT, job_id, t)
+        if self.policy.reoffers_on_preempt:
+            residual = self._residual(js, t)
+            if residual is None:
+                return
+            js.active = False
+            js.awaiting_requeue = True
+            self.queue.push(Event(time=t + 1, kind=EventKind.ARRIVAL,
+                                  job=residual, requeue=True))
+        # slot-driven: the job stays active; the policy dropped any held
+        # allocation in on_preempt and will re-place it next tick
+
+    def _depart(self, job_id: int, t: int) -> None:
+        js = self.states[job_id]
+        js.active = False
+        js.finished = True
+        self.window.release_from(job_id, t)  # same-slot admissions may hold rows
+        oc = self.metrics.outcome(job_id, js.orig_arrival)
+        oc.departed_at = t
+        self.metrics.count("departure")
+        self._notify(EventKind.DEPARTURE, job_id, t)
+
+    def _handle_arrivals(self, batch: List[Event], t: int) -> None:
+        jobs: List[JobSpec] = []
+        for ev in batch:
+            job = ev.job
+            js = self.states.get(job.job_id)
+            if ev.requeue:
+                js.job = job
+                js.attempt += 1
+                js.progress = 0.0
+                js.awaiting_requeue = False
+            else:
+                js = self.states[job.job_id] = JobState(
+                    job=job, orig_arrival=job.arrival
+                )
+                self.metrics.outcome(job.job_id, job.arrival)
+                self.metrics.count("arrival")
+                if ev.fail_at is not None and ev.fail_at > t:
+                    self.queue.push(Event(time=ev.fail_at,
+                                          kind=EventKind.FAILURE,
+                                          job_id=job.job_id))
+            jobs.append(job)
+        jobs.sort(key=lambda j: j.job_id)
+        dec = self.policy.offer(
+            Event(time=t, kind=EventKind.ARRIVAL, jobs=tuple(jobs)),
+            self.window,
+        )
+        for job in jobs:
+            js = self.states[job.job_id]
+            oc = self.metrics.outcome(job.job_id, js.orig_arrival)
+            if self.policy.slot_driven:
+                js.active = True     # implicit admission: queue until served
+                continue
+            admitted = dec.admitted.get(job.job_id, False)
+            if js.attempt == 0:
+                oc.admitted = admitted
+            if admitted:
+                js.active = True
+            elif js.attempt == 0:
+                # rejected offers leave immediately (Algorithm 1 admits/drops)
+                js.active = False
+                js.finished = True
+                self.metrics.count("rejection")
+            else:
+                # a preempted job whose residual re-offer was rejected: it
+                # WAS admitted, trained, and then left incomplete — surfaced
+                # as an eviction so completion shortfalls stay attributable
+                js.active = False
+                js.finished = True
+                oc.evicted_at = t
+                self.metrics.count("eviction")
+
+    def _account_progress(self, t: int) -> None:
+        for job_id, js in self.states.items():
+            if not js.active or js.finished:
+                continue
+            alloc = self.window.alloc_at(job_id, t)
+            if alloc is None or alloc.empty():
+                continue
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            if oc.first_service is None:
+                oc.first_service = t
+            js.progress += alloc.samples_trained(js.job)
+            if js.progress >= js.job.total_workload() - 1e-6:
+                js.active = False
+                js.finished = True
+                self.window.release_from(job_id, t + 1)
+                oc.completed_at = t
+                oc.utility = js.job.utility(t - js.orig_arrival)
+                self.metrics.count("completion")
+                self._notify(EventKind.COMPLETION, job_id, t)
+
+    def _check_patience(self, t: int) -> None:
+        if self.patience is None:
+            return
+        for job_id, js in list(self.states.items()):
+            if not js.active or js.finished:
+                continue
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            if oc.admitted is True:
+                continue  # an admitted job holds a schedule contract
+            if oc.first_service is None and t - js.orig_arrival >= self.patience:
+                self._depart(job_id, t)
+
+    # ------------------------------------------------------------------
+    def run(self, events: Iterable[Event]) -> SimReport:
+        stream: Iterator[Event] = iter(events)
+        pending = next(stream, None)
+        t = 0
+        while t < self.max_slots:
+            while pending is not None and pending.time <= t:
+                self.queue.push(pending)
+                pending = next(stream, None)
+            busy = any(js.active or js.awaiting_requeue
+                       for js in self.states.values())
+            if not busy and not len(self.queue) and pending is None:
+                break
+            self.window.advance_to(t)
+
+            batch: List[Event] = []
+            departures: List[int] = []
+            for ev in self.queue.pop_until(t):
+                if ev.kind == EventKind.FAILURE:
+                    self._fail(ev.subject(), t)
+                elif ev.kind == EventKind.ARRIVAL:
+                    batch.append(ev)
+                elif ev.kind == EventKind.DEPARTURE:
+                    # exogenous departure (a trace may model jobs giving up
+                    # on their own clock); applied after the slot's arrival
+                    # batch so a same-slot DEPARTURE+ARRIVAL pair still
+                    # departs instead of being dropped against a job state
+                    # that does not exist yet
+                    departures.append(ev.subject())
+                else:
+                    # COMPLETION/PREEMPT/SLOT are engine-emitted
+                    # notifications, never queue input — fail loud rather
+                    # than silently dropping a mis-routed event
+                    raise ValueError(
+                        f"unsupported queued event kind {ev.kind!r} at t={t}"
+                    )
+            if batch:
+                self._handle_arrivals(batch, t)
+            for job_id in departures:
+                js = self.states.get(job_id)
+                if js is None or js.finished or not js.active \
+                        or self.metrics.outcome(
+                            job_id, js.orig_arrival).first_service is not None:
+                    self.metrics.count("departure_moot")  # served/done/unknown
+                    continue
+                self._depart(job_id, t)
+            if self.policy.slot_driven:
+                actives = sorted(
+                    (js.job for js in self.states.values()
+                     if js.active and not js.finished and js.down_at != t),
+                    key=lambda j: (j.arrival, j.job_id),
+                )
+                if actives:
+                    self.policy.offer(
+                        Event(
+                            time=t, kind=EventKind.SLOT, jobs=tuple(actives),
+                            progress={
+                                j.job_id: self.states[j.job_id].progress
+                                for j in actives
+                            },
+                        ),
+                        self.window,
+                    )
+            if self.check_ledger and self.window.oversubscribed():
+                raise AssertionError(
+                    f"ledger oversubscribed at slot {t} "
+                    f"(policy {self.policy.name})"
+                )
+            self._account_progress(t)
+            self._check_patience(t)
+            active = sum(1 for js in self.states.values() if js.active)
+            queued = sum(
+                1 for js in self.states.values()
+                if js.active and self.metrics.outcome(
+                    js.job.job_id, js.orig_arrival).first_service is None
+            )
+            self.metrics.record_slot(
+                t, self.window.utilization_now(), active, queued
+            )
+            t += 1
+        return SimReport(
+            summary=self.metrics.summary(),
+            metrics=self.metrics,
+            states=self.states,
+            slots_run=t,
+        )
+
+
+def simulate(
+    window: RollingWindow,
+    policy: SchedulingPolicy,
+    events: Iterable[Event],
+    seed: int = 0,
+    max_slots: int = 100_000,
+    patience: Optional[int] = None,
+) -> SimReport:
+    """One-call convenience wrapper."""
+    return SimEngine(
+        window, policy, seed=seed, max_slots=max_slots, patience=patience
+    ).run(events)

@@ -1,0 +1,103 @@
+"""Discrete-event vocabulary and the heap-ordered clock for ``repro.sim``.
+
+Five event kinds drive the simulation:
+
+  ARRIVAL    — a job (or same-slot batch of jobs) enters the system and is
+               offered to the policy. Queue input (traces yield these).
+  FAILURE    — an exogenous fault kills a running job's allocation. Queue
+               input (the engine materializes it from an ARRIVAL's
+               ``fail_at``; tests may push it directly).
+  DEPARTURE  — a job abandons before ever being served. Usually emitted by
+               the engine when patience expires; also accepted as queue
+               input for traces that model jobs leaving on their own clock.
+  COMPLETION — a job finished its workload V_i = E_i K_i. Engine-emitted
+               notification only (progress accounting crosses V_i) — never
+               valid queue input.
+  PREEMPT    — the engine's response to a FAILURE of a running job: its
+               commitments are released, it sits out the failed slot, and
+               admission-driven policies get the residual re-offered.
+               Engine-emitted notification only.
+
+The engine raises on queued kinds outside {ARRIVAL, FAILURE, DEPARTURE}.
+
+Determinism contract: the queue orders events by (time, kind-priority,
+sequence number), with ties within a kind popping in insertion order.
+Within one slot the engine processes failures first, then the arrival
+batch, then exogenous departures (after the batch, so a same-slot
+DEPARTURE + ARRIVAL pair departs instead of dropping against a job state
+that does not exist yet), then the slot tick. Nothing about processing
+depends on heap internals, so a replayed trace produces the identical
+event log on every run.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..core.job import JobSpec
+
+
+class EventKind(IntEnum):
+    """Event kinds; the integer value is the same-slot processing priority
+    (lower pops first)."""
+
+    FAILURE = 0
+    PREEMPT = 1
+    DEPARTURE = 2
+    COMPLETION = 3
+    ARRIVAL = 4
+    SLOT = 5          # the per-slot scheduling tick (slot-driven policies)
+
+
+@dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence on the simulation clock.
+
+    ``job`` is set for a single-job ARRIVAL (the arriving spec, possibly a
+    residual re-offer after preemption); ``job_id`` identifies the subject
+    of the other kinds. ``fail_at`` on an ARRIVAL is the trace's pre-drawn
+    failure slot for this job (the engine materializes the FAILURE event
+    from it, which keeps trace generators streaming — they never need to
+    emit out-of-order events). ``requeue`` marks a residual re-offer.
+
+    The engine-built events handed to policies carry extra payload:
+    ``jobs`` — the same-slot arrival batch (ARRIVAL) or the active job set
+    (SLOT), and ``progress`` — trained samples per active job (SLOT), which
+    slot-driven policies like Dorm use for fairness ordering."""
+
+    time: int
+    kind: EventKind
+    job: Optional[JobSpec] = None
+    job_id: int = -1
+    fail_at: Optional[int] = None
+    requeue: bool = False
+    jobs: Tuple[JobSpec, ...] = ()
+    progress: Optional[Dict[int, float]] = None
+
+    def subject(self) -> int:
+        return self.job.job_id if self.job is not None else self.job_id
+
+
+class EventQueue:
+    """Heap-ordered clock: pop order is (time, kind priority, push order)."""
+
+    def __init__(self) -> None:
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, ev: Event) -> None:
+        heapq.heappush(self._heap, (ev.time, int(ev.kind), next(self._seq), ev))
+
+    def peek_time(self) -> Optional[int]:
+        return self._heap[0][0] if self._heap else None
+
+    def pop_until(self, t: int) -> Iterator[Event]:
+        """Pop every event with time <= t, in deterministic order."""
+        while self._heap and self._heap[0][0] <= t:
+            yield heapq.heappop(self._heap)[3]

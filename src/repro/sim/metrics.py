@@ -1,0 +1,141 @@
+"""Metrics pipeline for the event-driven simulator.
+
+Per-slot series (utilization per resource, active/queued counts) are
+recorded as the engine runs; per-job outcomes (admission, queueing delay,
+JCT, utility, preemptions) are recorded as their events fire. ``summary()``
+folds both into the flat dict that ``benchmarks/bench_sim.py`` writes to
+``BENCH_sim.json``: JCT p50/p95/mean + CDF, queueing-delay percentiles,
+admission/completion rates, mean utilization, and total realized utility
+(u_i evaluated at the *actual* completion latency, per the engine's
+accounting — never the policy's own estimate).
+
+Conventions: JCT and utility are measured for completed jobs only;
+``completion_rate``/``admission_rate`` put the censoring in plain sight.
+Queueing delay is first-service slot minus arrival slot (0 for a job
+served in its arrival slot). Utilization averages are reported both over
+all simulated slots and over busy slots (>= 1 active job).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class JobOutcome:
+    job_id: int
+    arrival: int
+    admitted: Optional[bool] = None    # None: slot-driven (implicit)
+    first_service: Optional[int] = None
+    completed_at: Optional[int] = None
+    departed_at: Optional[int] = None
+    evicted_at: Optional[int] = None   # admitted, preempted, residual rejected
+    preemptions: int = 0
+    utility: float = 0.0
+
+    @property
+    def jct(self) -> Optional[int]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.arrival
+
+    @property
+    def queue_delay(self) -> Optional[int]:
+        if self.first_service is None:
+            return None
+        return self.first_service - self.arrival
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=float), q)) if xs else 0.0
+
+
+class MetricsCollector:
+    def __init__(self, resources: List[str]):
+        self.resources = list(resources)
+        self.outcomes: Dict[int, JobOutcome] = {}
+        self.per_slot: List[Dict] = []
+        self.event_counts: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ jobs
+    def outcome(self, job_id: int, arrival: int) -> JobOutcome:
+        oc = self.outcomes.get(job_id)
+        if oc is None:
+            oc = self.outcomes[job_id] = JobOutcome(job_id, arrival)
+        return oc
+
+    def count(self, kind: str) -> None:
+        self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
+
+    # ------------------------------------------------------------ slots
+    def record_slot(
+        self, t: int, utilization: Dict[str, float], active: int, queued: int
+    ) -> None:
+        self.per_slot.append(
+            {"t": t, "util": dict(utilization), "active": active,
+             "queued": queued}
+        )
+
+    # ------------------------------------------------------------ report
+    def jct_cdf(self) -> Tuple[List[float], List[float]]:
+        jcts = sorted(
+            oc.jct for oc in self.outcomes.values() if oc.jct is not None
+        )
+        n = len(jcts)
+        return [float(x) for x in jcts], [(i + 1) / n for i in range(n)]
+
+    def summary(self) -> Dict:
+        ocs = list(self.outcomes.values())
+        offered = len(ocs)
+        completed = [oc for oc in ocs if oc.completed_at is not None]
+        departed = [oc for oc in ocs if oc.departed_at is not None]
+        rejected = [oc for oc in ocs if oc.admitted is False]
+        served = [oc for oc in ocs if oc.first_service is not None]
+        jcts = [float(oc.jct) for oc in completed]
+        delays = [float(oc.queue_delay) for oc in served]
+        util_all: Dict[str, List[float]] = {r: [] for r in self.resources}
+        util_busy: Dict[str, List[float]] = {r: [] for r in self.resources}
+        for row in self.per_slot:
+            for r in self.resources:
+                v = row["util"].get(r, 0.0)
+                util_all[r].append(v)
+                if row["active"] > 0:
+                    util_busy[r].append(v)
+        mean = lambda xs: float(np.mean(xs)) if xs else 0.0
+        # "admitted": explicit admission (arrival-driven policies) or ever
+        # served (slot-driven policies have no admission control)
+        admitted = [
+            oc for oc in ocs
+            if oc.admitted is True
+            or (oc.admitted is None and oc.first_service is not None)
+        ]
+        return {
+            "jobs_offered": offered,
+            "jobs_admitted": len(admitted),
+            "jobs_completed": len(completed),
+            "jobs_rejected": len(rejected),
+            "jobs_departed": len(departed),
+            "jobs_evicted": sum(1 for oc in ocs if oc.evicted_at is not None),
+            "preemptions": sum(oc.preemptions for oc in ocs),
+            "admission_rate": len(admitted) / offered if offered else 0.0,
+            "completion_rate": len(completed) / offered if offered else 0.0,
+            "jct_p50": _pct(jcts, 50), "jct_p95": _pct(jcts, 95),
+            "jct_mean": mean(jcts),
+            "queue_delay_p50": _pct(delays, 50),
+            "queue_delay_p95": _pct(delays, 95),
+            "total_utility": float(sum(oc.utility for oc in ocs)),
+            "utilization_mean": {r: mean(v) for r, v in util_all.items()},
+            "utilization_busy_mean": {r: mean(v) for r, v in util_busy.items()},
+            "slots": len(self.per_slot),
+            "events": dict(sorted(self.event_counts.items())),
+        }
+
+    def to_json(self, path: str, extra: Optional[Dict] = None) -> None:
+        jcts, cdf = self.jct_cdf()
+        doc = {**(extra or {}), "summary": self.summary(),
+               "jct_cdf": {"jct": jcts, "cdf": cdf}}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=2)

@@ -1,0 +1,480 @@
+"""Unified policy protocol + registry for the event-driven simulator.
+
+Every scheduler — PD-ORS (vectorized), the frozen pre-vectorization
+reference core, and the fifo/drf/dorm baselines — is wrapped behind one
+protocol::
+
+    decision = policy.offer(event, view)   # view: RollingWindow
+
+so all of them run under *identical accounting*: every ledger mutation
+flows through ``RollingWindow.commit``/``release_from``, progress is
+accrued by the engine from the committed allocation of the current slot
+via the same Eq. (1)/Fact 1 throughput model, and completions/JCTs/utility
+are measured by the engine, never by the policy. (The static harnesses —
+``run_pdors`` and ``_SlotSim`` — keep their own accounting and remain
+bit-compatible with ``core/_reference.py``; this module never touches
+them.)
+
+Two policy shapes exist behind the same protocol:
+
+  * arrival-driven (``pdors``, ``pdors_ref``): react to ARRIVAL events by
+    committing a full forward schedule into the window (and to PREEMPT by
+    having the engine re-offer the residual workload);
+  * slot-driven (``fifo``, ``drf``, ``dorm``): react to the per-slot SLOT
+    tick by committing current-slot grants; nothing persists in the ledger
+    across slots, so "holding" a machine means re-granting the same
+    allocation every slot (fifo/dorm) while drf re-solves from scratch.
+
+rng discipline: adapters never share a sequential stream. Every random
+decision is drawn from a generator derived from
+``SeedSequence((base_seed, policy_tag, ...))`` — per job for fifo's fixed
+worker count, per slot for placement scan starts, per (job, attempt) for
+PD-ORS offers — so replaying a trace, or reordering policy runs, can never
+shift another decision's draws.
+
+Registry: ``@register_policy(name)`` + ``make_policy(name, **kw)`` +
+``available_policies()``. ``benchmarks/bench_sim.py`` and the tests only
+go through the registry.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import _reference as _ref
+from ..core.baselines import (
+    dorm_grant_loop,
+    drf_grant_loop,
+    place_round_robin_free,
+)
+from ..core.job import Allocation, JobSpec
+from ..core.pricing import PriceParams, PriceTable
+from ..core.schedule import find_best_schedule
+from ..core.subproblem import SubproblemConfig
+from .events import Event, EventKind
+from .window import RollingWindow
+
+# policy tags folded into derived seeds so no two policies (or purposes)
+# ever share a stream. NOTE: pdors_ref deliberately has no tag of its own —
+# it reuses _TAG_PDORS per (job, attempt), which is exactly what makes its
+# decisions bit-identical to PDORSPolicy(rng_mode="compat") on a trace.
+_TAG_PDORS, _TAG_FIFO, _TAG_DRF, _TAG_DORM = 1, 2, 3, 4
+
+
+def _nonneg(k: int) -> int:
+    """Injective map into SeedSequence's non-negative domain: negatives land
+    above 2**63 instead of folding onto their positive twins, so seed -1
+    and seed 1 really are different streams."""
+    k = int(k)
+    return k if k >= 0 else (1 << 63) - k
+
+
+def derived_rng(*keys: int) -> np.random.Generator:
+    """Generator seeded from an integer key path (order-independent of any
+    other draw in the simulation)."""
+    return np.random.default_rng(
+        np.random.SeedSequence(tuple(_nonneg(k) for k in keys))
+    )
+
+
+@dataclass
+class Decision:
+    """What a policy did with an event (bookkeeping for the engine; the
+    ledger itself was already updated through the view).
+
+    ``admitted``  — job_id -> bool for ARRIVAL offers (arrival-driven).
+    ``schedules`` — job_id -> {absolute slot -> Allocation} committed.
+    ``grants``    — job_id -> current-slot Allocation (slot-driven)."""
+
+    admitted: Dict[int, bool] = field(default_factory=dict)
+    schedules: Dict[int, Dict[int, Allocation]] = field(default_factory=dict)
+    grants: Dict[int, Allocation] = field(default_factory=dict)
+
+
+class SchedulingPolicy:
+    """Base adapter: dispatches ``offer(event, view)`` to per-kind hooks."""
+
+    name: str = "base"
+    slot_driven: bool = False
+    # arrival-driven policies get the residual workload of a preempted job
+    # re-offered as a fresh ARRIVAL; slot-driven ones just keep the job in
+    # the active set and re-place it on the next tick
+    reoffers_on_preempt: bool = False
+
+    def bind(self, view: RollingWindow, seed: int) -> None:
+        self.view = view
+        self.seed = int(seed)
+
+    # -- protocol ------------------------------------------------------
+    def offer(self, event: Event, view: RollingWindow) -> Decision:
+        if event.kind == EventKind.ARRIVAL:
+            return self.on_arrivals(event, view)
+        if event.kind == EventKind.SLOT:
+            return self.on_slot(event, view)
+        if event.kind == EventKind.COMPLETION:
+            self.on_complete(event.subject(), event.time, view)
+        elif event.kind == EventKind.PREEMPT:
+            self.on_preempt(event.subject(), event.time, view)
+        elif event.kind == EventKind.DEPARTURE:
+            self.on_depart(event.subject(), event.time, view)
+        return Decision()
+
+    # -- hooks (default no-ops) ----------------------------------------
+    def on_arrivals(self, event: Event, view: RollingWindow) -> Decision:
+        return Decision()
+
+    def on_slot(self, event: Event, view: RollingWindow) -> Decision:
+        return Decision()
+
+    def on_complete(self, job_id: int, t: int, view: RollingWindow) -> None:
+        pass
+
+    def on_preempt(self, job_id: int, t: int, view: RollingWindow) -> None:
+        pass
+
+    def on_depart(self, job_id: int, t: int, view: RollingWindow) -> None:
+        pass
+
+
+# ----------------------------------------------------------------------
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_policy(name: str) -> Callable[[type], type]:
+    def deco(cls: type) -> type:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_policy(name: str, **kwargs) -> SchedulingPolicy:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {available_policies()}"
+        ) from None
+    return cls(**kwargs)
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ======================================================================
+# PD-ORS (vectorized core) over the rolling window
+# ======================================================================
+@register_policy("pdors")
+class PDORSPolicy(SchedulingPolicy):
+    """Algorithm 1 reacting to arrival events on the rolling window.
+
+    Each arriving job is offered with window-relative arrival 0 against the
+    window's ledger + price table; admission (payoff > 0) commits the full
+    forward schedule. Same-slot batches amortize pricing: the (W, H, R)
+    price tensor is prewarmed in ONE vectorized pass per batch (and once
+    more after each admission reprices), instead of W lazy per-slot builds
+    per job — the ROADMAP's batched multi-job offer path.
+
+    ``rng_mode``:
+      * "derived" (default) — per-(job, t, v) rounding rngs
+        (SubproblemConfig.rng_mode="derived"), fully order-robust;
+      * "compat"  — one fresh sequential stream per offer, seeded per
+        (job, attempt), with the reference-aligned burn accounting; this is
+        the mode under which ``pdors`` and ``pdors_ref`` produce
+        bit-identical decisions on the same trace.
+    """
+
+    reoffers_on_preempt = True
+
+    def __init__(
+        self,
+        price_params: PriceParams,
+        quanta: int = 16,
+        cfg: Optional[SubproblemConfig] = None,
+        rng_mode: str = "derived",
+    ):
+        if rng_mode not in ("derived", "compat"):
+            raise ValueError(f"rng_mode must be derived|compat, got {rng_mode!r}")
+        self.params = price_params
+        self.quanta = quanta
+        self.base_cfg = cfg or SubproblemConfig()
+        self.rng_mode = rng_mode
+        self.attempts: Dict[int, int] = {}
+
+    def bind(self, view: RollingWindow, seed: int) -> None:
+        super().bind(view, seed)
+        self.prices = PriceTable(self.params, view.cluster)
+
+    def _offer_one(self, job: JobSpec, view: RollingWindow) -> Optional[Dict[int, Allocation]]:
+        attempt = self.attempts.get(job.job_id, 0)
+        self.attempts[job.job_id] = attempt + 1
+        key = (self.seed, _TAG_PDORS, job.job_id, attempt)
+        if self.rng_mode == "derived":
+            offer_seed = int(
+                np.random.SeedSequence(
+                    tuple(_nonneg(k) for k in key)
+                ).generate_state(1)[0]
+            )
+            cfg = replace(self.base_cfg, rng_mode="derived", seed=offer_seed)
+            rng = None
+        else:
+            cfg = replace(self.base_cfg, rng_mode="compat")
+            rng = derived_rng(*key)
+        rel = view.rel_job(job)
+        sched = find_best_schedule(
+            rel, view.cluster, self.prices, view.lookahead,
+            cfg=cfg, quanta=self.quanta, rng=rng,
+        )
+        if sched is None or sched.payoff <= 0:
+            return None
+        return {view.now + t: a for t, a in sched.slots.items()}
+
+    def on_arrivals(self, event: Event, view: RollingWindow) -> Decision:
+        dec = Decision()
+        self.prices.prewarm()
+        for job in event.jobs:
+            schedule = self._offer_one(job, view)
+            if schedule is None:
+                dec.admitted[job.job_id] = False
+                continue
+            view.commit_schedule(job, schedule)
+            dec.admitted[job.job_id] = True
+            dec.schedules[job.job_id] = schedule
+            # admission repriced every committed slot: rebuild the price
+            # tensor once for the remaining jobs of the batch
+            self.prices.prewarm()
+        return dec
+
+
+# ======================================================================
+# Frozen pre-vectorization core (parity oracle) over the same window
+# ======================================================================
+@register_policy("pdors_ref")
+class PDORSReferencePolicy(SchedulingPolicy):
+    """The verbatim pre-PR scalar core (``core/_reference.py``) driven
+    through the same window accounting.
+
+    Each offer mirrors the window's dense ledger into the reference's
+    dict-based ``Cluster`` (floats copied bit-for-bit), runs the frozen
+    ``find_best_schedule``, and commits the result back through the view.
+    With ``pdors`` in rng_mode="compat" and the same seed, the two policies
+    make bit-identical decisions on any trace — the rolling-horizon
+    generalization of the static golden-parity tests."""
+
+    reoffers_on_preempt = True
+
+    def __init__(
+        self,
+        price_params: PriceParams,
+        quanta: int = 16,
+        cfg: Optional[_ref.SubproblemConfig] = None,
+    ):
+        self.params = price_params
+        self.quanta = quanta
+        self.base_cfg = cfg or _ref.SubproblemConfig()
+        self.attempts: Dict[int, int] = {}
+
+    def bind(self, view: RollingWindow, seed: int) -> None:
+        super().bind(view, seed)
+        cl = view.cluster
+        self._ref_machines = [
+            _ref.Machine(h, dict(m.capacity)) for h, m in enumerate(cl.machines)
+        ]
+        self._ref_params = _ref.PriceParams(
+            U=dict(self.params.U), L=self.params.L, mu=self.params.mu
+        )
+
+    def _mirror(self) -> _ref.Cluster:
+        cl = self.view.cluster
+        ref = _ref.Cluster(machines=self._ref_machines, horizon=cl.horizon)
+        used = cl._used
+        for t, h, k in zip(*np.nonzero(used)):
+            ref._used[(int(t), int(h), cl.resources[int(k)])] = float(
+                used[t, h, k]
+            )
+        return ref
+
+    def on_arrivals(self, event: Event, view: RollingWindow) -> Decision:
+        dec = Decision()
+        for job in event.jobs:
+            attempt = self.attempts.get(job.job_id, 0)
+            self.attempts[job.job_id] = attempt + 1
+            rng = derived_rng(self.seed, _TAG_PDORS, job.job_id, attempt)
+            refcl = self._mirror()
+            prices = _ref.PriceTable(self._ref_params, refcl)
+            sched = _ref.find_best_schedule(
+                view.rel_job(job), refcl, prices, view.lookahead,
+                cfg=self.base_cfg, quanta=self.quanta, rng=rng,
+            )
+            if sched is None or sched.payoff <= 0:
+                dec.admitted[job.job_id] = False
+                continue
+            schedule = {view.now + t: a for t, a in sched.slots.items()}
+            view.commit_schedule(job, schedule)
+            dec.admitted[job.job_id] = True
+            dec.schedules[job.job_id] = schedule
+        return dec
+
+
+# ======================================================================
+# Slot-driven baselines
+# ======================================================================
+class _SlotPolicy(SchedulingPolicy):
+    """Shared helpers for the slot-driven adapters."""
+
+    slot_driven = True
+
+    def _place(
+        self,
+        view: RollingWindow,
+        job: JobSpec,
+        n_workers: int,
+        n_ps: int,
+        rng: np.random.Generator,
+        free: Optional[Dict[Tuple[int, str], float]] = None,
+    ) -> Optional[Allocation]:
+        """Round-robin placement against the current slot's free capacity
+        (the exact ``_SlotSim`` scan), on a throwaway copy when a master
+        free map is supplied — a failed partial placement must not drain
+        it."""
+        master = free if free is not None else view.free_map()
+        trial = dict(master)
+        alloc = place_round_robin_free(
+            trial, view.cluster.num_machines, job, n_workers, n_ps, rng
+        )
+        if alloc is not None and free is not None:
+            master.clear()
+            master.update(trial)
+        return alloc
+
+
+@register_policy("fifo")
+class FIFOPolicy(_SlotPolicy):
+    """Hadoop/Spark-style FIFO: fixed worker count per job (drawn once from
+    the job's derived rng), strict head-of-line blocking, resources held
+    until completion (the held allocation is re-granted every slot)."""
+
+    def __init__(self, max_workers: int = 30):
+        self.max_workers = max_workers
+        self.fixed: Dict[int, int] = {}
+        self.held: Dict[int, Allocation] = {}
+
+    def _fixed_workers(self, job: JobSpec) -> int:
+        nw = self.fixed.get(job.job_id)
+        if nw is None:
+            rng = derived_rng(self.seed, _TAG_FIFO, job.job_id)
+            nw = int(min(job.batch_size, rng.integers(1, self.max_workers + 1)))
+            self.fixed[job.job_id] = nw
+        return nw
+
+    def on_slot(self, event: Event, view: RollingWindow) -> Decision:
+        dec = Decision()
+        rng = derived_rng(self.seed, _TAG_FIFO, 10_000_019, event.time)
+        # phase 1: every held allocation re-grants into the fresh slot row
+        # BEFORE any new placement — a job "holding" its machines must never
+        # lose them to a queue-mate placed into a stale free map, and the
+        # head-of-line break below must not skip later held jobs
+        for job in event.jobs:  # engine supplies (arrival, job_id) order
+            held = self.held.get(job.job_id)
+            if held is not None:
+                view.commit(view.now, job, held)
+                dec.grants[job.job_id] = held
+        # phase 2: place waiting jobs in queue order against what remains
+        for job in event.jobs:
+            if job.job_id in self.held:
+                continue
+            nw = self._fixed_workers(job)
+            ns = max(1, int(math.ceil(nw / job.gamma)))
+            alloc = self._place(view, job, nw, ns, rng)
+            if alloc is None:
+                break  # strict FIFO: later jobs wait behind the head
+            self.held[job.job_id] = alloc
+            view.commit(view.now, job, alloc)
+            dec.grants[job.job_id] = alloc
+        return dec
+
+    def on_complete(self, job_id: int, t: int, view: RollingWindow) -> None:
+        self.held.pop(job_id, None)
+
+    def on_preempt(self, job_id: int, t: int, view: RollingWindow) -> None:
+        self.held.pop(job_id, None)   # re-placed from scratch next slot
+
+
+@register_policy("drf")
+class DRFPolicy(_SlotPolicy):
+    """Dominant-resource fairness re-solved every slot, via the SAME
+    ``drf_grant_loop`` the static ``DRFScheduler`` runs — only the
+    placement substrate differs (a rolling-window free map instead of the
+    fixed-horizon cluster)."""
+
+    def on_slot(self, event: Event, view: RollingWindow) -> Decision:
+        actives = list(event.jobs)
+        if not actives:
+            return Decision()
+        rng = derived_rng(self.seed, _TAG_DRF, event.time)
+        cl = view.cluster
+        total = {
+            r: float(cl.capacity_matrix[:, k].sum())
+            for r, k in cl.res_index.items()
+        }
+        free = view.free_map()
+        allocs = drf_grant_loop(
+            actives, total,
+            lambda j, nw, ns: self._place(view, j, nw, ns, rng, free=free),
+        )
+        dec = Decision()
+        for j in actives:
+            a = allocs[j.job_id]
+            if not a.empty():
+                view.commit(view.now, j, a)
+                dec.grants[j.job_id] = a
+        return dec
+
+
+@register_policy("dorm")
+class DormPolicy(_SlotPolicy):
+    """Utilization-maximizing greedy with a fairness order and an
+    adjustment-overhead cap, via the SAME ``dorm_grant_loop`` the static
+    ``DormScheduler`` runs; placed jobs hold their allocation (re-granted
+    each slot, since rolling ledger rows do not persist)."""
+
+    def __init__(self, adjust_cap: float = 0.5):
+        self.adjust_cap = adjust_cap
+        self.held: Dict[int, Allocation] = {}
+
+    def on_slot(self, event: Event, view: RollingWindow) -> Decision:
+        dec = Decision()
+        actives = list(event.jobs)
+        progress = event.progress or {}
+        rng = derived_rng(self.seed, _TAG_DORM, event.time)
+        for job in actives:          # re-grant held allocations first
+            held = self.held.get(job.job_id)
+            if held is not None:
+                view.commit(view.now, job, held)
+                dec.grants[job.job_id] = held
+        if not actives:
+            return dec
+
+        def place_and_commit(j: JobSpec, nw: int, ns: int):
+            alloc = self._place(view, j, nw, ns, rng)
+            if alloc is not None:
+                view.commit(view.now, j, alloc)
+            return alloc
+
+        for j, alloc in dorm_grant_loop(
+            actives, progress, set(self.held), self.adjust_cap,
+            place_and_commit,
+        ):
+            self.held[j.job_id] = alloc
+            dec.grants[j.job_id] = alloc
+        return dec
+
+    def on_complete(self, job_id: int, t: int, view: RollingWindow) -> None:
+        self.held.pop(job_id, None)
+
+    def on_preempt(self, job_id: int, t: int, view: RollingWindow) -> None:
+        self.held.pop(job_id, None)

@@ -1,0 +1,152 @@
+"""Rolling-horizon cluster view: the dense ledger as a sliding window.
+
+The paper's formulation fixes a horizon T and prices every slot of it up
+front; the repo's static path (``run_pdors``) reproduces exactly that. An
+*online* system has no final slot: jobs keep arriving, so the scheduler
+needs a bounded lookahead that moves with the wall clock. ``RollingWindow``
+provides it:
+
+  * it owns a dense ``Cluster`` whose ``horizon`` is the lookahead width W;
+    ledger index k always means absolute slot ``now + k``;
+  * ``advance_to(t)`` slides the window (``Cluster.advance``): elapsed rows
+    drop off the front, fresh zero rows extend the pricing horizon at the
+    back — completed jobs' past commitments leave the ledger for free, and
+    Q_h^r prices over the newly exposed slots start from rho = 0;
+  * per-job commitments are tracked in *absolute* time so a completion,
+    failure, or departure can release exactly the rows the job still holds.
+
+Policies see the underlying ``Cluster``/``PriceTable`` objects, so the
+vectorized PD-ORS machinery (snapshots, cached price matrices, min-plus DP)
+runs on the window unchanged — arriving jobs are offered with a
+window-relative arrival of 0.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.cluster import Cluster
+from ..core.job import Allocation, JobSpec
+
+
+class RollingWindow:
+    """A ``Cluster`` ledger that slides with the simulation clock."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        self.now = 0
+        # job_id -> {absolute slot -> Allocation}
+        self.commitments: Dict[int, Dict[int, Allocation]] = {}
+        self.jobs: Dict[int, JobSpec] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def lookahead(self) -> int:
+        return self.cluster.horizon
+
+    def rel(self, t_abs: int) -> int:
+        return t_abs - self.now
+
+    def in_window(self, t_abs: int) -> bool:
+        return 0 <= t_abs - self.now < self.lookahead
+
+    def rel_job(self, job: JobSpec) -> JobSpec:
+        """The job as the window-relative scheduler sees it: arrival at
+        ledger index 0 (jobs are offered in their arrival slot, so relative
+        latency equals absolute latency)."""
+        return replace(job, arrival=0) if job.arrival != 0 else job
+
+    # ------------------------------------------------------------------
+    def advance_to(self, t_abs: int) -> None:
+        """Slide the window so ledger index 0 == absolute slot ``t_abs``.
+
+        Past rows roll off (their commitments have elapsed — the workload
+        trained in them is already accounted), and the pricing horizon
+        extends by the same number of zeroed rows."""
+        steps = t_abs - self.now
+        if steps < 0:
+            raise ValueError(f"window cannot move backwards ({t_abs} < {self.now})")
+        if steps == 0:
+            return
+        self.cluster.advance(steps)
+        self.now = t_abs
+        # prune elapsed commitments; drop jobs that no longer hold any row
+        for jid in list(self.commitments):
+            slots = self.commitments[jid]
+            for ta in [ta for ta in slots if ta < t_abs]:
+                del slots[ta]
+            if not slots:
+                del self.commitments[jid]
+                self.jobs.pop(jid, None)
+
+    # ------------------------------------------------------------------
+    def commit(self, t_abs: int, job: JobSpec, alloc: Allocation) -> None:
+        """Commit an allocation at an absolute slot inside the window."""
+        if not self.in_window(t_abs):
+            raise ValueError(
+                f"slot {t_abs} outside window [{self.now}, {self.now + self.lookahead})"
+            )
+        if alloc.empty():
+            return
+        self.cluster.commit(self.rel(t_abs), job, alloc)
+        slots = self.commitments.setdefault(job.job_id, {})
+        prev = slots.get(t_abs)
+        if prev is None:
+            slots[t_abs] = Allocation(workers=dict(alloc.workers),
+                                      ps=dict(alloc.ps))
+        else:
+            # incremental grants (e.g. several DRF bundles in one slot)
+            # accumulate so release_from returns exactly what was committed
+            for h, w in alloc.workers.items():
+                prev.workers[h] = prev.workers.get(h, 0) + w
+            for h, s in alloc.ps.items():
+                prev.ps[h] = prev.ps.get(h, 0) + s
+        self.jobs[job.job_id] = job
+
+    def commit_schedule(
+        self, job: JobSpec, schedule: Dict[int, Allocation]
+    ) -> None:
+        for t_abs in sorted(schedule):
+            self.commit(t_abs, job, schedule[t_abs])
+
+    def alloc_at(self, job_id: int, t_abs: int) -> Optional[Allocation]:
+        return self.commitments.get(job_id, {}).get(t_abs)
+
+    def release_from(self, job_id: int, from_abs: int) -> int:
+        """Release every commitment of ``job_id`` at slots >= ``from_abs``
+        (completion frees the tail it no longer needs; preemption and
+        departure free everything still held). Returns slots released."""
+        slots = self.commitments.get(job_id)
+        if not slots:
+            return 0
+        job = self.jobs[job_id]
+        hit = [ta for ta in slots if ta >= from_abs]
+        for ta in hit:
+            if self.in_window(ta):
+                self.cluster.release(self.rel(ta), job, slots[ta])
+            del slots[ta]
+        if not slots:
+            self.commitments.pop(job_id, None)
+            self.jobs.pop(job_id, None)
+        return len(hit)
+
+    # ------------------------------------------------------------------
+    def free_map(self) -> Dict[Tuple[int, str], float]:
+        """Current-slot free capacity as the {(h, r): amount} map the
+        round-robin placement helper mutates."""
+        fm = self.cluster.free_matrix(0)
+        return {
+            (h, r): float(fm[h, k])
+            for h in range(self.cluster.num_machines)
+            for k, r in enumerate(self.cluster.resources)
+        }
+
+    def utilization_now(self) -> Dict[str, float]:
+        return self.cluster.utilization(0)
+
+    def oversubscribed(self, tol: float = 1e-6) -> bool:
+        """True if any ledger cell exceeds capacity (accounting bug guard)."""
+        over = self.cluster._used - self.cluster.capacity_matrix[None, :, :]
+        return bool((over > tol).any())

@@ -1,0 +1,411 @@
+"""Tests for repro.sim: events, rolling window, policy registry, traces,
+engine accounting, preemption, and the derived-rng determinism contract."""
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    JobSpec,
+    SigmoidUtility,
+    SubproblemConfig,
+    WorkloadConfig,
+    estimate_price_params,
+    find_best_schedule,
+    make_cluster,
+    synthetic_jobs,
+)
+from repro.core.dp import WorkloadDP
+from repro.core.pricing import PriceTable
+from repro.sim import (
+    Event,
+    EventKind,
+    EventQueue,
+    RollingWindow,
+    SimEngine,
+    TraceConfig,
+    available_policies,
+    calibrate_prices,
+    make_policy,
+    sample_jobs,
+    stream,
+)
+from repro.sim.policy import derived_rng
+
+
+def small_job(job_id=0, arrival=0, V=2000, F=16, gamma=2.0, **kw):
+    defaults = dict(
+        epochs=1, num_samples=V, batch_size=F, tau=1e-3, grad_size=100.0,
+        gamma=gamma, bw_internal=1e6, bw_external=2e5,
+        worker_demand={"gpu": 1.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        ps_demand={"gpu": 0.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        utility=SigmoidUtility(theta1=50.0, theta2=0.5, theta3=5.0),
+    )
+    defaults.update(kw)
+    return JobSpec(job_id=job_id, arrival=arrival, **defaults)
+
+
+# ----------------------------------------------------------------- events
+def test_event_queue_same_slot_ordering():
+    q = EventQueue()
+    q.push(Event(time=3, kind=EventKind.ARRIVAL, job=small_job(1)))
+    q.push(Event(time=3, kind=EventKind.FAILURE, job_id=7))
+    q.push(Event(time=2, kind=EventKind.ARRIVAL, job=small_job(2)))
+    q.push(Event(time=3, kind=EventKind.DEPARTURE, job_id=9))
+    order = [(e.time, e.kind) for e in q.pop_until(3)]
+    assert order == [
+        (2, EventKind.ARRIVAL),
+        (3, EventKind.FAILURE),
+        (3, EventKind.DEPARTURE),
+        (3, EventKind.ARRIVAL),
+    ]
+    assert len(q) == 0
+
+
+def test_event_queue_insertion_order_ties():
+    q = EventQueue()
+    jobs = [small_job(i) for i in range(5)]
+    for j in jobs:
+        q.push(Event(time=1, kind=EventKind.ARRIVAL, job=j))
+    got = [e.job.job_id for e in q.pop_until(1)]
+    assert got == [0, 1, 2, 3, 4]
+
+
+# ---------------------------------------------------------------- ledger
+def test_cluster_advance_shifts_ledger():
+    cl = make_cluster(3, 6)
+    j = small_job()
+    from repro.core import Allocation
+    cl.commit(3, j, Allocation(workers={1: 2}, ps={1: 1}))
+    v0 = cl.version
+    before = cl.used(3, 1, "cpu")
+    assert before > 0
+    cl.advance(1)
+    assert cl.version > v0
+    assert cl.used(2, 1, "cpu") == before
+    assert cl.used(3, 1, "cpu") == 0.0
+    assert cl.used(5, 1, "cpu") == 0.0  # fresh zero row at the back
+    cl.advance(100)                     # past the horizon: all zero
+    assert cl._used.sum() == 0.0
+
+
+def test_cluster_advance_invalidates_caches():
+    cl = make_cluster(2, 4)
+    j = small_job()
+    from repro.core import Allocation
+    cl.commit(1, j, Allocation(workers={0: 2}, ps={0: 1}))
+    pt = PriceTable(estimate_price_params([j], cl, 4), cl)
+    loaded = pt.price_matrix(1).copy()
+    free_before = cl.free_matrix(1).copy()
+    cl.advance(1)
+    # slot 0 now holds what slot 1 held; slot 1 is empty
+    assert np.array_equal(pt.price_matrix(0), loaded)
+    assert pt.price_matrix(1)[0, cl.res_index["cpu"]] < loaded[0, cl.res_index["cpu"]]
+    assert cl.free_matrix(0).tolist() == free_before.tolist()
+
+
+def test_price_prewarm_bit_identical():
+    cfg = WorkloadConfig(num_jobs=8, horizon=6, seed=2, workload_scale=0.05)
+    jobs = synthetic_jobs(cfg)
+    cl = make_cluster(4, 6)
+    from repro.core import Allocation
+    cl.commit(0, jobs[0], Allocation(workers={0: 3}, ps={1: 1}))
+    cl.commit(3, jobs[1], Allocation(workers={2: 5}, ps={2: 2}))
+    params = estimate_price_params(jobs, cl, 6)
+    lazy = PriceTable(params, cl)
+    expected = [lazy.price_matrix(t).copy() for t in range(6)]
+    warm = PriceTable(params, cl)
+    warm.prewarm()
+    for t in range(6):
+        assert np.array_equal(warm.price_matrix(t), expected[t])  # bit-equal
+
+
+# ---------------------------------------------------------------- window
+def test_rolling_window_commit_and_release():
+    cl = make_cluster(3, 8)
+    win = RollingWindow(cl)
+    j = small_job()
+    from repro.core import Allocation
+    win.commit_schedule(j, {2: Allocation(workers={0: 2}, ps={0: 1}),
+                            4: Allocation(workers={1: 1}, ps={1: 1})})
+    assert win.alloc_at(j.job_id, 2) is not None
+    win.advance_to(3)
+    # slot 2 elapsed and was pruned; slot 4 is now relative index 1
+    assert win.alloc_at(j.job_id, 2) is None
+    assert cl.used(1, 1, "cpu") > 0
+    released = win.release_from(j.job_id, 3)
+    assert released == 1
+    assert cl._used.sum() == 0.0
+    assert not win.oversubscribed()
+
+
+def test_rolling_window_rejects_out_of_window_commit():
+    win = RollingWindow(make_cluster(2, 4))
+    from repro.core import Allocation
+    with pytest.raises(ValueError):
+        win.commit(7, small_job(), Allocation(workers={0: 1}, ps={0: 1}))
+    win.advance_to(5)
+    with pytest.raises(ValueError):
+        win.commit(4, small_job(), Allocation(workers={0: 1}, ps={0: 1}))
+
+
+def test_window_same_slot_grants_merge():
+    cl = make_cluster(2, 4)
+    win = RollingWindow(cl)
+    j = small_job()
+    from repro.core import Allocation
+    win.commit(0, j, Allocation(workers={0: 1}, ps={0: 1}))
+    win.commit(0, j, Allocation(workers={0: 2}, ps={}))
+    merged = win.alloc_at(j.job_id, 0)
+    assert merged.workers == {0: 3} and merged.ps == {0: 1}
+    win.release_from(j.job_id, 0)
+    assert cl._used.sum() == 0.0
+
+
+# -------------------------------------------------------------- registry
+def test_registry_lists_all_policies():
+    names = available_policies()
+    for expected in ("pdors", "pdors_ref", "fifo", "drf", "dorm"):
+        assert expected in names
+    with pytest.raises(KeyError):
+        make_policy("nonexistent")
+
+
+# ---------------------------------------------------------------- traces
+def test_trace_stream_deterministic_and_ordered():
+    cfg = TraceConfig(preset="google", num_jobs=30, seed=5, failure_rate=0.3)
+    a = list(stream(cfg))
+    b = list(stream(cfg))
+    assert [(e.time, e.job.job_id, e.fail_at) for e in a] == \
+           [(e.time, e.job.job_id, e.fail_at) for e in b]
+    times = [e.time for e in a]
+    assert times == sorted(times)
+    assert any(e.fail_at is not None for e in a)
+    for e in a:
+        if e.fail_at is not None:
+            assert e.fail_at > e.time
+
+
+def test_trace_presets_differ():
+    n = 40
+    google = sample_jobs(TraceConfig(preset="google", num_jobs=n, seed=1), n)
+    philly = sample_jobs(TraceConfig(preset="philly", num_jobs=n, seed=1), n)
+    assert all(j.worker_demand["gpu"] >= 1.0 for j in philly)
+    # heavy tail: the philly max workload dwarfs its median
+    sizes = sorted(j.total_workload() for j in philly)
+    assert sizes[-1] > 5.0 * sizes[len(sizes) // 2]
+    assert {j.job_id for j in google} == set(range(n))
+    with pytest.raises(ValueError):
+        TraceConfig(preset="bogus").workload_config()
+
+
+# ------------------------------------------------------- engine + policies
+def _run(policy_name, tcfg, H=5, W=12, seed=0, quanta=8, **pol_kw):
+    cl = make_cluster(H, W)
+    win = RollingWindow(cl)
+    if policy_name.startswith("pdors"):
+        pol_kw.setdefault("price_params", calibrate_prices(tcfg, cl, n=16))
+        pol_kw.setdefault("quanta", quanta)
+    policy = make_policy(policy_name, **pol_kw)
+    eng = SimEngine(win, policy, seed=seed, max_slots=600,
+                    patience=tcfg.patience)
+    return eng.run(stream(tcfg))
+
+
+@pytest.mark.parametrize("name", ["pdors", "fifo", "drf", "dorm"])
+def test_engine_runs_every_policy_with_consistent_accounting(name):
+    tcfg = TraceConfig(preset="google", num_jobs=25, seed=2,
+                       arrival_rate=2.0, failure_rate=0.1, patience=24)
+    rep = _run(name, tcfg)
+    s = rep.summary
+    assert s["jobs_offered"] == 25
+    assert s["jobs_completed"] >= 1
+    assert 0.0 <= s["admission_rate"] <= 1.0
+    assert s["jobs_completed"] + s["jobs_departed"] + s["jobs_rejected"] <= 25
+    # engine-side utility accounting: every completed job's utility is
+    # u_i at its actual JCT
+    for oc in rep.metrics.outcomes.values():
+        if oc.completed_at is not None:
+            js = rep.states[oc.job_id]
+            assert oc.utility == pytest.approx(js.job.utility(oc.jct))
+        else:
+            assert oc.utility == 0.0
+    # utilization never exceeds 1 (the engine also asserts the raw ledger
+    # every slot via check_ledger)
+    for row in rep.metrics.per_slot:
+        for v in row["util"].values():
+            assert v <= 1.0 + 1e-9
+    jcts, cdf = rep.metrics.jct_cdf()
+    assert jcts == sorted(jcts)
+    assert cdf == sorted(cdf)
+
+
+def test_engine_deterministic_replay():
+    tcfg = TraceConfig(preset="google", num_jobs=20, seed=9,
+                       arrival_rate=2.0, failure_rate=0.2, patience=20)
+    a = _run("drf", tcfg).summary
+    b = _run("drf", tcfg).summary
+    assert a == b
+
+
+def test_batched_same_slot_offers():
+    """Several jobs arriving in one slot reach the policy as ONE batch."""
+    calls = []
+    tcfg = TraceConfig(preset="google", num_jobs=12, seed=0,
+                       arrival_rate=50.0, patience=20)   # all land early
+    cl = make_cluster(5, 12)
+    win = RollingWindow(cl)
+    policy = make_policy(
+        "pdors", price_params=calibrate_prices(tcfg, cl, n=12), quanta=8)
+    orig = policy.on_arrivals
+
+    def spy(event, view):
+        calls.append(len(event.jobs))
+        return orig(event, view)
+
+    policy.on_arrivals = spy
+    SimEngine(win, policy, max_slots=300, patience=20).run(stream(tcfg))
+    assert sum(calls) >= 12          # requeues may add offers
+    assert max(calls) > 1            # at least one true batch
+
+
+def test_pdors_window_schedule_matches_static_single_job():
+    """One job, empty ledger: the rolling-window offer must reproduce the
+    static Algorithm 2 schedule (same prices, same compat rng)."""
+    job = small_job(V=6000, F=16)
+    W = 10
+    cl_static = make_cluster(4, W)
+    params = estimate_price_params([job], cl_static, W)
+    sched = find_best_schedule(
+        job, cl_static, PriceTable(params, cl_static), W,
+        cfg=SubproblemConfig(), quanta=8,
+        rng=derived_rng(0, 1, job.job_id, 0),
+    )
+    assert sched is not None and sched.payoff > 0
+
+    cl = make_cluster(4, W)
+    win = RollingWindow(cl)
+    policy = make_policy("pdors", price_params=params, quanta=8,
+                         rng_mode="compat")
+    eng = SimEngine(win, policy, seed=0, max_slots=W + 2)
+    rep = eng.run([Event(time=0, kind=EventKind.ARRIVAL, job=job)])
+    oc = rep.metrics.outcomes[job.job_id]
+    assert oc.admitted is True
+    assert oc.completed_at == sched.completion
+    assert oc.utility == pytest.approx(job.utility(sched.completion))
+
+
+def test_preemption_requeues_pdors_and_preserves_slot_policies():
+    job = small_job(V=40000, F=8)       # ~ multi-slot job
+    events = [Event(time=0, kind=EventKind.ARRIVAL, job=job, fail_at=2)]
+
+    cl = make_cluster(4, 12)
+    params = estimate_price_params([job], cl, 12)
+    win = RollingWindow(cl)
+    rep = SimEngine(
+        win, make_policy("pdors", price_params=params, quanta=8),
+        max_slots=60,
+    ).run(list(events))
+    s = rep.summary
+    assert s["preemptions"] == 1
+    oc = rep.metrics.outcomes[job.job_id]
+    if oc.completed_at is not None:     # residual readmitted and finished
+        assert rep.states[job.job_id].attempt >= 1
+        assert oc.completed_at > 2
+
+    # slot-driven: job keeps progress, gets re-placed, still completes
+    win2 = RollingWindow(make_cluster(4, 12))
+    rep2 = SimEngine(win2, make_policy("fifo"), max_slots=120,
+                     patience=40).run(list(events))
+    assert rep2.summary["preemptions"] == 1
+    assert rep2.summary["jobs_completed"] == 1
+
+
+def test_fifo_preemption_never_oversubscribes():
+    """Regression: a preempted job's re-placement must not steal capacity a
+    held job is about to re-grant (held allocations re-commit before any
+    new placement). Two 50-gpu jobs fill both machines; preempting one must
+    not let its replacement land on the survivor's machine."""
+    big = dict(worker_demand={"gpu": 50.0, "cpu": 10.0, "mem": 8.0,
+                              "storage": 1.0},
+               ps_demand={"gpu": 0.0, "cpu": 1.0, "mem": 1.0, "storage": 1.0},
+               V=10000, F=1, gamma=1.0)
+    jobs = [small_job(job_id=i, **big) for i in range(2)]
+    for seed in range(8):
+        win = RollingWindow(make_cluster(2, 8))
+        events = [Event(time=0, kind=EventKind.ARRIVAL, job=jobs[0], fail_at=3),
+                  Event(time=0, kind=EventKind.ARRIVAL, job=jobs[1])]
+        rep = SimEngine(win, make_policy("fifo"), seed=seed, max_slots=120,
+                        patience=100).run(events)   # check_ledger raises on bug
+        assert rep.summary["jobs_completed"] == 2
+        assert rep.summary["preemptions"] == 1
+
+
+def test_patience_departure():
+    """A monster job blocks FIFO's head; patience expires the queue."""
+    blocker = small_job(job_id=0, V=500000, F=4)
+    waiter = small_job(job_id=1, arrival=0, V=1000, F=4,
+                       worker_demand={"gpu": 80.0, "cpu": 2.0, "mem": 4.0,
+                                      "storage": 1.0})  # can never fit
+    events = [Event(time=0, kind=EventKind.ARRIVAL, job=blocker),
+              Event(time=0, kind=EventKind.ARRIVAL, job=waiter)]
+    win = RollingWindow(make_cluster(1, 8))
+    rep = SimEngine(win, make_policy("fifo"), max_slots=400,
+                    patience=10).run(events)
+    assert rep.summary["jobs_departed"] >= 1
+    oc = rep.metrics.outcomes[1]
+    assert oc.departed_at is not None and oc.first_service is None
+
+
+# --------------------------------------------- parity & rng discipline
+def test_sim_pdors_matches_frozen_reference_on_trace():
+    """Rolling-horizon golden parity: the vectorized window adapter and the
+    frozen scalar core make bit-identical decisions on a trace with
+    completions and preemption (compat rng, same derived per-offer seeds)."""
+    tcfg = TraceConfig(preset="google", num_jobs=12, seed=3,
+                       arrival_rate=1.5, failure_rate=0.2, patience=20)
+    vec = _run("pdors", tcfg, H=4, W=10, quanta=8, rng_mode="compat")
+    ref = _run("pdors_ref", tcfg, H=4, W=10, quanta=8)
+    assert vec.summary == ref.summary
+    ka = {k: (o.admitted, o.first_service, o.completed_at, o.utility)
+          for k, o in vec.metrics.outcomes.items()}
+    kb = {k: (o.admitted, o.first_service, o.completed_at, o.utility)
+          for k, o in ref.metrics.outcomes.items()}
+    assert ka == kb
+
+
+def test_derived_rng_mode_is_order_independent():
+    """rng_mode='derived': a theta(t, v) result is a pure function of the
+    ledger — consuming the scheduler rng beforehand must not change it."""
+    job = small_job(V=30000, F=64, gamma=3.0)
+    cl = make_cluster(3, 8)
+    pt = PriceTable(estimate_price_params([job], cl, 8), cl)
+    cfg = SubproblemConfig(rng_mode="derived", seed=123)
+
+    dp1 = WorkloadDP(job, cl, pt, cfg=cfg, quanta=8)
+    dp1.rng.random(1000)                 # would desync a shared stream
+    dp2 = WorkloadDP(job, cl, pt, cfg=cfg, quanta=8)
+    for t in range(3):
+        for v in (2, 5, 8):
+            a, b = dp1.theta(t, v), dp2.theta(t, v)
+            if a is None:
+                assert b is None
+                continue
+            assert a.cost == b.cost
+            assert a.alloc.workers == b.alloc.workers
+            assert a.alloc.ps == b.alloc.ps
+
+
+def test_derived_rng_run_pdors_deterministic():
+    cfg = WorkloadConfig(num_jobs=10, horizon=10, seed=6, batch=(10, 60),
+                         workload_scale=0.05)
+    jobs = synthetic_jobs(cfg)
+    from repro.core import run_pdors
+    scfg = SubproblemConfig(rng_mode="derived", seed=7)
+    a = run_pdors(jobs, make_cluster(4, 10), cfg=scfg, quanta=10)
+    b = run_pdors(jobs, make_cluster(4, 10), cfg=scfg, quanta=10)
+    ta = [(r.job.job_id, r.admitted, r.utility) for r in a.records]
+    tb = [(r.job.job_id, r.admitted, r.utility) for r in b.records]
+    assert ta == tb
+    assert a.total_utility == b.total_utility
