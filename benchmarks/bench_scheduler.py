@@ -19,12 +19,20 @@ cover/packing LP) is included so the smaller speedup of the LP-bound
 regime is reported honestly alongside.
 
 Output: ``BENCH_scheduler.json`` (or --out) with one record per
-(grid point, policy).
+(grid point, policy, backend). ``--backend jax`` runs the PD-ORS rows on
+the device-resident jax array backend (see ``docs/ARCHITECTURE.md``);
+against the frozen reference those rows are tolerance-parity, so the
+decision-identity gate only applies to the numpy backend. ``--append``
+merges fresh rows into an existing --out file (replacing rows at the
+same grid/policy/backend key) instead of rewriting it — how the
+per-backend comparison rows are added without re-running the full grid.
 
 Usage:
     python -m benchmarks.bench_scheduler            # full grid (~tens of min)
     python -m benchmarks.bench_scheduler --smoke    # tiny grid, < 60 s
     python -m benchmarks.bench_scheduler --points 50x40x100 --no-reference
+    python -m benchmarks.bench_scheduler --backend jax --points 25x20x50 \
+        --workload-scale 0.3 --baselines "" --append
 """
 from __future__ import annotations
 
@@ -116,19 +124,25 @@ def _run_baseline_timed(name: str, jobs, cluster, seed: int) -> Dict:
 
 
 def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
-                with_reference: bool, baselines: List[str]) -> List[Dict]:
+                with_reference: bool, baselines: List[str],
+                backend: str = "numpy") -> List[Dict]:
     cfg = WorkloadConfig(num_jobs=num_jobs, horizon=T, seed=seed,
                          batch=BENCH_BATCH, workload_scale=scale)
     jobs = synthetic_jobs(cfg)
     point = {"H": H, "T": T, "num_jobs": num_jobs, "seed": seed,
-             "workload_scale": scale, "quanta": QUANTA}
+             "workload_scale": scale, "quanta": QUANTA, "backend": backend}
     rows: List[Dict] = []
 
-    vec = _run_pdors_timed(jobs, make_cluster(H, T), PDORS, seed)
+    vec = _run_pdors_timed(
+        jobs, make_cluster(H, T, backend=backend), PDORS, seed
+    )
     vec_decisions = vec.pop("decisions")
     rows.append({**point, "policy": "pdors", **vec})
 
     if with_reference:
+        # the frozen scalar core is host-only: reference rows are always
+        # backend "numpy"; against a jax pdors row the identity flag is
+        # informational (the jax backend's contract is tolerance parity)
         ref = _run_pdors_timed(
             jobs, make_cluster_reference(H, T), PDORSReference, seed
         )
@@ -140,18 +154,57 @@ def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
         speedup = ref["wall_s"] / vec["wall_s"] if vec["wall_s"] else 0.0
         rows[-1]["speedup_vs_reference"] = speedup
         rows[-1]["decisions_identical_to_reference"] = identical
-        rows.append({**point, "policy": "pdors_reference", **ref,
-                     "speedup_vs_reference": 1.0})
+        if backend == "numpy":
+            # the reference row is only (re)recorded alongside a numpy
+            # pdors row: a jax --append run re-timing it would replace the
+            # row the numpy sibling's speedup_vs_reference was computed
+            # against, leaving the merged file internally inconsistent
+            # (the jax pdors row keeps its own self-contained speedup
+            # field from this run's fresh reference timing)
+            rows.append({**point, "policy": "pdors_reference",
+                         "backend": "numpy", **ref,
+                         "speedup_vs_reference": 1.0})
         if not identical:
             print(f"!! decision divergence at H={H} T={T} N={num_jobs} "
-                  f"seed={seed}", file=sys.stderr)
+                  f"seed={seed} backend={backend}", file=sys.stderr)
 
     for name in baselines:
+        # baselines run on the host scheduler regardless of --backend or
+        # the REPRO_BACKEND env var (they never touch the price/ledger
+        # tensors), so the cluster is pinned to numpy to match the label —
+        # same convention as pdors_reference
         rows.append({
-            **point, "policy": name,
-            **_run_baseline_timed(name, jobs, make_cluster(H, T), seed),
+            **point, "policy": name, "backend": "numpy",
+            **_run_baseline_timed(
+                name, jobs, make_cluster(H, T, backend="numpy"), seed
+            ),
         })
     return rows
+
+
+SCHED_KEY_FIELDS = ("H", "T", "num_jobs", "workload_scale", "seed",
+                    "policy")
+
+
+def merge_rows(path: str, fresh: List[Dict], meta: Dict,
+               key_fields=SCHED_KEY_FIELDS) -> Dict:
+    """--append: replace same-key rows of an existing bench file, keep the
+    rest, and add anything new. The key is ``key_fields`` + backend
+    (rows written before the backend axis existed mean numpy)."""
+    def key(r):
+        return tuple(r.get(f) for f in key_fields) + (
+            r.get("backend") or "numpy",
+        )
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        doc = dict(meta, rows=[])
+    fresh_keys = {key(r) for r in fresh}
+    doc["rows"] = [r for r in doc.get("rows", [])
+                   if key(r) not in fresh_keys] + fresh
+    return doc
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -167,6 +220,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="skip the slow pre-PR core measurement")
     ap.add_argument("--baselines", default="fifo,drf,dorm",
                     help="comma-separated baseline list (may be empty)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax"],
+                    help="array backend for the pdors rows "
+                         "(see docs/ARCHITECTURE.md)")
+    ap.add_argument("--append", action="store_true",
+                    help="merge rows into an existing --out file instead "
+                         "of rewriting it")
     ap.add_argument("--out", default="BENCH_scheduler.json")
     args = ap.parse_args(argv)
 
@@ -191,13 +251,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         t0 = time.time()
         rows = bench_point(H, T, N, scale, args.seed,
                            with_reference=not args.no_reference,
-                           baselines=baselines)
+                           baselines=baselines, backend=args.backend)
         for r in rows:
             extra = ""
             if "speedup_vs_reference" in r and r["policy"] == "pdors":
                 extra = (f" speedup={r['speedup_vs_reference']:.1f}x"
                          f" identical={r['decisions_identical_to_reference']}")
-                ok &= bool(r["decisions_identical_to_reference"])
+                if args.backend == "numpy":   # jax rows: tolerance parity
+                    ok &= bool(r["decisions_identical_to_reference"])
             print(f"  {r['policy']:>16}: {r['jobs_per_sec']:8.2f} jobs/s "
                   f"p50={r['latency_p50_ms']:8.2f}ms "
                   f"p95={r['latency_p95_ms']:8.2f}ms "
@@ -206,10 +267,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         all_rows.extend(rows)
         print(f"# point done in {time.time()-t0:.1f}s", flush=True)
 
+    meta = {"batch": list(BENCH_BATCH), "quanta": QUANTA}
+    doc = (merge_rows(args.out, all_rows, meta) if args.append
+           else dict(meta, rows=all_rows))
     with open(args.out, "w") as f:
-        json.dump({"batch": list(BENCH_BATCH), "quanta": QUANTA,
-                   "rows": all_rows}, f, indent=2)
-    print(f"# wrote {args.out} ({len(all_rows)} rows)")
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {args.out} ({len(all_rows)} fresh rows, "
+          f"{len(doc['rows'])} total)")
     return 0 if ok else 1
 
 

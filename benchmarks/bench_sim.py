@@ -14,10 +14,19 @@ CI-sized variant (< 60 s). ``pdors_ref`` (the frozen scalar core behind
 the same adapter protocol) is off by default — it is ~20x slower at equal
 decisions; enable with ``--with-reference`` to time it.
 
+``--backend jax`` runs the grid on the device-resident jax array backend
+(rows carry a ``backend`` field; engine-level outcomes are equal to the
+numpy rows up to float tolerance — see ``docs/ARCHITECTURE.md``);
+``--append`` merges fresh rows into an existing --out file at the
+(grid point, policy, backend) key, which is how the per-backend
+comparison rows are added without re-running the full grid.
+
 Usage:
     python -m benchmarks.bench_sim                 # full grid (~minutes)
     python -m benchmarks.bench_sim --smoke
     python -m benchmarks.bench_sim --policies pdors,drf --presets philly
+    python -m benchmarks.bench_sim --smoke --backend jax \
+        --policies pdors --append
 """
 from __future__ import annotations
 
@@ -60,6 +69,7 @@ def run_point(
     policies: List[str],
     seed: int,
     max_slots: int,
+    backend: str = "numpy",
 ) -> List[Dict]:
     tcfg = TraceConfig(
         preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
@@ -68,11 +78,11 @@ def run_point(
     point = {
         "H": H, "W": W, "preset": preset, "num_jobs": num_jobs,
         "arrival_rate": rate, "failure_rate": failure_rate, "seed": seed,
-        "quanta": QUANTA, "patience": tcfg.patience,
+        "quanta": QUANTA, "patience": tcfg.patience, "backend": backend,
     }
     rows = []
     for name in policies:
-        cluster = make_cluster(H, W)
+        cluster = make_cluster(H, W, backend=backend)
         window = RollingWindow(cluster)
         if name.startswith("pdors"):
             params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
@@ -115,6 +125,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="also run the frozen scalar core (pdors_ref, slow)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-slots", type=int, default=4000)
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "jax"],
+                    help="array backend for the window ledger "
+                         "(see docs/ARCHITECTURE.md)")
+    ap.add_argument("--append", action="store_true",
+                    help="merge rows into an existing --out file instead "
+                         "of rewriting it")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args(argv)
 
@@ -136,14 +153,24 @@ def main(argv: Optional[List[str]] = None) -> int:
         t0 = time.time()
         all_rows.extend(
             run_point(H, W, preset, n, rate, frate, policies, args.seed,
-                      args.max_slots)
+                      args.max_slots, backend=args.backend)
         )
         print(f"# point done in {time.time() - t0:.1f}s", flush=True)
 
+    meta = {"quanta": QUANTA, "calib_jobs": CALIB_JOBS}
+    if args.append:
+        from .bench_scheduler import merge_rows
+        doc = merge_rows(
+            args.out, all_rows, meta,
+            key_fields=("H", "W", "preset", "num_jobs", "arrival_rate",
+                        "failure_rate", "seed", "policy"),
+        )
+    else:
+        doc = dict(meta, rows=all_rows)
     with open(args.out, "w") as f:
-        json.dump({"quanta": QUANTA, "calib_jobs": CALIB_JOBS,
-                   "rows": all_rows}, f, indent=2)
-    print(f"# wrote {args.out} ({len(all_rows)} rows)")
+        json.dump(doc, f, indent=2)
+    print(f"# wrote {args.out} ({len(all_rows)} fresh rows, "
+          f"{len(doc['rows'])} total)")
     return 0
 
 

@@ -32,7 +32,8 @@ def run_event_sim(args) -> None:
     print(f"[sim] replaying {args.jobs} google-trace jobs through "
           f"{args.policies} (window={args.window}, H={args.machines})")
     for name in args.policies.split(","):
-        cluster = make_cluster(args.machines, args.window)
+        cluster = make_cluster(args.machines, args.window,
+                               backend=args.backend)
         window = RollingWindow(cluster)
         if name.startswith("pdors"):
             params = calibrate_prices(tcfg, cluster, n=32)
@@ -65,6 +66,9 @@ def main() -> None:
     ap.add_argument("--machines", type=int, default=6)
     ap.add_argument("--window", type=int, default=16)
     ap.add_argument("--policies", default="pdors,fifo,drf,dorm")
+    ap.add_argument("--backend", default=None,
+                    help="ledger array backend for --sim: numpy | jax "
+                         "(default: REPRO_BACKEND env or numpy)")
     args = ap.parse_args()
 
     if args.sim:

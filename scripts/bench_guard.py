@@ -25,8 +25,9 @@ def _points(doc: dict, policy: str) -> dict:
     for row in doc.get("rows", []):
         if row.get("policy") != policy:
             continue
+        # rows written before the backend axis existed are numpy rows
         key = (row["H"], row["T"], row["num_jobs"],
-               row.get("workload_scale"))
+               row.get("workload_scale"), row.get("backend") or "numpy")
         out[key] = row["jobs_per_sec"]
     return out
 
@@ -52,7 +53,8 @@ def main(argv=None) -> int:
     for key, fresh_jps in sorted(fresh.items()):
         base_jps = base.get(key)
         if base_jps is None:
-            print(f"bench_guard: no baseline for H,T,N,scale={key} — skipped")
+            print(f"bench_guard: no baseline for H,T,N,scale,backend={key} "
+                  "— skipped")
             continue
         checked += 1
         floor = base_jps * (1.0 - args.max_drop)

@@ -1,0 +1,71 @@
+"""Docs-reference check: every repo path mentioned in docs/*.md exists.
+
+Cheap grep-based gate for the equations-to-code map: extracts every
+backtick-quoted repo path (``src/...``, ``scripts/...``, ``tests/...``,
+``benchmarks/...``, ``docs/...``, ``BENCH_*.json``, top-level ``*.md``)
+and every dotted ``repro.foo.bar`` module reference from the markdown
+files under docs/ (plus README.md), and fails listing anything that no
+longer exists — so module renames cannot silently rot the architecture
+docs.
+
+Usage:  python scripts/check_docs_refs.py  [docfile ...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+PATH_RE = re.compile(
+    r"`((?:src|scripts|tests|benchmarks|examples|docs)/[\w./\-]+"
+    r"|BENCH_[\w.]+\.json|[A-Z][\w\-]*\.md)`"
+)
+MODULE_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+
+def module_exists(dotted: str) -> bool:
+    rel = Path("src", *dotted.split("."))
+    return (
+        (ROOT / rel).with_suffix(".py").exists()
+        or (ROOT / rel / "__init__.py").exists()
+    )
+
+
+def check_file(doc: Path) -> list:
+    text = doc.read_text()
+    missing = []
+    for m in PATH_RE.finditer(text):
+        ref = m.group(1)
+        if not (ROOT / ref).exists():
+            missing.append((doc.name, ref))
+    for m in MODULE_RE.finditer(text):
+        ref = m.group(1)
+        if not module_exists(ref):
+            missing.append((doc.name, ref))
+    return missing
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    docs = [Path(a) for a in args] if args else sorted(
+        (ROOT / "docs").glob("*.md")
+    ) + [ROOT / "README.md"]
+    missing = []
+    checked = 0
+    for doc in docs:
+        if not doc.exists():
+            missing.append(("<cli>", str(doc)))
+            continue
+        checked += 1
+        missing.extend(check_file(doc))
+    for doc, ref in missing:
+        print(f"check_docs_refs: {doc}: missing reference {ref!r}")
+    print(f"check_docs_refs: {checked} file(s) checked, "
+          f"{len(missing)} stale reference(s)")
+    return 1 if missing else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,15 +10,24 @@
 #
 # The sim smoke replays a short google-trace stream (completions, failures/
 # preemption, departures) through all four policies via the unified
-# registry (python -m benchmarks.bench_sim for the full sweep). Finally the
-# guard fails if the fresh pdors smoke jobs/sec drops >30% below the smoke
-# baseline recorded in BENCH_scheduler.json (BENCH_GUARD_SKIP=1 to bypass
-# on noisy runners).
+# registry (python -m benchmarks.bench_sim for the full sweep). The docs
+# check fails if docs/*.md reference modules that no longer exist. The jax
+# leg reruns the backend parity suite with REPRO_BACKEND=jax as the
+# process-wide default (skipped cleanly when jax is not importable — e.g.
+# a CPU-only box without the toolchain). Finally the guard fails if the
+# fresh pdors smoke jobs/sec drops >30% below the smoke baseline recorded
+# in BENCH_scheduler.json (BENCH_GUARD_SKIP=1 to bypass on noisy runners).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
+python scripts/check_docs_refs.py
+if python -c "import jax" >/dev/null 2>&1; then
+  REPRO_BACKEND=jax python -m pytest tests/test_backend.py -q
+else
+  echo "ci: jax unavailable — skipping the REPRO_BACKEND=jax smoke leg"
+fi
 python -m benchmarks.bench_scheduler --smoke --out BENCH_scheduler_smoke.json
 python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
 python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json --max-drop 0.30

@@ -1,0 +1,145 @@
+"""Device-resident jax backend for the ledger and pricing tensors.
+
+The (T, H, R) ledger is a float64 ``jax.Array`` (double precision via
+scoped ``jax.experimental.enable_x64`` — the global x64 flag is never
+flipped, so the rest of the repo's float32 jax code is unaffected).
+Mutations are functional ``.at[]`` updates; the two hot derived tensors —
+``free_tensor`` (C - rho) and ``price_tensor`` (Eq. 12 over the whole
+ledger) — are jit-compiled and stay on device until a caller explicitly
+syncs via ``to_host`` at the documented admission-decision points.
+
+``trace_counts`` records how many times each jitted function was actually
+*traced* (the counter increments inside the traced Python body, which only
+runs at trace time). The no-host-copy regression test asserts the count
+stays flat across repeated repricings: a silent fallback to eager numpy —
+or a shape-instability retrace storm — would show up as a growing count.
+
+Snapshot reductions (``snapshot_bundle``) run through
+``repro.kernels.pricing``: the jitted jnp path by default, the Pallas
+masked-reduction kernel when running on TPU (or when forced via
+``REPRO_PRICE_KERNEL=pallas``, which off-TPU uses Pallas interpret mode —
+slow, test-only). The release clamp never asserts on this backend (the
+assert would force a device sync per release); the clamp itself is
+preserved, and the invariant is covered by the parity tests.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import ArrayBackend
+
+
+class JaxBackend(ArrayBackend):
+    name = "jax"
+    is_device = True
+
+    def __init__(self):
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+        except Exception as e:  # pragma: no cover - container always has jax
+            raise RuntimeError(
+                "REPRO_BACKEND=jax requires a working jax install "
+                f"(import failed: {type(e).__name__}: {e}); "
+                "use the default numpy backend instead"
+            ) from e
+        self._jax = jax
+        self._jnp = jnp
+        self._x64 = enable_x64
+        self.trace_counts: Dict[str, int] = {
+            "free_tensor": 0, "price_tensor": 0,
+        }
+
+        def _free_impl(used, cap):
+            self.trace_counts["free_tensor"] += 1
+            return cap[None, :, :] - used
+
+        def _price_impl(used, cap, u, L):
+            self.trace_counts["price_tensor"] += 1
+            capb = cap[None, :, :]
+            pos = capb > 0
+            frac = jnp.where(pos, used / jnp.where(pos, capb, 1.0), 0.0)
+            frac = jnp.clip(frac, 0.0, 1.0)
+            ub = u[None, None, :]
+            out = L * (ub / L) ** frac
+            return jnp.where(pos, out, ub)
+
+        self._free_jit = jax.jit(_free_impl)
+        self._price_jit = jax.jit(_price_impl)
+
+    # ---- array lifecycle ------------------------------------------------
+    def zeros(self, shape):
+        with self._x64():
+            return self._jnp.zeros(shape, dtype=self._jnp.float64)
+
+    def to_host(self, arr) -> np.ndarray:
+        return np.asarray(arr)
+
+    # ---- ledger mutations ----------------------------------------------
+    def ledger_add(self, used, t: int, needs):
+        # one batched scatter-add: a per-machine loop of functional .at[]
+        # updates would copy the whole (T, H, R) ledger once per machine
+        if not needs:
+            return used
+        jnp = self._jnp
+        hs = np.array([h for h, _ in needs], dtype=np.int64)
+        vecs = np.stack([need for _, need in needs])
+        with self._x64():
+            return used.at[t, hs].add(jnp.asarray(vecs))
+
+    def ledger_sub_clamped(self, used, t: int, needs):
+        # _alloc_need yields each machine once, so gather-sub-clamp-set is
+        # a single scatter (duplicate rows would need the add form)
+        if not needs:
+            return used
+        jnp = self._jnp
+        hs = np.array([h for h, _ in needs], dtype=np.int64)
+        vecs = np.stack([need for _, need in needs])
+        with self._x64():
+            rows = jnp.maximum(used[t, hs] - jnp.asarray(vecs), 0.0)
+            return used.at[t, hs].set(rows)
+
+    def ledger_advance(self, used, steps: int):
+        jnp = self._jnp
+        with self._x64():
+            T = used.shape[0]
+            k = min(steps, T)
+            if k >= T:
+                return jnp.zeros_like(used)
+            pad = jnp.zeros((k,) + used.shape[1:], dtype=used.dtype)
+            return jnp.concatenate([used[k:], pad], axis=0)
+
+    # ---- derived tensors ------------------------------------------------
+    def free_tensor(self, used, cap: np.ndarray):
+        with self._x64():
+            return self._free_jit(used, cap)
+
+    def price_tensor(self, used, cap: np.ndarray, u: np.ndarray, L: float):
+        with self._x64():
+            return self._price_jit(used, cap, u, np.float64(L))
+
+    def oversubscribed(self, used, cap: np.ndarray, tol: float) -> bool:
+        with self._x64():
+            over = used - self._jnp.asarray(cap)[None, :, :]
+            return bool((over > tol).any())
+
+    def snapshot_bundle(self, price_row, free_row, wdem, sdem, gamma):
+        from ..kernels.pricing import price_bundle
+        kernel = os.environ.get("REPRO_PRICE_KERNEL", "").strip() or None
+        if kernel is None and self._jax.default_backend() == "tpu":
+            kernel = "pallas"
+        with self._x64():
+            return price_bundle(price_row, free_row, wdem, sdem, gamma,
+                                backend=kernel)
+
+    def minplus_default(self) -> Optional[str]:
+        try:
+            if self._jax.default_backend() == "tpu":
+                return "pallas"
+        except Exception:
+            pass
+        return None

@@ -17,7 +17,21 @@ Algorithm 1 step 3 costs O(R) flops instead of O(R) dict lookups per machine.
 ``release`` clamps at zero: a double-release would otherwise silently drive
 ledger entries negative and corrupt ``free()`` and therefore the prices
 Q_h^r. In debug mode (``python`` without ``-O``) it asserts instead of
-clamping silently.
+clamping silently (numpy backend only — the assert would force a device
+sync per release on jax).
+
+Array backend
+-------------
+The ledger array and its derived tensors are owned by a pluggable
+``repro.backend`` instance (``backend`` field: name, instance, or None =
+``REPRO_BACKEND`` env / numpy default). On the default numpy backend every
+operation below is byte-for-byte the pre-backend code (bit-parity with
+``core/_reference.py`` preserved); on the jax backend ``_used`` is a
+device-resident float64 ``jax.Array``, mutations are functional ``.at[]``
+updates, and host reads go through version-cached host mirrors
+(``free_matrix``) so a whole repricing epoch costs one device->host sync.
+``device_free_tensor`` exposes the on-device (T, H, R) free tensor for the
+snapshot reduction path.
 
 Two presets are provided:
   * ``ethernet`` — the paper's own experimental setting (EC2 C5n-like):
@@ -28,10 +42,11 @@ Two presets are provided:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..backend import ArrayBackend, get_backend
 from .job import JobSpec, Allocation, Resource
 
 
@@ -45,8 +60,12 @@ class Machine:
 class Cluster:
     machines: List[Machine]
     horizon: int  # T
+    # array backend owning the ledger: name ("numpy"/"jax"), instance, or
+    # None = REPRO_BACKEND env var / numpy default
+    backend: Union[None, str, ArrayBackend] = None
 
     def __post_init__(self) -> None:
+        self.backend = get_backend(self.backend)
         self.resources: List[Resource] = sorted(
             {r for m in self.machines for r in m.capacity}
         )
@@ -58,8 +77,8 @@ class Cluster:
         for h, m in enumerate(self.machines):
             for r, c in m.capacity.items():
                 self.capacity_matrix[h, self.res_index[r]] = c
-        # rho_h^r[t]: the dense allocation ledger
-        self._used = np.zeros((self.horizon, H, R))
+        # rho_h^r[t]: the dense allocation ledger (device-resident on jax)
+        self._used = self.backend.zeros((self.horizon, H, R))
         # bumped on every commit/release; lets PriceTable & snapshots cache
         # per-slot derived matrices between ledger mutations
         self.version = 0
@@ -67,6 +86,12 @@ class Cluster:
         self._demand_cache: Dict[int, Tuple[JobSpec, np.ndarray, np.ndarray]] = {}
         # t -> (version, C - rho[t]) cache for free_matrix
         self._free_cache: Dict[int, Tuple[int, np.ndarray]] = {}
+        # device backend: (version, device (T,H,R) C - rho) and the host
+        # mirrors of free/used — ONE sync per ledger version covers every
+        # slot
+        self._free_dev: Optional[Tuple[int, object]] = None
+        self._free_host: Optional[Tuple[int, np.ndarray]] = None
+        self._used_host: Optional[Tuple[int, np.ndarray]] = None
 
     # ------------------------------------------------------------------
     @property
@@ -81,21 +106,59 @@ class Cluster:
         k = self.res_index.get(r)
         if k is None or not (0 <= t < self.horizon):
             return 0.0
+        if self.backend.is_device:
+            # via the version-cached host mirror: scalar reads (baseline
+            # placement scans read H*R of them per slot) must not cost a
+            # device sync each
+            return float(self.used_matrix(t)[h, k])
         return float(self._used[t, h, k])
 
     def free(self, t: int, h: int, r: Resource) -> float:
         return self.capacity(h, r) - self.used(t, h, r)
 
     def used_matrix(self, t: int) -> np.ndarray:
-        """rho[t] as an (H, R) view into the ledger (do not mutate)."""
+        """rho[t] as a host (H, R) array (a view into the ledger on the
+        numpy backend — do not mutate; on jax, a slice of the version-
+        cached host mirror, so repeated reads cost one sync per ledger
+        version)."""
+        if self.backend.is_device:
+            ent = self._used_host
+            if ent is None or ent[0] != self.version:
+                ent = (self.version, self.backend.to_host(self._used))
+                self._used_host = ent
+            return ent[1][t]
         return self._used[t]
 
+    def device_free_tensor(self):
+        """C - rho as the backend's (T, H, R) array, version-cached.
+        Stays on device for the jax backend (no host sync) — the operand
+        the snapshot reduction kernels slice per (job, slot)."""
+        ent = self._free_dev
+        if ent is None or ent[0] != self.version:
+            ent = (self.version,
+                   self.backend.free_tensor(self._used, self.capacity_matrix))
+            self._free_dev = ent
+        return ent[1]
+
+    def _free_tensor_host(self) -> np.ndarray:
+        """Host mirror of ``device_free_tensor`` — the one device->host
+        sync per ledger version that serves every slot's free_matrix."""
+        ent = self._free_host
+        if ent is None or ent[0] != self.version:
+            ent = (self.version, self.backend.to_host(self.device_free_tensor()))
+            self._free_host = ent
+        return ent[1]
+
     def free_matrix(self, t: int) -> np.ndarray:
-        """C - rho[t] as an (H, R) array, cached until the next ledger
+        """C - rho[t] as a host (H, R) array, cached until the next ledger
         mutation (callers must not write into it)."""
         ent = self._free_cache.get(t)
         if ent is None or ent[0] != self.version:
-            ent = (self.version, self.capacity_matrix - self._used[t])
+            if self.backend.is_device:
+                free = self._free_tensor_host()[t]
+            else:
+                free = self.capacity_matrix - self._used[t]
+            ent = (self.version, free)
             self._free_cache[t] = ent
         return ent[1]
 
@@ -134,7 +197,10 @@ class Cluster:
     def fits(self, t: int, job: JobSpec, alloc: Allocation) -> bool:
         """Capacity check for one slot (Eq. 5)."""
         if 0 <= t < self.horizon:
-            free = self.capacity_matrix - self._used[t]
+            # free_matrix computes the identical C - rho[t] expression on
+            # the numpy backend (bit pattern unchanged) and serves the
+            # version-cached host mirror on jax
+            free = self.free_matrix(t)
         else:
             free = self.capacity_matrix
         for h, need in self._alloc_need(job, alloc):
@@ -147,8 +213,9 @@ class Cluster:
         if not (0 <= t < self.horizon):
             return
         self.version += 1
-        for h, need in self._alloc_need(job, alloc):
-            self._used[t, h] += need
+        self._used = self.backend.ledger_add(
+            self._used, t, self._alloc_need(job, alloc)
+        )
 
     def release(self, t: int, job: JobSpec, alloc: Allocation) -> None:
         """Inverse of commit, clamped at zero (a double-release must not
@@ -157,13 +224,9 @@ class Cluster:
         if not (0 <= t < self.horizon):
             return
         self.version += 1
-        for h, need in self._alloc_need(job, alloc):
-            row = self._used[t, h] - need
-            assert np.all(row >= -1e-6), (
-                f"release would drive ledger negative at t={t} h={h}: {row}"
-            )
-            np.maximum(row, 0.0, out=row)
-            self._used[t, h] = row
+        self._used = self.backend.ledger_sub_clamped(
+            self._used, t, self._alloc_need(job, alloc)
+        )
 
     def advance(self, steps: int = 1) -> None:
         """Slide the ledger left by ``steps`` slots (rolling-horizon mode).
@@ -176,16 +239,18 @@ class Cluster:
         if steps <= 0:
             return
         self.version += 1
-        k = min(steps, self.horizon)
-        if k >= self.horizon:
-            self._used[:] = 0.0
-        else:
-            self._used[:-k] = self._used[k:]
-            self._used[-k:] = 0.0
+        self._used = self.backend.ledger_advance(self._used, steps)
+
+    def oversubscribed(self, tol: float = 1e-6) -> bool:
+        """True if any ledger cell exceeds capacity (accounting bug guard;
+        a one-bool device sync on the jax backend)."""
+        return self.backend.oversubscribed(
+            self._used, self.capacity_matrix, tol
+        )
 
     def utilization(self, t: int) -> Dict[Resource, float]:
         cap = self.capacity_matrix.sum(axis=0)          # (R,)
-        use = self._used[t].sum(axis=0) if 0 <= t < self.horizon else \
+        use = self.used_matrix(t).sum(axis=0) if 0 <= t < self.horizon else \
             np.zeros_like(cap)
         return {
             r: float(use[k] / cap[k]) if cap[k] else 0.0
@@ -199,6 +264,7 @@ def make_cluster(
     horizon: int,
     preset: str = "ethernet",
     capacity_scale: float = 1.0,
+    backend: Union[None, str, ArrayBackend] = None,
 ) -> Cluster:
     if preset == "ethernet":
         # paper §5: capacity ≈ 18x a worker/PS demand (EC2 C5n.18xlarge-like)
@@ -219,4 +285,4 @@ def make_cluster(
     else:
         raise ValueError(f"unknown preset {preset!r}")
     machines = [Machine(h, dict(cap)) for h in range(num_machines)]
-    return Cluster(machines=machines, horizon=horizon)
+    return Cluster(machines=machines, horizon=horizon, backend=backend)

@@ -150,10 +150,16 @@ class WorkloadDP:
         C[k][u] = min cost using the first k slots to finish u units.
 
         Each slot applies one min-plus vector-matrix step (see module
-        docstring); backend selected by ``cfg.minplus_backend``."""
+        docstring); backend selected by ``cfg.minplus_backend``, falling
+        back to the cluster's array backend's preference (None -> the
+        bit-stable NumPy step for numpy; "pallas" only when the jax
+        backend actually runs on a TPU — see
+        ``ArrayBackend.minplus_default``)."""
         a = self.job.arrival
         Q = self.quanta
         backend = self.cfg.minplus_backend
+        if backend is None:
+            backend = self.cluster.backend.minplus_default()
         k = t_end - a + 1
         C = np.full((k + 1, Q + 1), np.inf)
         C[0, 0] = 0.0

@@ -121,21 +121,54 @@ class PriceTable:
     ``price_matrix`` results are memoized against the cluster's ledger
     version: prices only move when rho moves (Algorithm 1 reprices after
     admission), so between commits every job offer hitting slot t reuses the
-    same (H, R) table instead of recomputing H*R exponentials."""
+    same (H, R) table instead of recomputing H*R exponentials.
+
+    On a device (jax) backend the whole (T, H, R) tensor is jit-computed
+    on device (``device_tensor``) and mirrored to the host in ONE sync per
+    ledger version — the explicit host sync point at admission-decision
+    time. The numpy path below is untouched and stays bit-identical to the
+    frozen reference."""
 
     def __init__(self, params: PriceParams, cluster: Cluster):
         self.params = params
         self.cluster = cluster
         self._matrix_cache: Dict[int, tuple] = {}  # t -> (version, (H,R))
+        self._ceil_vec: Optional[np.ndarray] = None
+        self._device_tensor: Optional[tuple] = None  # (version, (T,H,R) dev)
 
     def price(self, t: int, h: int, r: Resource) -> float:
         return self.params.price(
             self.cluster.used(t, h, r), self.cluster.capacity(h, r), r
         )
 
+    def ceiling_vector(self) -> np.ndarray:
+        """U^r ceilings on the cluster's resource axis (params are frozen
+        for the table's lifetime, so computed once)."""
+        if self._ceil_vec is None:
+            self._ceil_vec = np.array(
+                [self.params._ceiling(r) for r in self.cluster.resources]
+            )
+        return self._ceil_vec
+
+    def device_tensor(self):
+        """The (T, H, R) price tensor on the cluster's backend, version-
+        cached. Device-resident for jax — repricing runs jit-compiled with
+        NO host copy; ``prewarm`` is the sync point that mirrors it."""
+        cl = self.cluster
+        ent = self._device_tensor
+        if ent is None or ent[0] != cl.version:
+            ent = (cl.version, cl.backend.price_tensor(
+                cl._used, cl.capacity_matrix, self.ceiling_vector(),
+                self.params.L,
+            ))
+            self._device_tensor = ent
+        return ent[1]
+
     def price_column(self, t: int, r: Resource) -> np.ndarray:
         """All machines' p_h^r[t] as one (H,) vector (vectorized Eq. 12)."""
         k = self.cluster.res_index[r]
+        if self.cluster.backend.is_device:
+            return self.price_matrix(t)[:, k]
         return self.params.price_vector(
             self.cluster.used_matrix(t)[:, k],
             self.cluster.capacity_matrix[:, k],
@@ -147,6 +180,9 @@ class PriceTable:
         cached until the next ledger mutation (do not write into it)."""
         ent = self._matrix_cache.get(t)
         if ent is None or ent[0] != self.cluster.version:
+            if self.cluster.backend.is_device:
+                self.prewarm()           # one sync fills every slot's cache
+                return self._matrix_cache[t][1]
             cols = [self.price_column(t, r) for r in self.cluster.resources]
             ent = (self.cluster.version, np.stack(cols, axis=1))
             self._matrix_cache[t] = ent
@@ -162,7 +198,11 @@ class PriceTable:
         would have computed lazily. Used by the sim engine's batched-offer
         path: one pass per arrival batch instead of one lazy build per
         (job, slot) — the per-call numpy overhead amortizes across every
-        job arriving in the same slot."""
+        job arriving in the same slot.
+
+        Device (jax) backend: the pass is the jitted ``device_tensor``
+        repricing and the cache fill is its single host mirror — prices
+        are tolerance-equal (not bit-equal) to the numpy expression."""
         cl = self.cluster
         T = cl.horizon if t_end is None else min(t_end, cl.horizon)
         version = cl.version
@@ -171,17 +211,18 @@ class PriceTable:
             for t in range(T)
         ):
             return
-        p = self.params
-        used = cl._used[:T]                                    # (T, H, R)
-        cap = cl.capacity_matrix[None, :, :]                   # (1, H, R)
-        u = np.array([p._ceiling(r) for r in cl.resources])    # (R,)
-        pos = cap > 0
-        frac = np.zeros_like(used)
-        np.divide(used, np.broadcast_to(cap, used.shape), out=frac,
-                  where=np.broadcast_to(pos, used.shape))
-        np.clip(frac, 0.0, 1.0, out=frac)
-        out = p.L * (u[None, None, :] / p.L) ** frac
-        mats = np.where(pos, out, u[None, None, :])
+        if cl.backend.is_device:
+            mats = cl.backend.to_host(self.device_tensor())
+            for t in range(cl.horizon):
+                self._matrix_cache[t] = (version, mats[t])
+            return
+        # NumpyBackend.price_tensor is the exact clip/divide/pow sequence
+        # this branch always ran — one shared implementation, bit-parity
+        # preserved
+        mats = cl.backend.price_tensor(
+            cl._used[:T], cl.capacity_matrix, self.ceiling_vector(),
+            self.params.L,
+        )
         for t in range(T):
             self._matrix_cache[t] = (version, mats[t])
 

@@ -95,7 +95,14 @@ class PriceSnapshot:
     matrix; only the per-job combinations (worker/PS/co-located price
     vectors, per-machine unit capacities) are computed here, with the same
     per-resource accumulation order as the frozen reference so every float
-    is bit-identical."""
+    is bit-identical.
+
+    Device (jax) backend: the five per-machine decision vectors are
+    reduced on device from the version-cached price/free tensors
+    (``ArrayBackend.snapshot_bundle`` -> ``repro.kernels.pricing``) and
+    synced here — the snapshot build IS the admission-decision host sync
+    point. Tolerance-equal to the numpy inline path (dot-order vs
+    per-resource accumulation), never bit-equal."""
 
     def __init__(self, job: JobSpec, cluster: Cluster, prices: PriceTable,
                  t: int):
@@ -104,40 +111,25 @@ class PriceSnapshot:
         self.H = H
         self.resources = cluster.resources
         self.free_mat = cluster.free_matrix(t)          # (H, R), shared
-        price_mat = prices.price_matrix(t)              # (H, R), shared
         self.free: Dict[str, np.ndarray] = {
             r: self.free_mat[:, k] for k, r in enumerate(self.resources)
         }
         self.wdem, self.sdem = cluster.demand_vectors(job)
-        self.wprice = np.zeros(H)
-        self.sprice = np.zeros(H)
-        self.coloc = np.zeros(H)
-        for k in range(len(self.resources)):
-            a = self.wdem[k]
-            b = self.sdem[k]
-            pcol = price_mat[:, k]
-            if a:
-                self.wprice += pcol * a
-            if b:
-                self.sprice += pcol * b
-            self.coloc += pcol * (a * job.gamma + b)
-        # max workers (alone) / PSs (alone) each machine could host;
-        # min over resources is order-independent, so one axis-reduction
-        # equals the reference's per-resource np.minimum chain exactly
-        wpos = self.wdem > 0
-        if wpos.any():
-            self.max_w = np.floor(np.maximum(
-                (self.free_mat[:, wpos] / self.wdem[wpos][None, :]).min(axis=1),
-                0.0))
+        if cluster.backend.is_device:
+            # device operands stay on device; the bundle call is the sync
+            price_op = prices.device_tensor()[t]
+            free_op = cluster.device_free_tensor()[t]
         else:
-            self.max_w = np.full(H, np.inf)
-        spos = self.sdem > 0
-        if spos.any():
-            self.max_s = np.floor(np.maximum(
-                (self.free_mat[:, spos] / self.sdem[spos][None, :]).min(axis=1),
-                0.0))
-        else:
-            self.max_s = np.full(H, np.inf)
+            # host operands; NumpyBackend dispatches to the reference
+            # reduction (kernels.pricing.price_bundle_numpy), which is the
+            # exact per-resource accumulation + min/floor head-room the
+            # frozen core computes — bit-parity preserved
+            price_op = prices.price_matrix(t)           # (H, R), shared
+            free_op = self.free_mat
+        (self.wprice, self.sprice, self.coloc,
+         self.max_w, self.max_s) = cluster.backend.snapshot_bundle(
+            price_op, free_op, self.wdem, self.sdem, job.gamma,
+        )
         self.job = job
         self._bundle_units: Optional[np.ndarray] = None
         self._worder: Optional[np.ndarray] = None

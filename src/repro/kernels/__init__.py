@@ -5,6 +5,10 @@
     minplus         — tropical (min,+) vec-mat step of the scheduler's
                       Algorithm-3 workload DP (NumPy reference + Pallas
                       kernel, auto-fallback off-TPU)
+    pricing         — masked price-matrix reduction for Algorithm 4's
+                      per-(job, slot) snapshot (NumPy reference + jitted
+                      jnp + Pallas kernel; the jax array backend's
+                      snapshot path)
 
 flash_attention/rmsnorm ship with a pure-jnp oracle (ref.py) and a jit'd
 public wrapper (ops.py) that auto-selects interpret mode off-TPU; minplus
@@ -17,16 +21,18 @@ attribute is first touched.
 """
 import importlib
 
-__all__ = ["ops", "ref", "minplus", "flash_attention_kernel",
-           "rmsnorm_kernel", "minplus_step"]
+__all__ = ["ops", "ref", "minplus", "pricing", "flash_attention_kernel",
+           "rmsnorm_kernel", "minplus_step", "price_bundle"]
 
 _LAZY = {
     "ops": ("ops", None),
     "ref": ("ref", None),
     "minplus": ("minplus", None),
+    "pricing": ("pricing", None),
     "flash_attention_kernel": ("flash_attention", "flash_attention"),
     "rmsnorm_kernel": ("rmsnorm", "rmsnorm"),
     "minplus_step": ("minplus", "minplus_step"),
+    "price_bundle": ("pricing", "price_bundle"),
 }
 
 

@@ -197,11 +197,17 @@ def minplus_step(
 ) -> Tuple[np.ndarray, np.ndarray]:
     """One DP forward step; backend in {None, "numpy", "pallas", "scalar"}.
 
-    None means NumPy: the scheduler guarantees bit-identical decisions
-    across hosts, and the float32 Pallas kernel (whose own wrapper falls
-    back to NumPy off-TPU) is deliberately opt-in via
-    SubproblemConfig(minplus_backend="pallas") so admissions never depend
-    on which accelerator — or import order — a process happens to have."""
+    None means NumPy *to this function*: the scheduler guarantees
+    bit-identical decisions across hosts, so the float32 Pallas kernel
+    (whose own wrapper falls back to NumPy off-TPU) never self-selects
+    here. Callers opt in via SubproblemConfig(minplus_backend="pallas"),
+    or implicitly by running the jax *array* backend on an actual TPU
+    (WorkloadDP resolves a None config through
+    ``ArrayBackend.minplus_default``) — the jax backend's contract is
+    tolerance parity, not bit parity, so accelerator-dependent float32
+    rounding is inside its documented envelope. On the default numpy
+    array backend admissions never depend on which accelerator — or
+    import order — a process happens to have."""
     if backend == "pallas":
         return minplus_pallas(prev, tcost)
     if backend == "scalar":

@@ -1,0 +1,225 @@
+"""Masked price-matrix reduction for Algorithm 4's per-(job, slot) snapshot.
+
+A ``PriceSnapshot`` reduces one slot's (H, R) price and free-capacity
+matrices into the five per-machine vectors every Algorithm-3/4 decision
+reads:
+
+    wprice[h] = sum_r p_h^r alpha_i^r          (worker price, below Eq. 26)
+    sprice[h] = sum_r p_h^r beta_i^r           (PS price)
+    coloc[h]  = sum_r p_h^r (alpha^r gamma + beta^r)   (internal sort key)
+    max_w[h]  = floor(min_{r: alpha^r > 0} free_h^r / alpha^r)  (head-room)
+    max_s[h]  = floor(min_{r: beta^r  > 0} free_h^r / beta^r)
+
+i.e. three masked matrix-vector reductions plus two masked ratio
+min-reductions. Three implementations:
+
+  * ``price_bundle_numpy``  — the reference; reproduces the snapshot's
+    per-resource accumulation order exactly (what the numpy backend's
+    inline code computes);
+  * ``price_bundle_jnp``    — one jit-compiled device pass; the jax
+    backend's default (float64 under the caller's ``enable_x64`` scope);
+  * ``price_bundle_pallas`` — a Pallas TPU kernel for the three *price*
+    reductions as one (8, Rp) x (Hp, Rp) ``dot_general`` contraction on
+    the MXU, padded to the float32 tile grid with zero-neutral padding.
+    Off-TPU it runs in interpret mode; any import/lowering failure falls
+    back to the jnp path (the ``minplus``/``rmsnorm`` kernel pattern).
+
+The Pallas path's price rows are float32 (like ``kernels/minplus.py``):
+tolerance-tested against the references, auto-selected only on an actual
+TPU, and forceable via ``REPRO_PRICE_KERNEL=pallas`` for interpret-mode
+testing. The head-room rows are NEVER float32 on any path: ``max_w`` /
+``max_s`` are integer-valued decisions (a float32 reciprocal-multiply can
+overestimate them by a whole unit at exact-capacity boundaries, e.g.
+free=8.9999999/demand=3 rounding up through floor), so the Pallas wrapper
+computes them host-side in float64 with exactly the reference arithmetic.
+
+``price_bundle`` dispatches and always returns five host float64 arrays —
+the snapshot's host sync point under the jax backend.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+_pallas_broken: Optional[str] = None   # first failure reason, warn once
+_jnp_bundle = None                     # lazily created jit
+TRACE_COUNTS = {"bundle_jnp": 0}
+
+Bundle = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def price_bundle_numpy(price: np.ndarray, free: np.ndarray,
+                       wdem: np.ndarray, sdem: np.ndarray,
+                       gamma: float) -> Bundle:
+    """Reference reduction — the exact arithmetic ``PriceSnapshot`` runs
+    inline on the numpy backend (per-resource accumulation, zero-demand
+    columns skipped, stable min-then-floor head-room)."""
+    H = price.shape[0]
+    wprice = np.zeros(H)
+    sprice = np.zeros(H)
+    coloc = np.zeros(H)
+    for k in range(price.shape[1]):
+        a = wdem[k]
+        b = sdem[k]
+        pcol = price[:, k]
+        if a:
+            wprice += pcol * a
+        if b:
+            sprice += pcol * b
+        coloc += pcol * (a * gamma + b)
+
+    def headroom(dem: np.ndarray) -> np.ndarray:
+        pos = dem > 0
+        if not pos.any():
+            return np.full(H, np.inf)
+        ratio = (free[:, pos] / dem[pos][None, :]).min(axis=1)
+        return np.floor(np.maximum(ratio, 0.0))
+
+    return wprice, sprice, coloc, headroom(wdem), headroom(sdem)
+
+
+# ------------------------------------------------------------------- jnp
+def _get_jnp_bundle():
+    global _jnp_bundle
+    if _jnp_bundle is None:
+        import jax
+        import jax.numpy as jnp
+
+        def impl(price, free, wdem, sdem, gamma):
+            TRACE_COUNTS["bundle_jnp"] += 1
+            wprice = price @ wdem
+            sprice = price @ sdem
+            coloc = price @ (wdem * gamma + sdem)
+
+            def headroom(dem):
+                pos = dem > 0
+                ratio = jnp.where(
+                    pos[None, :],
+                    free / jnp.where(pos, dem, 1.0)[None, :],
+                    jnp.inf,
+                )
+                return jnp.floor(jnp.maximum(jnp.min(ratio, axis=1), 0.0))
+
+            return wprice, sprice, coloc, headroom(wdem), headroom(sdem)
+
+        _jnp_bundle = jax.jit(impl)
+    return _jnp_bundle
+
+
+def price_bundle_jnp(price, free, wdem: np.ndarray, sdem: np.ndarray,
+                     gamma: float) -> Bundle:
+    """One jit-compiled device pass; accepts device or host operands.
+
+    The matrix-vector reductions accumulate in dot order rather than the
+    reference's per-resource order — equal to ulps, covered by the
+    tolerance parity tests, never by the bit-parity ones."""
+    fn = _get_jnp_bundle()
+    out = fn(price, free, np.asarray(wdem, dtype=np.float64),
+             np.asarray(sdem, dtype=np.float64), float(gamma))
+    return tuple(np.asarray(o, dtype=np.float64) for o in out)
+
+
+# ---------------------------------------------------------------- pallas
+def _pallas_bundle_call(P, W, interpret: bool):
+    """red = W (dot) P^T on padded operands.
+
+    P: (Hp, Rp) price matrix; W: (8, Rp) weight rows (0: alpha, 1: beta,
+    2: alpha*gamma+beta, 3..7: zero). Output (8, Hp): rows 0-2 the three
+    masked price reductions."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(p_ref, w_ref, o_ref):
+        o_ref[...] = jax.lax.dot_general(
+            w_ref[...], p_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # (8, Hp)
+
+    Hp = P.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((8, Hp), jnp.float32),
+        interpret=interpret,
+    )(P, W)
+    return np.asarray(out)
+
+
+def _headroom_exact(free64: np.ndarray, dem: np.ndarray) -> np.ndarray:
+    """floor(min over demand-positive resources of free/dem) in float64 —
+    the reference arithmetic; integer-valued, so never float32."""
+    pos = dem > 0
+    if not pos.any():
+        return np.full(free64.shape[0], np.inf)
+    ratio = (free64[:, pos] / dem[pos][None, :]).min(axis=1)
+    return np.floor(np.maximum(ratio, 0.0))
+
+
+def price_bundle_pallas(price, free, wdem: np.ndarray, sdem: np.ndarray,
+                        gamma: float,
+                        interpret: Optional[bool] = None) -> Bundle:
+    """Pallas TPU kernel for the masked price reduction (float32 prices).
+
+    Padding is reduction-neutral: zero weight/price columns add nothing
+    to the dot rows, and machines beyond H are sliced off host-side. The
+    head-room rows are computed host-side in float64 (see the module
+    docstring: a float32 ratio can overestimate the integer head-room by
+    a whole unit at exact-capacity boundaries, which would let the
+    snapshot advertise a worker that does not fit)."""
+    global _pallas_broken
+    free64 = np.asarray(free, dtype=np.float64)
+    wdem = np.asarray(wdem, dtype=np.float64)
+    sdem = np.asarray(sdem, dtype=np.float64)
+    max_w = _headroom_exact(free64, wdem)
+    max_s = _headroom_exact(free64, sdem)
+    if _pallas_broken is not None:
+        out = price_bundle_jnp(price, free, wdem, sdem, gamma)
+        return out[0], out[1], out[2], max_w, max_s
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        price = np.asarray(price, dtype=np.float32)
+        H, R = price.shape
+        Hp = max(128, int(np.ceil(H / 128)) * 128)
+        Rp = max(128, int(np.ceil(R / 128)) * 128)
+        P = np.zeros((Hp, Rp), dtype=np.float32)
+        P[:H, :R] = price
+        W = np.zeros((8, Rp), dtype=np.float32)
+        W[0, :R] = wdem.astype(np.float32)
+        W[1, :R] = sdem.astype(np.float32)
+        W[2, :R] = (wdem * gamma + sdem).astype(np.float32)
+        out = _pallas_bundle_call(
+            jnp.asarray(P), jnp.asarray(W), interpret
+        )[:, :H].astype(np.float64)
+        return out[0], out[1], out[2], max_w, max_s
+    except Exception as e:  # missing jax, lowering failure, ...
+        _pallas_broken = f"{type(e).__name__}: {e}"
+        warnings.warn(
+            f"pricing Pallas path unavailable ({_pallas_broken}); "
+            "falling back to jnp",
+            RuntimeWarning,
+        )
+        out = price_bundle_jnp(price, free, wdem, sdem, gamma)
+        return out[0], out[1], out[2], max_w, max_s
+
+
+# -------------------------------------------------------------- dispatch
+def price_bundle(price, free, wdem: np.ndarray, sdem: np.ndarray,
+                 gamma: float, backend: Optional[str] = None) -> Bundle:
+    """Snapshot reduction; backend in {None/"jnp", "pallas", "numpy"}.
+
+    None means the jitted jnp pass — the jax array backend's default
+    (Pallas is auto-selected by ``JaxBackend.snapshot_bundle`` only on an
+    actual TPU). "numpy" forces the host reference (used by tests and the
+    numpy array backend)."""
+    if backend == "pallas":
+        return price_bundle_pallas(price, free, wdem, sdem, gamma)
+    if backend == "numpy":
+        return price_bundle_numpy(np.asarray(price), np.asarray(free),
+                                  wdem, sdem, gamma)
+    return price_bundle_jnp(price, free, wdem, sdem, gamma)

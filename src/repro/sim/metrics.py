@@ -54,6 +54,15 @@ def _pct(xs: List[float], q: float) -> float:
 
 
 class MetricsCollector:
+    """Engine-owned recorder: per-job ``JobOutcome`` rows keyed by job_id
+    (``outcome`` creates-or-returns; the engine writes admission, service,
+    completion, preemption, and utility fields as events fire), per-slot
+    utilization/active/queued series (``record_slot``), and raw event
+    counters (``count``). ``summary()`` is the flat dict that becomes one
+    ``BENCH_sim.json`` row; ``jct_cdf``/``to_json`` serve the figure
+    scripts. Policies never touch this object — identical, engine-owned
+    measurement is what keeps per-policy rows comparable."""
+
     def __init__(self, resources: List[str]):
         self.resources = list(resources)
         self.outcomes: Dict[int, JobOutcome] = {}
@@ -81,6 +90,8 @@ class MetricsCollector:
 
     # ------------------------------------------------------------ report
     def jct_cdf(self) -> Tuple[List[float], List[float]]:
+        """Empirical (JCT, P[JCT <= x]) over completed jobs (Fig. 12-13
+        convention: censored jobs are excluded, not imputed)."""
         jcts = sorted(
             oc.jct for oc in self.outcomes.values() if oc.jct is not None
         )
@@ -88,6 +99,8 @@ class MetricsCollector:
         return [float(x) for x in jcts], [(i + 1) / n for i in range(n)]
 
     def summary(self) -> Dict:
+        """Fold outcomes + per-slot series into one flat benchmark row
+        (schema documented in docs/BENCHMARKS.md)."""
         ocs = list(self.outcomes.values())
         offered = len(ocs)
         completed = [oc for oc in ocs if oc.completed_at is not None]

@@ -110,6 +110,50 @@ class SchedulingPolicy:
 
     # -- protocol ------------------------------------------------------
     def offer(self, event: Event, view: RollingWindow) -> Decision:
+        """The one entry point through which the engine talks to a policy.
+
+        What the view exposes
+        ---------------------
+        ``view`` is the live ``RollingWindow``: ``view.now`` (current
+        absolute slot), ``view.lookahead`` (window width W),
+        ``view.cluster`` (the dense ledger + capacity matrices, for
+        price-table/snapshot machinery), ``view.free_map()`` (current-slot
+        free capacity as a mutable {(h, r): amount} map),
+        ``view.rel_job(job)`` (the job as the window-relative scheduler
+        sees it), and ``view.alloc_at(job_id, t_abs)`` (what a job holds).
+        The view is shared, not a copy — policies may *read* anything, but
+        every mutation MUST go through ``view.commit`` /
+        ``view.commit_schedule`` / ``view.release_from`` so per-job
+        commitments stay consistent with the ledger.
+
+        What a legal grant is
+        ---------------------
+        A grant is an ``Allocation`` committed at an absolute slot inside
+        the window, `now <= t_abs < now + W`, that keeps every ledger cell
+        within machine capacity (the engine asserts
+        ``view.oversubscribed()`` is False after every slot when
+        ``check_ledger`` is on). Arrival-driven policies commit a full
+        forward schedule during ARRIVAL and report it in
+        ``Decision.admitted`` / ``Decision.schedules``; slot-driven
+        policies commit current-slot allocations during SLOT and report
+        them in ``Decision.grants``. Committing nothing (and
+        ``admitted[job_id] = False``) is a rejection. A slot-driven
+        "held" resource must be re-granted every slot — rolling ledger
+        rows do not persist across ``advance_to``.
+
+        Engine-owned accounting invariants
+        ----------------------------------
+        The engine — never the policy — accrues progress (the committed
+        allocation of the current slot earns ``samples_trained`` under
+        Eq. (1)/Fact 1), detects completion (progress >= V_i), releases
+        remaining rows, realizes utility u_i(actual JCT), applies
+        patience departures, and records every metric. Policies are pure
+        deciders: identical accounting is what makes per-policy rows in
+        ``BENCH_sim.json`` comparable. COMPLETION / PREEMPT / DEPARTURE
+        offers are notifications (return value ignored) — policies use
+        them to drop internal state (e.g. held allocations), not to
+        mutate the ledger: the engine has already released the rows.
+        """
         if event.kind == EventKind.ARRIVAL:
             return self.on_arrivals(event, view)
         if event.kind == EventKind.SLOT:
@@ -291,7 +335,7 @@ class PDORSReferencePolicy(SchedulingPolicy):
     def _mirror(self) -> _ref.Cluster:
         cl = self.view.cluster
         ref = _ref.Cluster(machines=self._ref_machines, horizon=cl.horizon)
-        used = cl._used
+        used = cl.backend.to_host(cl._used)
         for t, h, k in zip(*np.nonzero(used)):
             ref._used[(int(t), int(h), cl.resources[int(k)])] = float(
                 used[t, h, k]

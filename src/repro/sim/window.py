@@ -19,6 +19,13 @@ Policies see the underlying ``Cluster``/``PriceTable`` objects, so the
 vectorized PD-ORS machinery (snapshots, cached price matrices, min-plus DP)
 runs on the window unchanged — arriving jobs are offered with a
 window-relative arrival of 0.
+
+The window inherits whatever array backend its ``Cluster`` was built with
+(``repro.backend``): on ``backend="jax"`` the sliding ledger is the same
+device-resident array the static scheduler uses, ``advance`` is a device
+concatenate, and the per-slot oversubscription guard is a one-bool device
+reduce — the static path and the simulator share one device-side ledger
+implementation (see ``docs/ARCHITECTURE.md``).
 """
 from __future__ import annotations
 
@@ -147,6 +154,7 @@ class RollingWindow:
         return self.cluster.utilization(0)
 
     def oversubscribed(self, tol: float = 1e-6) -> bool:
-        """True if any ledger cell exceeds capacity (accounting bug guard)."""
-        over = self.cluster._used - self.cluster.capacity_matrix[None, :, :]
-        return bool((over > tol).any())
+        """True if any ledger cell exceeds capacity (accounting bug guard;
+        delegates to the cluster's array backend — a one-bool device sync
+        per checked slot on jax)."""
+        return self.cluster.oversubscribed(tol)
