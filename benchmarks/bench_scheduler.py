@@ -64,7 +64,10 @@ FULL_GRID = [
     (25, 20, 50, HEAVY_SCALE),
     (50, 40, 100, ONLINE_SCALE),
 ]
-SMOKE_GRID = [(6, 8, 10, ONLINE_SCALE)]
+# smoke: one online point + one heavy-contention point, so CI exercises
+# (and bench_guard gates) BOTH regimes — the LP-bound path's batched
+# solve plan can't silently regress between recorded baselines
+SMOKE_GRID = [(6, 8, 10, ONLINE_SCALE), (6, 8, 10, HEAVY_SCALE)]
 BENCH_BATCH = (50, 200)
 QUANTA = 32  # DP workload granularity: the run_pdors default
 

@@ -3,14 +3,27 @@ recorded baseline rows in BENCH_scheduler.json.
 
 Fails (exit 1) if the fresh pdors smoke jobs/sec drops more than
 ``--max-drop`` (default 30%) below the recorded baseline at the same
-(H, T, num_jobs, workload_scale) grid point. Grid points present in only
-one of the two files are reported and skipped, so the guard never
-false-fails on a machine that has not recorded a baseline yet. Set
-``BENCH_GUARD_SKIP=1`` to bypass entirely (e.g. on known-noisy runners).
+(H, T, num_jobs, workload_scale, backend) grid point — the key is
+backend-aware, so numpy and jax rows gate independently. Grid points
+present in only one of the two files are reported and skipped, so the
+guard never false-fails on a machine that has not recorded a baseline
+yet.
+
+``--min-speedup X --min-speedup-scale S`` additionally gates the
+LP-regime speedup: every fresh row at workload_scale S carrying a
+``speedup_vs_reference`` field must report at least X. The ratio is
+measured in-process against the frozen core, so it is far less
+machine-noise-sensitive than absolute jobs/sec — this is the floor that
+keeps the heavy-contention batched-solve-plan speedup from silently
+regressing.
+
+Set ``BENCH_GUARD_SKIP=1`` to bypass entirely (e.g. on known-noisy
+runners).
 
 Usage:
     python scripts/bench_guard.py BENCH_scheduler_smoke.json \
-        BENCH_scheduler.json [--max-drop 0.30] [--policy pdors]
+        BENCH_scheduler.json [--max-drop 0.30] [--policy pdors] \
+        [--min-speedup 2.0 --min-speedup-scale 0.3]
 """
 from __future__ import annotations
 
@@ -28,7 +41,7 @@ def _points(doc: dict, policy: str) -> dict:
         # rows written before the backend axis existed are numpy rows
         key = (row["H"], row["T"], row["num_jobs"],
                row.get("workload_scale"), row.get("backend") or "numpy")
-        out[key] = row["jobs_per_sec"]
+        out[key] = (row["jobs_per_sec"], row.get("speedup_vs_reference"))
     return out
 
 
@@ -39,6 +52,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-drop", type=float, default=0.30,
                     help="max tolerated fractional jobs/sec drop")
     ap.add_argument("--policy", default="pdors")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="min speedup_vs_reference for fresh rows at "
+                         "--min-speedup-scale")
+    ap.add_argument("--min-speedup-scale", type=float, default=0.3,
+                    help="workload_scale the --min-speedup floor applies to")
     args = ap.parse_args(argv)
 
     if os.environ.get("BENCH_GUARD_SKIP"):
@@ -49,22 +67,41 @@ def main(argv=None) -> int:
     with open(args.baseline) as f:
         base = _points(json.load(f), args.policy)
 
-    checked = failed = 0
-    for key, fresh_jps in sorted(fresh.items()):
-        base_jps = base.get(key)
-        if base_jps is None:
+    checked = spd_checked = failed = 0
+    for key, (fresh_jps, fresh_spd) in sorted(fresh.items()):
+        hit = base.get(key)
+        if hit is None:
             print(f"bench_guard: no baseline for H,T,N,scale,backend={key} "
                   "— skipped")
-            continue
-        checked += 1
-        floor = base_jps * (1.0 - args.max_drop)
-        verdict = "OK" if fresh_jps >= floor else "REGRESSION"
-        if fresh_jps < floor:
-            failed += 1
-        print(f"bench_guard: {args.policy} @ {key}: {fresh_jps:.1f} jobs/s "
-              f"vs baseline {base_jps:.1f} (floor {floor:.1f}) {verdict}")
+        else:
+            base_jps = hit[0]
+            checked += 1
+            floor = base_jps * (1.0 - args.max_drop)
+            verdict = "OK" if fresh_jps >= floor else "REGRESSION"
+            if fresh_jps < floor:
+                failed += 1
+            print(f"bench_guard: {args.policy} @ {key}: {fresh_jps:.1f} "
+                  f"jobs/s vs baseline {base_jps:.1f} (floor {floor:.1f}) "
+                  f"{verdict}")
+        if (args.min_speedup is not None and fresh_spd is not None
+                and key[3] is not None
+                and abs(key[3] - args.min_speedup_scale) < 1e-9):
+            spd_checked += 1
+            verdict = "OK" if fresh_spd >= args.min_speedup else "REGRESSION"
+            if fresh_spd < args.min_speedup:
+                failed += 1
+            print(f"bench_guard: {args.policy} @ {key}: speedup "
+                  f"{fresh_spd:.2f}x vs floor {args.min_speedup:.2f}x "
+                  f"{verdict}")
     if checked == 0:
         print("bench_guard: no comparable grid points — nothing enforced")
+    if args.min_speedup is not None and spd_checked == 0:
+        # the speedup floor must not silently degrade to a no-op (e.g. a
+        # --no-reference smoke run records no speedup field at all)
+        print(f"bench_guard: --min-speedup set but NO fresh row at "
+              f"workload_scale={args.min_speedup_scale} carries "
+              "speedup_vs_reference — speedup gate not enforced: FAIL")
+        failed += 1
     return 1 if failed else 0
 
 

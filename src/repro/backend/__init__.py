@@ -107,6 +107,17 @@ class ArrayBackend:
         ``repro.kernels.pricing``)."""
         raise NotImplementedError
 
+    def snapshot_bundle_batch(self, price_ops, free_ops, wdem: np.ndarray,
+                              sdem: np.ndarray, gamma: float):
+        """Fused form of ``snapshot_bundle`` over a (W, H, R) slot stack:
+        five (W, H) host float64 arrays, one row per slot. This is the
+        solve-plan layer's one bundle pass per (job, plan) — on the jax
+        backend the whole stack reduces in a single device dispatch and
+        a single host sync instead of W per-slot round trips; on numpy
+        the per-resource accumulation order is preserved per slot, so
+        each row is bit-identical to the per-slot call."""
+        raise NotImplementedError
+
     # ---- policy hints ---------------------------------------------------
     def minplus_default(self) -> Optional[str]:
         """Preferred ``kernels.minplus`` backend when

@@ -71,6 +71,19 @@ class JaxBackend(ArrayBackend):
         self._free_jit = jax.jit(_free_impl)
         self._price_jit = jax.jit(_price_impl)
 
+        # jitted ledger scatters with the slot index as a TRACED scalar:
+        # a python-int `t` would be baked into the jaxpr as a constant,
+        # recompiling per (slot, width) pair instead of per width only
+        def _scatter_add(used, t, hs, vecs):
+            return used.at[t, hs].add(vecs)
+
+        def _scatter_sub_clamped(used, t, hs, vecs):
+            rows = jnp.maximum(used[t, hs] - vecs, 0.0)
+            return used.at[t, hs].set(rows)
+
+        self._scatter_add = jax.jit(_scatter_add)
+        self._scatter_sub = jax.jit(_scatter_sub_clamped)
+
     # ---- array lifecycle ------------------------------------------------
     def zeros(self, shape):
         with self._x64():
@@ -80,6 +93,35 @@ class JaxBackend(ArrayBackend):
         return np.asarray(arr)
 
     # ---- ledger mutations ----------------------------------------------
+    @staticmethod
+    def _pad_scatter(hs: np.ndarray, vecs: np.ndarray, neutral_vec: bool):
+        """Pad a per-machine scatter to the next power-of-two width so
+        XLA compiles O(log H) scatter shapes instead of one per distinct
+        machine count (each shape is a fresh ~50ms compile — the
+        dominant cost of jax-backend commits before this padding).
+
+        Padding entries repeat the LAST real machine index with either a
+        zero vector (add form: duplicates sum, +0 is a no-op) or the
+        last real vector (set form: duplicates write the same computed
+        value, so scatter order cannot matter)."""
+        k = hs.size
+        width = 1
+        while width < k:
+            width <<= 1
+        if width == k:
+            return hs, vecs
+        pad = width - k
+        hs = np.concatenate([hs, np.full(pad, hs[-1], dtype=hs.dtype)])
+        if neutral_vec:
+            vecs = np.concatenate(
+                [vecs, np.zeros((pad,) + vecs.shape[1:], dtype=vecs.dtype)]
+            )
+        else:
+            vecs = np.concatenate(
+                [vecs, np.broadcast_to(vecs[-1], (pad,) + vecs.shape[1:])]
+            )
+        return hs, vecs
+
     def ledger_add(self, used, t: int, needs):
         # one batched scatter-add: a per-machine loop of functional .at[]
         # updates would copy the whole (T, H, R) ledger once per machine
@@ -88,20 +130,25 @@ class JaxBackend(ArrayBackend):
         jnp = self._jnp
         hs = np.array([h for h, _ in needs], dtype=np.int64)
         vecs = np.stack([need for _, need in needs])
+        hs, vecs = self._pad_scatter(hs, vecs, neutral_vec=True)
         with self._x64():
-            return used.at[t, hs].add(jnp.asarray(vecs))
+            return self._scatter_add(used, np.int64(t), hs,
+                                     jnp.asarray(vecs))
 
     def ledger_sub_clamped(self, used, t: int, needs):
         # _alloc_need yields each machine once, so gather-sub-clamp-set is
-        # a single scatter (duplicate rows would need the add form)
+        # a single scatter; the power-of-two padding repeats the last
+        # (machine, need) pair, whose recomputed row value is identical —
+        # duplicate set-scatters of equal values are order-independent
         if not needs:
             return used
         jnp = self._jnp
         hs = np.array([h for h, _ in needs], dtype=np.int64)
         vecs = np.stack([need for _, need in needs])
+        hs, vecs = self._pad_scatter(hs, vecs, neutral_vec=False)
         with self._x64():
-            rows = jnp.maximum(used[t, hs] - jnp.asarray(vecs), 0.0)
-            return used.at[t, hs].set(rows)
+            return self._scatter_sub(used, np.int64(t), hs,
+                                     jnp.asarray(vecs))
 
     def ledger_advance(self, used, steps: int):
         jnp = self._jnp
@@ -135,6 +182,15 @@ class JaxBackend(ArrayBackend):
         with self._x64():
             return price_bundle(price_row, free_row, wdem, sdem, gamma,
                                 backend=kernel)
+
+    def snapshot_bundle_batch(self, price_ops, free_ops, wdem, sdem, gamma):
+        from ..kernels.pricing import price_bundle_batch
+        kernel = os.environ.get("REPRO_PRICE_KERNEL", "").strip() or None
+        if kernel is None and self._jax.default_backend() == "tpu":
+            kernel = "pallas"
+        with self._x64():
+            return price_bundle_batch(price_ops, free_ops, wdem, sdem,
+                                      gamma, backend=kernel)
 
     def minplus_default(self) -> Optional[str]:
         try:

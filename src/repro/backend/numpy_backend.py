@@ -76,5 +76,11 @@ class NumpyBackend(ArrayBackend):
         return price_bundle_numpy(np.asarray(price_row),
                                   np.asarray(free_row), wdem, sdem, gamma)
 
+    def snapshot_bundle_batch(self, price_ops, free_ops, wdem, sdem, gamma):
+        from ..kernels.pricing import price_bundle_batch_numpy
+        return price_bundle_batch_numpy(np.asarray(price_ops),
+                                        np.asarray(free_ops),
+                                        wdem, sdem, gamma)
+
     def minplus_default(self) -> Optional[str]:
         return None

@@ -9,6 +9,8 @@ Public API:
     WorkloadDP                               — Algorithm 3
     find_best_schedule, Schedule             — Algorithm 2
     PDORS, run_pdors, PDORSResult            — Algorithm 1
+    SolvePlan, solve_plans, linprog_batch    — plan-then-solve pipeline
+                                               (batched Algorithms 3+4)
     run_baseline, run_oasis                  — §5 baselines
     offline_optimum                          — Fig. 10 offline OPT
     synthetic_jobs, trace_jobs, arch_jobs    — §5 workload generators
@@ -23,7 +25,8 @@ from .pdors import PDORS, PDORSResult, run_pdors
 from .baselines import run_baseline, run_oasis, SimOutcome
 from .offline import offline_optimum
 from .workload import WorkloadConfig, synthetic_jobs, trace_jobs, arch_jobs
-from .lp import linprog, LPResult
+from .lp import linprog, linprog_batch, LPResult
+from .solve_plan import SolvePlan, solve_plans
 from .rounding import (
     g_delta_packing,
     g_delta_cover,
@@ -42,7 +45,8 @@ __all__ = [
     "run_baseline", "run_oasis", "SimOutcome",
     "offline_optimum",
     "WorkloadConfig", "synthetic_jobs", "trace_jobs", "arch_jobs",
-    "linprog", "LPResult",
+    "linprog", "linprog_batch", "LPResult",
+    "SolvePlan", "solve_plans",
     "g_delta_packing", "g_delta_cover", "approximation_ratio",
     "randomized_round", "round_until_feasible",
 ]

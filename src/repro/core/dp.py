@@ -41,6 +41,7 @@ from ..kernels.minplus import minplus_step
 from .cluster import Cluster
 from .job import Allocation, JobSpec
 from .pricing import PriceTable
+from .solve_plan import SolvePlan, infeasible_levels
 from .subproblem import (
     PriceSnapshot,
     SubproblemConfig,
@@ -65,6 +66,7 @@ class WorkloadDP:
         cfg: Optional[SubproblemConfig] = None,
         quanta: int = 32,
         rng: Optional[np.random.Generator] = None,
+        plan: Optional[SolvePlan] = None,
     ):
         self.job = job
         self.cluster = cluster
@@ -79,6 +81,15 @@ class WorkloadDP:
         # price snapshots are valid for the whole job (prices frozen until
         # admission): one per slot
         self._snaps: Dict[int, PriceSnapshot] = {}
+        # levels whose workload caps fail on BOTH theta paths — a pure
+        # function of the job, memoized once so neither the plan nor a
+        # rolling window's repeated solve_prefix calls re-derive them
+        # (no snapshot, no LP, no rng on these levels in the reference)
+        self._infeasible_v = infeasible_levels(job, self.quanta, self.unit)
+        # optional pre-built solve plan (PDORS.offer_batch / sim arrival
+        # batches build one per job and stack their LP candidates); when
+        # None and cfg.use_plan, solve_prefix builds its own
+        self._plan = plan
 
     # ------------------------------------------------------------------
     def snapshot(self, t: int) -> PriceSnapshot:
@@ -110,20 +121,29 @@ class WorkloadDP:
     def theta(self, t: int, units: int) -> Optional[ThetaResult]:
         key = (t, units)
         if key not in self._theta:
-            self._theta[key] = solve_theta_snapshot(
-                self.job, self.snapshot(t), units * self.unit, self.cfg,
-                self._theta_rng(t, units),
-            )
+            if units in self._infeasible_v:
+                # both candidate paths fail their workload cap (constraint
+                # (4) internally, (25)-vs-(26) externally) before touching
+                # prices or rng — memoize without building anything
+                self._theta[key] = None
+            else:
+                self._theta[key] = solve_theta_snapshot(
+                    self.job, self.snapshot(t), units * self.unit, self.cfg,
+                    self._theta_rng(t, units),
+                )
         return self._theta[key]
 
     # ------------------------------------------------------------------
     def _theta_costs(self, t: int) -> np.ndarray:
         """theta(t, v) cost for v = 0..Q as one vector (+inf = infeasible).
 
-        The internal candidates for every uncached workload level are
-        batch-solved up front (one (K, H, R) comparison instead of K
-        per-level passes); results land in the snapshot's memo that
-        ``solve_theta_internal`` reads, so values are unchanged."""
+        With the solve plan active (the default) every level is already
+        memoized by ``_ensure_plan`` and this is a pure memo read. On the
+        lazy path the internal candidates for every uncached workload
+        level are batch-solved up front (one (K, H, R) comparison instead
+        of K per-level passes); results land in the snapshot's memo that
+        ``solve_theta_internal`` reads, so values are unchanged. Levels
+        in ``_infeasible_v`` never reach the solve path at all."""
         Q = self.quanta
         job = self.job
         snap = self.snapshot(t)
@@ -145,9 +165,50 @@ class WorkloadDP:
             tcost[v] = np.inf if th is None else th.cost
         return tcost
 
+    def _ensure_plan(self, t_end: int) -> None:
+        """Build (or adopt) the solve plan covering [a_i, t_end] and
+        resolve every pending theta into the memo.
+
+        Plan building and the batched LP solve are rng-free;
+        ``resolve_into`` then consumes the rng in the exact (t asc,
+        v asc) order the lazy per-(t, v) loop would, so both rng modes
+        stay bit-aligned (see core.solve_plan). A plan is only adopted
+        while it is fresh (no ledger mutation since build) and covers the
+        requested range; otherwise the lazy path takes over seamlessly —
+        theta() falls back per (t, v)."""
+        a = self.job.arrival
+        if self._plan is not None and (
+            not self._plan.fresh()
+            or self._plan.quanta != self.quanta
+            or not self._plan.covers(a, t_end)
+        ):
+            self._plan = None           # stale injection: fall back
+        if self._plan is None:
+            if not self.cfg.use_plan:
+                return
+            skip = set(self._theta) | {
+                (t, v) for t in range(a, t_end + 1)
+                for v in self._infeasible_v
+            }
+            self._plan = SolvePlan(
+                self.job, self.cluster, self.prices, self.cfg,
+                a, t_end, quanta=self.quanta, skip=skip,
+            )
+        # share the fused snapshots so reconstruct()/tests see one cache
+        for t, s in self._plan.snaps.items():
+            self._snaps.setdefault(t, s)
+        self._plan.resolve_into(self._theta, self._theta_rng)
+
     def solve_prefix(self, t_end: int) -> np.ndarray:
         """Forward DP over slots [a_i, t_end]; returns cost table C where
         C[k][u] = min cost using the first k slots to finish u units.
+
+        The theta grid is solved through the plan-then-solve pipeline
+        first (``core.solve_plan``: fused snapshot bundles + one batched
+        stacked-tableau LP solve + reference-order resolution), so the
+        slot loop below is a pure consumer — ``_theta_costs`` reads the
+        memo. ``cfg.use_plan=False`` restores the lazy per-(t, v) loop
+        (bit-identical results, slower in the LP-bound regime).
 
         Each slot applies one min-plus vector-matrix step (see module
         docstring); backend selected by ``cfg.minplus_backend``, falling
@@ -160,6 +221,7 @@ class WorkloadDP:
         backend = self.cfg.minplus_backend
         if backend is None:
             backend = self.cluster.backend.minplus_default()
+        self._ensure_plan(t_end)
         k = t_end - a + 1
         C = np.full((k + 1, Q + 1), np.inf)
         C[0, 0] = 0.0

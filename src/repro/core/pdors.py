@@ -23,6 +23,7 @@ from .cluster import Cluster
 from .job import JobSpec
 from .pricing import PriceParams, PriceTable, estimate_price_params
 from .schedule import Schedule, find_best_schedule
+from .solve_plan import SolvePlan, solve_plans
 from .subproblem import SubproblemConfig
 
 
@@ -76,10 +77,11 @@ class PDORS:
         self.rng = np.random.default_rng(seed)
         self.records: List[AdmissionRecord] = []
 
-    def offer(self, job: JobSpec) -> AdmissionRecord:
+    def offer(self, job: JobSpec, plan: Optional[SolvePlan] = None
+              ) -> AdmissionRecord:
         sched = find_best_schedule(
             job, self.cluster, self.prices, self.cluster.horizon,
-            cfg=self.cfg, quanta=self.quanta, rng=self.rng,
+            cfg=self.cfg, quanta=self.quanta, rng=self.rng, plan=plan,
         )
         if sched is not None and sched.payoff > 0:
             # Step 3: admit; commit rho updates (prices react via Q_h^r)
@@ -91,20 +93,48 @@ class PDORS:
         self.records.append(rec)
         return rec
 
+    def _build_plan(self, job: JobSpec) -> Optional[SolvePlan]:
+        if not self.cfg.use_plan or job.arrival >= self.cluster.horizon:
+            return None
+        return SolvePlan(
+            job, self.cluster, self.prices, self.cfg,
+            job.arrival, self.cluster.horizon - 1, quanta=self.quanta,
+        )
+
     def offer_batch(self, jobs: List[JobSpec]) -> List[AdmissionRecord]:
         """Offer a same-slot arrival batch: one vectorized price-tensor
         prewarm amortizes the per-slot price builds across every job in the
-        batch, and is refreshed only after an admission reprices the ledger
-        (rejected offers leave rho — and therefore every cache — intact).
+        batch, one ``SolvePlan`` per job collects its (t, v) candidates
+        (plan building is rng-free), and EVERY job's external LPs are
+        stacked into a single ``linprog_batch`` call (``solve_plans``) —
+        jobs in one batch share the ledger until an admission reprices.
+        After an admission the remaining jobs' plans are stale (the
+        ledger version moved); they are rebuilt — and re-stacked — for
+        the remainder of the batch.
+
+        The cross-job stack is built ONCE per batch: after an admission
+        invalidates the remaining pre-built plans, the rest of the batch
+        falls back to per-job plans (each offer builds its own inside
+        the DP) rather than re-stacking — re-stacking after every
+        admission would do O(B^2) plan builds on an admit-heavy batch
+        for a marginal LP-amortization gain, so each job's plan is built
+        at most twice.
 
         ``prewarm`` fills the same per-slot cache ``price_matrix`` reads
-        with bit-identical values, so decisions match one-at-a-time
-        ``offer`` calls exactly; the event-driven simulator
-        (``repro.sim``) uses the same pattern per arrival batch."""
-        out = []
+        with bit-identical values, plan resolution consumes the shared
+        rng stream in exactly the per-offer order, and stale plans are
+        never consumed (``SolvePlan.fresh`` — the DP replaces them) — so
+        decisions match one-at-a-time ``offer`` calls exactly; the
+        event-driven simulator (``repro.sim``) uses the same pattern per
+        arrival batch."""
+        out: List[AdmissionRecord] = []
         self.prices.prewarm()
+        plans = {}
+        if self.cfg.use_plan:
+            plans = {j.job_id: self._build_plan(j) for j in jobs}
+            solve_plans([p for p in plans.values() if p is not None])
         for job in jobs:
-            rec = self.offer(job)
+            rec = self.offer(job, plan=plans.get(job.job_id))
             out.append(rec)
             if rec.admitted:
                 self.prices.prewarm()

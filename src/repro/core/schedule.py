@@ -45,11 +45,18 @@ def find_best_schedule(
     cfg: Optional[SubproblemConfig] = None,
     quanta: int = 32,
     rng: Optional[np.random.Generator] = None,
+    plan=None,
 ) -> Optional[Schedule]:
-    """Algorithm 2 main loop."""
+    """Algorithm 2 main loop.
+
+    ``plan`` optionally injects a pre-built ``core.solve_plan.SolvePlan``
+    whose LP batch was stacked across a same-slot job batch (the batched
+    offer path); the DP verifies freshness/coverage and falls back to
+    building its own plan if it does not apply."""
     if job.arrival >= horizon:
         return None
-    dp = WorkloadDP(job, cluster, prices, cfg=cfg, quanta=quanta, rng=rng)
+    dp = WorkloadDP(job, cluster, prices, cfg=cfg, quanta=quanta, rng=rng,
+                    plan=plan)
     C = dp.solve_prefix(horizon - 1)
 
     best_payoff = 0.0

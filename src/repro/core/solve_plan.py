@@ -1,0 +1,592 @@
+"""Plan-then-solve pipeline for Algorithm 3/4's (slot, workload-level) grid.
+
+The paper's Algorithm 2+3 probes theta(t, v) for every slot t in the
+job's window and every quantized workload level v — and in the
+heavy-contention regime nearly every probe pays an external cover/packing
+LP (program 23). The per-(t, v) loop solves them one at a time; this
+module restructures that into four phases over the WHOLE grid:
+
+  1. **Collect** — enumerate every pending (t, v) candidate for the job
+     (``WorkloadDP`` injects already-memoized keys so lazily pre-solved
+     thetas are skipped exactly as the reference skips them).
+  2. **Fuse** — build all slots' ``PriceSnapshot`` decision vectors in one
+     (W, H) bundle pass (``ArrayBackend.snapshot_bundle_batch``): on the
+     jax backend the whole stack reduces in a single device dispatch and
+     host sync (no per-slot bundle round trips); on numpy the per-slot
+     accumulation order is preserved, keeping bit-parity. Internal
+     candidates for every level batch-solve per slot through the
+     snapshot's (K, H, P) precompute.
+  3. **Classify + batch-solve** — the dominance / feasibility gates of
+     ``solve_theta_snapshot`` are evaluated as whole level vectors
+     (``_dominance_class`` branch-for-branch, vectorized); the surviving
+     external candidates are built once and dispatched to the batched
+     stacked-tableau simplex (``lp.linprog_batch``) — bit-identical pivot
+     trajectories per problem, inactive problems masked out as they
+     terminate.
+  4. **Resolve** — walk the grid in the reference's evaluation order
+     (t ascending, v ascending) consuming the rng exactly as the
+     per-(t, v) loop would: dominated levels burn their (S, 2M) block,
+     LP levels draw for rounding iff their LP was optimal. LPs consume no
+     rng, which is what makes hoisting them out of the loop
+     stream-equivalent.
+
+Admission decisions are therefore bit-identical to the un-planned path in
+BOTH rng modes (``tests/test_solve_plan.py``): in "compat" the stream
+position after every theta matches the reference's; in "derived" each
+(job, t, v) already has its own generator so order never mattered.
+
+Cross-job batching: ``PDORS.offer_batch`` / the simulator's arrival
+batches build one plan per job of a same-slot batch (jobs share the
+ledger until an admission reprices) and stack EVERY job's LP candidates
+into one ``linprog_batch`` call via ``solve_plans``; an admission bumps
+the ledger version, the stale plans are detected (``fresh``) and rebuilt
+for the remaining jobs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cluster import Cluster
+from .job import Allocation, JobSpec
+from .lp import LPResult, TableauTemplate, linprog_batch_built
+from .pricing import PriceTable
+from .rounding import g_delta_cover, g_delta_packing
+from .subproblem import (
+    _DOM_SKIP,
+    _DOM_SKIP_BURN,
+    _DOM_SOLVE,
+    ExternalCandidate,
+    PriceSnapshot,
+    SubproblemConfig,
+    ThetaResult,
+    _alloc_cost,
+    _build_external_rows,
+    _burn_rounding_block,
+    _headroom_all,
+    _packing_w2,
+    _prune_fill,
+    _prune_keys,
+    _repair,
+)
+
+# per-(t, v) resolution actions
+_A_NONE = 0       # no feasible candidate: theta = None
+_A_INT = 1        # internal only; reference bails pre-rounding (no rng)
+_A_INT_BURN = 2   # internal wins by dominance; burn the rounding block
+_A_LP = 3         # external LP candidate pending in the batch
+
+
+@dataclass
+class _Pending:
+    t: int
+    v: int                               # workload level (units)
+    action: int
+    internal: Optional[ThetaResult]
+    burn_M: int = 0                      # _A_INT_BURN: burn width
+    cand: Optional[ExternalCandidate] = None
+    lp_index: int = -1                   # index into the plan's LP list
+    w2: float = 0.0                      # cached _packing_w2 (per subset)
+
+
+def infeasible_levels(job: JobSpec, quanta: int, unit: float) -> frozenset:
+    """Workload levels v where BOTH theta candidates fail their workload
+    cap before touching prices or rng: the internal worker need exceeds
+    the batch size (constraint (4)) and the external cover requirement
+    exceeds it past the tolerance band ((25) vs (26)). A pure function of
+    the job, so ``WorkloadDP`` memoizes theta(t, v) = None for these
+    levels without building a snapshot — and a rolling window's repeated
+    ``solve_prefix`` calls re-derive nothing."""
+    tps_i = job.time_per_sample(internal=True)
+    tps_e = job.time_per_sample(internal=False)
+    out = []
+    for v in range(1, quanta + 1):
+        w_need = max(1, int(math.ceil((v * unit) * tps_i)))
+        W1 = (v * unit) * tps_e
+        if w_need > job.batch_size and W1 > job.batch_size + 1e-9:
+            out.append(v)
+    return frozenset(out)
+
+
+class SolvePlan:
+    """One job's collected, fused, batch-solvable theta grid.
+
+    Build is rng-free; ``solve`` runs the LP batch (also rng-free — or the
+    caller stacks several plans via ``solve_plans``); ``resolve_into``
+    consumes the rng in reference order and fills a theta memo."""
+
+    def __init__(
+        self,
+        job: JobSpec,
+        cluster: Cluster,
+        prices: PriceTable,
+        cfg: SubproblemConfig,
+        t_lo: int,
+        t_hi: int,
+        quanta: int = 32,
+        skip: Optional[set] = None,
+    ):
+        self.job = job
+        self.cluster = cluster
+        self.cfg = cfg
+        self.t_lo = t_lo
+        self.t_hi = t_hi
+        V = job.total_workload()
+        self.quanta = max(1, min(quanta, int(math.ceil(V))))
+        self.unit = V / self.quanta
+        self.version = cluster.version   # staleness guard (see ``fresh``)
+        self.snaps: Dict[int, PriceSnapshot] = {}
+        self.pending: List[_Pending] = []
+        self.lp_built: List = []         # pre-built tableaus (lp._Prob)
+        self.lp_results: Optional[List[LPResult]] = None
+        self._collect(prices, skip or set())
+
+    # ------------------------------------------------------------------
+    def fresh(self) -> bool:
+        """True while no ledger mutation has invalidated the plan."""
+        return self.version == self.cluster.version
+
+    def covers(self, t_lo: int, t_hi: int) -> bool:
+        return self.t_lo <= t_lo and t_hi <= self.t_hi
+
+    # ------------------------------------------------------------------
+    def _collect(self, prices: PriceTable, skip: set) -> None:
+        job, cluster, cfg = self.job, self.cluster, self.cfg
+        Q = self.quanta
+        ts = list(range(self.t_lo, self.t_hi + 1))
+        if not ts:
+            return
+        wdem, sdem = cluster.demand_vectors(job)
+
+        # ---- phase 2: fused (W, H) bundle pass over every slot --------
+        if cluster.backend.is_device:
+            # full-horizon operands keep the jitted reduction at ONE
+            # static shape (a per-plan [t_lo:t_hi] slice would retrace
+            # per distinct window width); rows below t_lo are computed
+            # and ignored — device-side flops are free next to a retrace
+            price_op = prices.device_tensor()
+            free_op = cluster.device_free_tensor()
+            off = 0
+        else:
+            price_op = np.stack([prices.price_matrix(t) for t in ts])
+            free_op = np.stack([cluster.free_matrix(t) for t in ts])
+            off = self.t_lo
+        wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
+            price_op, free_op, wdem, sdem, job.gamma,
+        )
+        for t in ts:
+            i = t - off
+            self.snaps[t] = PriceSnapshot(
+                job, cluster, prices, t,
+                bundle=(wp[i], sp[i], co[i], mw[i], ms[i]),
+            )
+
+        # ---- per-level constants (independent of t) -------------------
+        vs = np.arange(1, Q + 1, dtype=np.float64) * self.unit
+        tps_i = job.time_per_sample(internal=True)
+        tps_e = job.time_per_sample(internal=False)
+        batch = float(job.batch_size)
+        w_need = np.maximum(1, np.ceil(vs * tps_i)).astype(np.int64)
+        s_need = np.maximum(1, np.ceil(w_need / job.gamma)).astype(np.int64)
+        int_ok = w_need <= job.batch_size          # constraint (4)
+        W1 = vs * tps_e
+        S1 = W1 / job.gamma
+        hard_inf = W1 > batch + 1e-9               # (25) vs (26) conflict
+        ambiguous = ~hard_inf & (W1 > batch)       # tolerance band: solve
+        wsum_min = np.maximum(
+            0, np.ceil(W1 * (1.0 - cfg.cover_slack - 1e-9) - 1e-12)
+        ).astype(np.int64)
+        s_min = np.maximum(1, np.ceil(wsum_min / job.gamma)).astype(np.int64)
+
+        pairs = [(int(w_need[i]), int(s_need[i]))
+                 for i in range(Q) if int_ok[i]]
+
+        for t in ts:
+            snap = self.snaps[t]
+            todo = [i for i in range(Q) if (t, i + 1) not in skip]
+            if not todo:
+                continue
+            # per-(slot, pruned-subset) LP template: the constraint rows
+            # and every RHS entry except the cover row are shared by all
+            # workload levels of one machine subset
+            templates: Dict[Tuple[int, int], tuple] = {}
+            # batch the internal case across every pending level (the
+            # (K, H, P) comparison of precompute_internal)
+            if pairs:
+                snap.precompute_internal(pairs)
+            internal: List[Optional[ThetaResult]] = [None] * Q
+            icost = np.full(Q, np.inf)
+            for i in todo:
+                if int_ok[i]:
+                    th = snap._internal_cache.get(
+                        (int(w_need[i]), int(s_need[i]))
+                    )
+                    internal[i] = th
+                    if th is not None:
+                        icost[i] = th.cost
+            # vectorized dominance bound + prune stats over all levels
+            bound = snap.greedy_lb_vec(wsum_min, s_min)
+            i_w, j_s = _prune_keys(snap, W1, S1, cfg)
+            Ms = np.empty(Q, dtype=np.int64)
+            maxw_sum = np.empty(Q)
+            bundle_sum = np.empty(Q)
+            stats_by_key: Dict[Tuple[int, int], tuple] = {}
+            for i in todo:
+                key = (int(i_w[i]), int(j_s[i]))
+                hit = stats_by_key.get(key)
+                if hit is None:
+                    hit = _prune_fill(snap, key, cfg)
+                    stats_by_key[key] = hit
+                Ms[i] = len(hit[0])
+                maxw_sum[i] = hit[1]
+                bundle_sum[i] = hit[2]
+            # branch-for-branch _dominance_class as level vectors:
+            # np.select takes the FIRST matching condition, which is the
+            # scalar early-return chain verbatim
+            prune_dead = (Ms == 0) | (maxw_sum < W1 - 1e-9)
+            dom_code = np.select(
+                [hard_inf,                    # external infeasible: skip
+                 ambiguous,                   # tolerance band: solve
+                 icost > bound,               # internal might lose: solve
+                 prune_dead,                  # reference bails pre-round
+                 bundle_sum < W1 + 1e-6],     # can't certify: solve
+                [_DOM_SKIP, _DOM_SOLVE, _DOM_SOLVE, _DOM_SKIP, _DOM_SOLVE],
+                default=_DOM_SKIP_BURN,
+            )
+
+            for i in todo:
+                v = i + 1
+                has_int = internal[i] is not None
+                code = int(dom_code[i])
+                if has_int and code != _DOM_SOLVE:
+                    self.pending.append(_Pending(
+                        t, v,
+                        _A_INT_BURN if code == _DOM_SKIP_BURN else _A_INT,
+                        internal[i], burn_M=int(Ms[i]),
+                    ))
+                    continue
+                # external path (internal missing, or dominance failed):
+                # a candidate exists iff the reference's pre-LP gates pass
+                if hard_inf[i] or prune_dead[i]:
+                    self.pending.append(_Pending(
+                        t, v, _A_INT if has_int else _A_NONE, internal[i],
+                    ))
+                    continue
+                key = (int(i_w[i]), int(j_s[i]))
+                tmpl = templates.get(key)
+                if tmpl is None:
+                    machines = stats_by_key[key][0]
+                    c = np.concatenate(
+                        [snap.wprice[machines], snap.sprice[machines]]
+                    )
+                    # W1=1.0 placeholder: b[cover] = -1.0 carries the sign
+                    # of every instance's -W1 (W1 > 0 for all v >= 1)
+                    A, b_base, n_cap = _build_external_rows(
+                        job, snap, machines, 1.0
+                    )
+                    tmpl = (TableauTemplate(c, A, b_base), machines, A,
+                            b_base, n_cap + 1,
+                            _packing_w2(job, snap, machines))
+                    templates[key] = tmpl
+                template, machines, A, b_base, cover_row, w2 = tmpl
+                W1f = float(W1[i])
+                b = b_base.copy()
+                b[cover_row] = -W1f
+                cand = ExternalCandidate(W1=W1f, machines=machines,
+                                         c=template.c, A_ub=A, b_ub=b)
+                self.pending.append(_Pending(
+                    t, v, _A_LP, internal[i], cand=cand,
+                    lp_index=len(self.lp_built), w2=w2,
+                ))
+                self.lp_built.append(template.lazy(cover_row, -W1f))
+
+    # ------------------------------------------------------------------
+    def install_lp_results(self, results: List[LPResult]) -> None:
+        assert len(results) == len(self.lp_built)
+        self.lp_results = results
+
+    def solve(self) -> "SolvePlan":
+        """Run this plan's own LP batch (the single-job path)."""
+        if self.lp_results is None:
+            self.install_lp_results(linprog_batch_built(self.lp_built))
+        return self
+
+    # ------------------------------------------------------------------
+    def resolve_into(
+        self,
+        memo: Dict[Tuple[int, int], Optional[ThetaResult]],
+        rng_for: Callable[[int, int], np.random.Generator],
+    ) -> None:
+        """Fill ``memo[(t, v)]`` for every pending candidate, consuming
+        the rng in the reference's (t asc, v asc) evaluation order
+        exactly as the per-(t, v) loop would (see module docstring) —
+        the ordered pass below draws every rounding block / burn in
+        sequence, then the rng-free finish (rounding selection, repair,
+        ratio guarantee) runs batched across all candidates.
+        ``rng_for(t, units)`` returns the stream for one evaluation —
+        the shared sequential stream in "compat" mode, a per-(job, t, v)
+        derived generator in "derived" mode."""
+        if self.lp_results is None:
+            self.solve()
+        cfg, job = self.cfg, self.job
+        S = cfg.rounding_rounds
+        # rng-free prep hoisted out of the ordered loop: Eqs. (27)-(28)'s
+        # scale/floor/frac per optimal-LP candidate, op-for-op the block
+        # round_cover_packing_structured computes before its draw
+        prep: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for p in self.pending:
+            if p.action != _A_LP:
+                continue
+            res = self.lp_results[p.lp_index]
+            if res.status != "optimal" or res.x is None:
+                continue
+            xp = np.maximum(res.x, 0.0) * self._g_delta(p)
+            lo = np.floor(xp)
+            prep[p.lp_index] = (lo, xp - lo)
+        work: List[Tuple[_Pending, np.ndarray]] = []
+        keys: List[Tuple[int, int]] = []
+        for p in self.pending:
+            key = (p.t, p.v)
+            if key in memo:        # lazily pre-solved outside the plan
+                continue
+            if p.action == _A_NONE:
+                memo[key] = None
+            elif p.action == _A_INT:
+                memo[key] = p.internal
+            elif p.action == _A_INT_BURN:
+                _burn_rounding_block(cfg, rng_for(p.t, p.v), p.burn_M)
+                memo[key] = p.internal
+            else:
+                hit = prep.get(p.lp_index)
+                if hit is None:
+                    # external died pre-rounding: no draw, internal only
+                    memo[key] = p.internal
+                    continue
+                lo, frac = hit
+                X = (lo[None, :]
+                     + (rng_for(p.t, p.v).random((S, lo.size))
+                        < frac[None, :])).astype(np.int64)
+                work.append((p, X))
+                keys.append(key)
+        self._finish_batched(work, keys, memo)
+
+    def _g_delta(self, p: _Pending) -> float:
+        """G_delta for one candidate (Theorems 3-4) — the branch
+        ``_external_finish`` evaluates, with the W2 term read from the
+        per-subset cache."""
+        cfg = self.cfg
+        if cfg.g_delta is not None:
+            return cfg.g_delta
+        if cfg.favor == "cover":
+            return g_delta_cover(cfg.delta, max(p.cand.W1, 1.0))
+        return g_delta_packing(cfg.delta, max(p.w2, 1e-6),
+                               num_packing_rows=len(p.cand.b_ub) - 1)
+
+    def _finish_batched(
+        self,
+        work: List[Tuple[_Pending, np.ndarray]],
+        keys: List[Tuple[int, int]],
+        memo: Dict[Tuple[int, int], Optional[ThetaResult]],
+    ) -> None:
+        """The rng-free tail of ``_external_finish`` over every candidate
+        at once: rounding feasibility evaluated per machine-subset-size
+        group (the (C, S, M, P) broadcast is elementwise the structured
+        scalar evaluation), head-room rows computed per (slot, kind)
+        group, repair/ratio via the closed-form prefix fills. Results are
+        bit-identical to the per-candidate finish — covered by the
+        plan-vs-loop parity tests."""
+        if not work:
+            return
+        cfg, job = self.cfg, self.job
+        S = cfg.rounding_rounds
+        batch_cap = float(job.batch_size)
+        H = self.cluster.num_machines
+        snap0 = next(iter(self.snaps.values()))
+        act = snap0.act
+        wdem_act = snap0.wdem[act]
+        sdem_act = snap0.sdem[act]
+
+        # ---- rounding selection, grouped by subset size M --------------
+        n_work = len(work)
+        rx = [None] * n_work
+        rfeas = np.zeros(n_work, dtype=bool)
+        attempts = np.full(n_work, S, dtype=np.int64)
+        groups: Dict[int, List[int]] = {}
+        for i, (p, _) in enumerate(work):
+            groups.setdefault(len(p.cand.machines), []).append(i)
+        for M, idxs in groups.items():
+            Xs = np.stack([work[i][1] for i in idxs])        # (C, S, 2M)
+            W = Xs[:, :, :M].astype(np.float64)
+            Sx = Xs[:, :, M:].astype(np.float64)
+            wsum = W.sum(axis=2)                             # integer-exact
+            W1s = np.array([work[i][0].cand.W1 for i in idxs])
+            cov_v = np.where(
+                (W1s > 0)[:, None],
+                np.maximum(
+                    (W1s[:, None] - wsum)
+                    / np.maximum(W1s, 1e-12)[:, None], 0.0,
+                ),
+                0.0,
+            )
+            free = np.stack([
+                self.snaps[work[i][0].t].free_act[work[i][0].cand.machines]
+                for i in idxs
+            ])                                               # (C, M, P)
+            cap_lhs = (W[:, :, :, None] * wdem_act
+                       + Sx[:, :, :, None] * sdem_act)       # (C, S, M, P)
+            b = free[:, None, :, :]
+            with np.errstate(divide="ignore", invalid="ignore"):
+                rel = np.where(
+                    b > 0,
+                    (cap_lhs - b) / np.maximum(b, 1e-12),
+                    np.where(cap_lhs > 0, np.inf, 0.0),
+                )
+            pack_v = rel.reshape(len(idxs), S, -1).max(axis=2)
+            relw = (wsum - batch_cap) / max(batch_cap, 1e-12)
+            pack_v = np.maximum(pack_v, relw)
+            pack_v = np.maximum(pack_v, 0.0)
+            feas = (cov_v <= cfg.cover_slack + 1e-9) & (pack_v <= 1e-9)
+            anyfeas = feas.any(axis=1)
+            first = feas.argmax(axis=1)
+            for c, i in enumerate(idxs):
+                if anyfeas[c]:
+                    j = int(first[c])                        # first feasible
+                    rx[i], rfeas[i], attempts[i] = Xs[c, j], True, j + 1
+                else:
+                    order = np.lexsort((cov_v[c], pack_v[c]))
+                    rx[i] = Xs[c, int(order[0])]
+
+        # ---- scatter picks onto the full machine axis ------------------
+        Wall = np.zeros((n_work, H), dtype=np.int64)
+        Sall = np.zeros((n_work, H), dtype=np.int64)
+        ws: List[Optional[np.ndarray]] = [None] * n_work
+        ss: List[Optional[np.ndarray]] = [None] * n_work
+        for i, (p, _) in enumerate(work):
+            machines = p.cand.machines
+            M = len(machines)
+            Wall[i, machines] = rx[i][:M]
+            Sall[i, machines] = rx[i][M:]
+            ws[i], ss[i] = Wall[i], Sall[i]
+
+        # ---- repair (infeasible roundings), batched per slot -----------
+        # the whole greedy repair collapses to: clip detection (batched),
+        # head-room rows (batched), and the closed-form prefix fill
+        # applied to every candidate of a slot at once; only candidates
+        # whose clip phase actually fires (rare) fall back to the scalar
+        # ``_repair``, which re-derives everything after clipping
+        need_repair = [i for i in range(n_work) if not rfeas[i]]
+        by_t: Dict[int, List[int]] = {}
+        for i in need_repair:
+            by_t.setdefault(work[i][0].t, []).append(i)
+        for t, ti in by_t.items():
+            snap = self.snaps[t]
+            Wst = np.stack([ws[i] for i in ti])              # (C, H) copies
+            Sst = np.stack([ss[i] for i in ti])
+            need_mat = (Wst[:, :, None] * snap.wdem
+                        + Sst[:, :, None] * snap.sdem)       # (C, H, R)
+            okrow = (need_mat <= snap.free_mat + 1e-9).all(axis=2)
+            clip = (((Wst > 0) | (Sst > 0)) & ~okrow).any(axis=1)
+            for c in np.flatnonzero(clip):
+                i = ti[c]
+                w, s = _repair(job, snap, ws[i], ss[i], work[i][0].cand.W1)
+                ws[i], ss[i] = w, (s if w is not None else None)
+            clean = np.flatnonzero(~clip)
+            if not clean.size:
+                continue
+            idx = [ti[c] for c in clean]
+            Wc, Sc = Wst[clean], Sst[clean]
+            W1c = np.array([work[i][0].cand.W1 for i in idx])
+            wsum = Wc.sum(axis=1)
+            need = np.ceil(W1c - wsum).astype(np.int64)
+            budget = (job.batch_size - wsum).astype(np.int64)
+            heads = _headroom_all(snap, "w", Wc, Sc)
+            X = np.minimum(need, budget)
+            hv = np.minimum(heads[:, snap.wprice_order],
+                            np.maximum(X, 0)[:, None])
+            prefix = np.cumsum(hv, axis=1) - hv
+            takes = np.clip(X[:, None] - prefix, 0, hv)
+            takes[need <= 0] = 0                  # cover already satisfied
+            Wc[:, snap.wprice_order] += takes
+            fail = (need > 0) & (need - takes.sum(axis=1) > 0)
+            for c, i in enumerate(idx):
+                if fail[c]:
+                    ws[i] = ss[i] = None
+                    continue
+                w = Wc[c]
+                ws[i], ss[i] = w, Sc[c]
+                if w.sum() > job.batch_size:      # rounding overshoot: trim
+                    excess = int(w.sum() - job.batch_size)
+                    wv = w[snap.wprice_order_desc]
+                    pre = np.cumsum(wv) - wv
+                    tk = np.clip(excess - pre, 0, wv)
+                    w[snap.wprice_order_desc] -= tk
+
+        # ---- ratio guarantee (all surviving candidates), batched -------
+        alive = [i for i in range(n_work) if ws[i] is not None]
+        by_t = {}
+        for i in alive:
+            by_t.setdefault(work[i][0].t, []).append(i)
+        for t, ti in by_t.items():
+            snap = self.snaps[t]
+            Wst = np.stack([ws[i] for i in ti])
+            Sst = np.stack([ss[i] for i in ti])
+            need = (np.maximum(
+                1, np.ceil(Wst.sum(axis=1) / job.gamma)
+            ).astype(np.int64) - Sst.sum(axis=1))
+            todo = np.flatnonzero(need > 0)
+            if not todo.size:
+                continue
+            Wc, Sc, needc = Wst[todo], Sst[todo], need[todo]
+            heads = _headroom_all(snap, "s", Wc, Sc)
+            hv = np.minimum(heads[:, snap.sprice_order], needc[:, None])
+            prefix = np.cumsum(hv, axis=1) - hv
+            takes = np.clip(needc[:, None] - prefix, 0, hv)
+            Sc[:, snap.sprice_order] += takes
+            fail = needc - takes.sum(axis=1) > 0
+            for c, j in enumerate(todo):
+                i = ti[j]
+                ss[i] = None if fail[c] else Sc[c]
+
+        # ---- assemble results ------------------------------------------
+        for i, (p, _) in enumerate(work):
+            ext = None
+            w, s = ws[i], ss[i]
+            if w is not None and s is not None and int(w.sum()) != 0:
+                snap = self.snaps[p.t]
+                alloc = Allocation(
+                    workers={int(h): int(w[h]) for h in np.flatnonzero(w > 0)},
+                    ps={int(h): int(s[h]) for h in np.flatnonzero(s > 0)},
+                )
+                ext = ThetaResult(
+                    cost=_alloc_cost(snap, alloc),
+                    alloc=alloc,
+                    mode="external",
+                    lp_cost=self.lp_results[p.lp_index].objective,
+                    rounding_attempts=int(attempts[i]),
+                )
+            cands = [c for c in (p.internal, ext) if c is not None]
+            memo[keys[i]] = (min(cands, key=lambda r: r.cost)
+                             if cands else None)
+
+
+def solve_plans(plans: List[SolvePlan]) -> None:
+    """Stack EVERY plan's LP candidates into one ``linprog_batch`` call —
+    the cross-job half of the batched offer path (same-slot jobs share
+    the ledger until an admission reprices, so their tableaus coexist in
+    one batch). Plans that already have results are skipped."""
+    todo = [p for p in plans if p.lp_results is None]
+    probs: List = []
+    offsets = []
+    for p in todo:
+        offsets.append(len(probs))
+        probs.extend(p.lp_built)
+    if not probs:
+        for p in todo:
+            p.install_lp_results([])
+        return
+    results = linprog_batch_built(probs)
+    for p, off in zip(todo, offsets):
+        p.install_lp_results(results[off:off + len(p.lp_built)])

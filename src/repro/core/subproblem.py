@@ -26,7 +26,13 @@ Implementation notes (beyond the paper, exactness preserved):
   * ``solve_theta_snapshot`` skips the external LP entirely when the
     internal candidate's cost provably lower-bounds every external
     allocation (see ``_external_dominated``) — decisions are unchanged
-    because ties between the candidates already resolve internal-first.
+    because ties between the candidates already resolve internal-first;
+  * the external path is split into rng-free phases (``_dominance_class``
+    classification, ``_external_candidate`` pre-LP gates + rows,
+    ``_external_finish`` post-LP rounding/repair) so the plan layer
+    (``repro.core.solve_plan``) can classify whole (t, v) grids
+    vectorized and dispatch every surviving LP to the batched
+    stacked-tableau simplex (``lp.linprog_batch``) in one call.
 
 The pre-vectorization implementation survives verbatim in
 ``repro.core._reference`` as the parity oracle and benchmark baseline.
@@ -84,6 +90,14 @@ class SubproblemConfig:
     #               and no burn accounting is needed (the mode the
     #               event-driven simulator uses; see repro/sim).
     rng_mode: str = "compat"
+    # plan-then-solve pipeline (core.solve_plan): collect every pending
+    # (t, v) candidate up front, build the per-machine decision vectors
+    # for all slots in one fused (W, H) bundle pass, and dispatch the
+    # surviving external candidates to the batched stacked-tableau
+    # simplex (lp.linprog_batch). Decisions are bit-identical to the
+    # per-(t, v) loop in both rng modes; False forces the loop (parity
+    # tests / debugging).
+    use_plan: bool = True
 
 
 class PriceSnapshot:
@@ -105,7 +119,7 @@ class PriceSnapshot:
     per-resource accumulation), never bit-equal."""
 
     def __init__(self, job: JobSpec, cluster: Cluster, prices: PriceTable,
-                 t: int):
+                 t: int, bundle: Optional[tuple] = None):
         H = cluster.num_machines
         self.t = t
         self.H = H
@@ -115,21 +129,29 @@ class PriceSnapshot:
             r: self.free_mat[:, k] for k, r in enumerate(self.resources)
         }
         self.wdem, self.sdem = cluster.demand_vectors(job)
-        if cluster.backend.is_device:
-            # device operands stay on device; the bundle call is the sync
-            price_op = prices.device_tensor()[t]
-            free_op = cluster.device_free_tensor()[t]
+        if bundle is not None:
+            # precomputed row of a fused multi-slot bundle pass
+            # (ArrayBackend.snapshot_bundle_batch via core.solve_plan):
+            # same per-backend arithmetic as the per-slot call below, so
+            # values are identical on numpy and tolerance-equal on jax
+            (self.wprice, self.sprice, self.coloc,
+             self.max_w, self.max_s) = bundle
         else:
-            # host operands; NumpyBackend dispatches to the reference
-            # reduction (kernels.pricing.price_bundle_numpy), which is the
-            # exact per-resource accumulation + min/floor head-room the
-            # frozen core computes — bit-parity preserved
-            price_op = prices.price_matrix(t)           # (H, R), shared
-            free_op = self.free_mat
-        (self.wprice, self.sprice, self.coloc,
-         self.max_w, self.max_s) = cluster.backend.snapshot_bundle(
-            price_op, free_op, self.wdem, self.sdem, job.gamma,
-        )
+            if cluster.backend.is_device:
+                # device operands stay on device; the bundle call is the sync
+                price_op = prices.device_tensor()[t]
+                free_op = cluster.device_free_tensor()[t]
+            else:
+                # host operands; NumpyBackend dispatches to the reference
+                # reduction (kernels.pricing.price_bundle_numpy), which is the
+                # exact per-resource accumulation + min/floor head-room the
+                # frozen core computes — bit-parity preserved
+                price_op = prices.price_matrix(t)           # (H, R), shared
+                free_op = self.free_mat
+            (self.wprice, self.sprice, self.coloc,
+             self.max_w, self.max_s) = cluster.backend.snapshot_bundle(
+                price_op, free_op, self.wdem, self.sdem, job.gamma,
+            )
         self.job = job
         self._bundle_units: Optional[np.ndarray] = None
         self._worder: Optional[np.ndarray] = None
@@ -249,6 +271,34 @@ class PriceSnapshot:
             self._slb = (np.cumsum(units), np.cumsum(units * p), p)
         return self._greedy_fill_lb(self._slb, X)
 
+    def greedy_lb_vec(self, Xw: np.ndarray, Xs: np.ndarray) -> np.ndarray:
+        """``greedy_lb_workers(Xw[i]) + greedy_lb_ps(Xs[i])`` for whole
+        level vectors at once — one searchsorted per family instead of one
+        Python call per (level, family). Element-for-element the fill is
+        the arithmetic of ``_greedy_fill_lb`` (same searchsorted side, same
+        prefix reads, same multiply-add), so each entry is bit-identical to
+        the scalar bound the dominance check would have computed."""
+        self.greedy_lb_workers(1.0)       # force prefix builds (cheap,
+        self.greedy_lb_ps(1.0)            # cached for the snapshot's life)
+
+        def fill(prefix, X):
+            cu, cc, p = prefix
+            out = np.zeros(X.shape)
+            pos = X > 0
+            if not pos.any():
+                return out
+            j = cu.searchsorted(X[pos], side="left")
+            ok = j < cu.size
+            jj = np.minimum(j, cu.size - 1)
+            prev_u = np.where(j > 0, cu[np.maximum(j - 1, 0)], 0.0)
+            prev_c = np.where(j > 0, cc[np.maximum(j - 1, 0)], 0.0)
+            val = prev_c + (X[pos] - prev_u) * p[jj]
+            out[pos] = np.where(ok, val, np.inf)
+            return out
+
+        return fill(self._wlb, np.asarray(Xw, dtype=np.float64)) + \
+            fill(self._slb, np.asarray(Xs, dtype=np.float64))
+
     def head_aux(self, kind: str) -> tuple:
         """Precomputed operands for ``_headroom_one``: demand-positive
         column subsets of the demand vectors and tolerance-shifted free
@@ -336,6 +386,15 @@ def _prune_stats(snap: PriceSnapshot, need_w: float, need_s: float,
     probes into those sums, so results memoize on the break-index pair:
     Algorithm 3's Q workload levels usually collapse onto a handful of
     distinct machine subsets."""
+    i_w, j_s = _prune_keys(snap, np.float64(need_w), np.float64(need_s), cfg)
+    return _prune_fill(snap, (int(i_w), int(j_s)), cfg)
+
+
+def _prune_keys(snap: PriceSnapshot, need_w, need_s,
+                cfg: SubproblemConfig) -> tuple:
+    """The (i_w, j_s) break-index pair of ``_prune_stats`` — vectorized:
+    ``need_w``/``need_s`` may be scalars or whole level vectors, and the
+    searchsorted probes are the scalar walk's exact crossings."""
     if snap._prune_aux is None:
         wo = snap.wprice_order
         wp = wo[snap.max_w[wo] > 0]
@@ -351,13 +410,24 @@ def _prune_stats(snap: PriceSnapshot, need_w: float, need_s: float,
     # break index of each phase: first cumulative-capacity crossing
     # (cum[i] >= margin*need  <=>  i >= searchsorted), capped by the
     # max_lp_machines budget and the array end
-    i_w = min(int(cw.searchsorted(margin * need_w, side="left")),
-              cap - 1, wp.size - 1)
-    j_s = (min(int(cs.searchsorted(margin * need_s, side="left")),
-               sp.size - 1) if sp.size else -1)
-    key = (i_w, j_s)
+    i_w = np.minimum(cw.searchsorted(margin * need_w, side="left"),
+                     min(cap - 1, wp.size - 1))
+    if sp.size:
+        j_s = np.minimum(cs.searchsorted(margin * need_s, side="left"),
+                         sp.size - 1)
+    else:
+        j_s = np.full_like(np.asarray(i_w), -1)
+    return i_w, j_s
+
+
+def _prune_fill(snap: PriceSnapshot, key: tuple,
+                cfg: SubproblemConfig) -> tuple:
+    """Memoized machine subset + capacity sums for one (i_w, j_s) key."""
     hit = snap._prune_cache.get(key)
     if hit is None:
+        i_w, j_s = key
+        wp, cw, sp, cs = snap._prune_aux
+        cap = cfg.max_lp_machines
         sel = {int(h) for h in wp[:i_w + 1]}
         for i in range(sp.size):
             sel.add(int(sp[i]))
@@ -384,18 +454,20 @@ def _build_external_rows(
     strided assignments instead of per-row np.zeros."""
     M = len(machines)
     n = 2 * M
-    act = [k for k, r in enumerate(snap.resources)
-           if snap.wdem[k] != 0.0 or snap.sdem[k] != 0.0]
+    act = snap.act                     # demand-positive resource columns
     nact = len(act)
     n_cap = M * nact
     A = np.zeros((n_cap + 3, n))
     b = np.empty(n_cap + 3)
-    rows = np.arange(M) * nact
-    cols = np.arange(M)
-    for j, k in enumerate(act):
-        A[rows + j, cols] = snap.wdem[k]
-        A[rows + j, M + cols] = snap.sdem[k]
-        b[rows + j] = snap.free_mat[machines, k]
+    # capacity block as two diagonal writes on the (M, nact, n) view:
+    # cell (i*nact + j, i) = alpha[act[j]] and (i*nact + j, M+i) =
+    # beta[act[j]] — the same cells the per-resource strided writes fill
+    A3 = A[:n_cap].reshape(M, nact, n)
+    ar = np.arange(M)
+    A3[ar, :, ar] = snap.wdem[act]
+    A3[ar, :, M + ar] = snap.sdem[act]
+    # machine-major/resource-inner RHS block in one raveled write
+    b[:n_cap] = snap.free_mat[machines][:, act].ravel()
     # worker cap (25)
     A[n_cap, :M] = 1.0
     b[n_cap] = float(job.batch_size)
@@ -407,6 +479,76 @@ def _build_external_rows(
     A[n_cap + 2, M:] = -job.gamma
     b[n_cap + 2] = 0.0
     return A, b, n_cap
+
+
+# dominance classification codes (see _dominance_class)
+_DOM_SOLVE = 0      # cannot certify: the external LP must be solved
+_DOM_SKIP = 1       # skip; the reference bails before rounding (no rng)
+_DOM_SKIP_BURN = 2  # skip; the reference WOULD round — burn the block
+
+
+def _dominance_class(
+    job: JobSpec,
+    snap: PriceSnapshot,
+    v: float,
+    cfg: SubproblemConfig,
+    internal_cost: float,
+) -> Tuple[int, int]:
+    """Pure (rng-free) core of ``_external_dominated``: classify one
+    workload level as solve / skip / skip-with-burn, returning
+    ``(code, M)`` with M the pruned machine count (the burn width).
+    Branch-for-branch the decision logic documented on
+    ``_external_dominated``; kept separate so ``core.solve_plan`` can
+    classify whole candidate grids without touching the rng stream and
+    apply the burns later, in reference evaluation order."""
+    tps = job.time_per_sample(internal=False)
+    W1 = v * tps
+    if W1 > job.batch_size + 1e-9:
+        return _DOM_SKIP, 0               # external infeasible; no rng used
+    if W1 > job.batch_size:
+        # ambiguous band (batch, batch + 1e-9]: the reference's LP may
+        # resolve either way within its phase-1 tolerance, so whether it
+        # reaches the rounding draw is not certifiable — solve for real
+        return _DOM_SOLVE, 0
+    S1 = W1 / job.gamma
+    # Integer counts every surviving external candidate satisfies:
+    #   sum w >= ceil(W1 (1 - slack - 1e-9))   (cover row / repair target)
+    #   sum s >= max(1, ceil(sum w / gamma))   (_ensure_ratio guarantee)
+    # so the greedy fractional fills at those integer totals bound its cost
+    # from below with no extra tolerance. On exact ties the candidate list
+    # [internal, external] already resolves internal-first, so <= is safe.
+    wsum_min = max(0, math.ceil(W1 * (1.0 - cfg.cover_slack - 1e-9) - 1e-12))
+    s_min = max(1, math.ceil(wsum_min / job.gamma))
+    bkey = (wsum_min, s_min)
+    bound = snap._bound_cache.get(bkey)
+    if bound is None:
+        bound = snap.greedy_lb_workers(wsum_min) + snap.greedy_lb_ps(s_min)
+        snap._bound_cache[bkey] = bound
+    if internal_cost > bound:
+        return _DOM_SOLVE, 0              # internal might lose: solve LP
+    machines, maxw_sum, bundle_sum = _prune_stats(snap, W1, S1, cfg)
+    M = len(machines)
+    if M == 0 or maxw_sum < W1 - 1e-9:
+        return _DOM_SKIP, M               # reference bails pre-rounding
+    if bundle_sum < W1 + 1e-6:
+        return _DOM_SOLVE, M              # can't certify LP feasibility
+    return _DOM_SKIP_BURN, M
+
+
+def _burn_rounding_block(cfg: SubproblemConfig, rng: np.random.Generator,
+                         M: int) -> None:
+    """Burn the (S, 2M) uniform block the reference's rounding would draw.
+    Generator.random consumes one PCG64 step per double, so advancing the
+    bit generator is stream-equivalent to drawing and discarding (covered
+    by the golden parity tests); non-advanceable generators fall back.
+    No-op in "derived" mode: per-(job, t, v) derived rngs mean skipping a
+    solve cannot desync any other draw."""
+    if cfg.rng_mode == "derived":
+        return
+    try:
+        rng.bit_generator.advance(cfg.rounding_rounds * 2 * M)
+    except (AttributeError, NotImplementedError):
+        rng.random((cfg.rounding_rounds, 2 * M))
 
 
 def _external_dominated(
@@ -443,66 +585,39 @@ def _external_dominated(
     tests would surface it.
 
     The bound itself is tightened to integer totals — see the inline
-    comment — and the dominance comparison uses the DP cost values, which
-    are bit-identical to the reference's (minplus_numpy replays the
-    scalar hysteresis in near-tie rows)."""
-    tps = job.time_per_sample(internal=False)
-    W1 = v * tps
-    if W1 > job.batch_size + 1e-9:
-        return True                       # external infeasible; no rng used
-    if W1 > job.batch_size:
-        # ambiguous band (batch, batch + 1e-9]: the reference's LP may
-        # resolve either way within its phase-1 tolerance, so whether it
-        # reaches the rounding draw is not certifiable — solve for real
+    comment in ``_dominance_class`` — and the dominance comparison uses
+    the DP cost values, which are bit-identical to the reference's
+    (minplus_numpy replays the scalar hysteresis in near-tie rows)."""
+    code, M = _dominance_class(job, snap, v, cfg, internal_cost)
+    if code == _DOM_SOLVE:
         return False
-    S1 = W1 / job.gamma
-    # Integer counts every surviving external candidate satisfies:
-    #   sum w >= ceil(W1 (1 - slack - 1e-9))   (cover row / repair target)
-    #   sum s >= max(1, ceil(sum w / gamma))   (_ensure_ratio guarantee)
-    # so the greedy fractional fills at those integer totals bound its cost
-    # from below with no extra tolerance. On exact ties the candidate list
-    # [internal, external] already resolves internal-first, so <= is safe.
-    wsum_min = max(0, math.ceil(W1 * (1.0 - cfg.cover_slack - 1e-9) - 1e-12))
-    s_min = max(1, math.ceil(wsum_min / job.gamma))
-    bkey = (wsum_min, s_min)
-    bound = snap._bound_cache.get(bkey)
-    if bound is None:
-        bound = snap.greedy_lb_workers(wsum_min) + snap.greedy_lb_ps(s_min)
-        snap._bound_cache[bkey] = bound
-    if internal_cost > bound:
-        return False                      # internal might lose: solve LP
-    machines, maxw_sum, bundle_sum = _prune_stats(snap, W1, S1, cfg)
-    M = len(machines)
-    if M == 0 or maxw_sum < W1 - 1e-9:
-        return True                       # reference bails pre-rounding
-    if bundle_sum < W1 + 1e-6:
-        return False                      # can't certify LP feasibility
-    if cfg.rng_mode == "derived":
-        # per-(job, t, v) derived rngs: skipping a solve cannot desync any
-        # other draw, so there is no stream to keep aligned
-        return True
-    # burn the (S, 2M) uniform block the reference's rounding would draw.
-    # Generator.random consumes one PCG64 step per double, so advancing the
-    # bit generator is stream-equivalent to drawing and discarding (covered
-    # by the golden parity tests); non-advanceable generators fall back.
-    try:
-        rng.bit_generator.advance(cfg.rounding_rounds * 2 * M)
-    except (AttributeError, NotImplementedError):
-        rng.random((cfg.rounding_rounds, 2 * M))
+    if code == _DOM_SKIP_BURN:
+        _burn_rounding_block(cfg, rng, M)
     return True
 
 
-def solve_theta_external(
+@dataclass
+class ExternalCandidate:
+    """Everything ``solve_theta_external`` computes before its LP call —
+    the unit of work the plan layer stacks into ``linprog_batch``."""
+
+    W1: float
+    machines: np.ndarray
+    c: np.ndarray
+    A_ub: np.ndarray
+    b_ub: np.ndarray
+
+
+def _external_candidate(
     job: JobSpec,
     snap: PriceSnapshot,
     v: float,
     cfg: SubproblemConfig,
-    rng: np.random.Generator,
-) -> Optional[ThetaResult]:
-    """Algorithm 4 steps 8-11 (external case): LP relax + randomized round.
-
-    Variables x = [w_0..w_{M-1}, s_0..s_{M-1}] over the pruned machine set.
-    """
+) -> Optional[ExternalCandidate]:
+    """Pre-LP half of ``solve_theta_external``: workload/prune feasibility
+    gates and constraint-row construction. Returns None exactly when the
+    reference returns None before reaching its LP (no rng consumed on any
+    such path)."""
     tps = job.time_per_sample(internal=False)
     W1 = v * tps  # cover requirement on sum of workers (Eq. 26 RHS)
     if W1 > job.batch_size + 1e-9:  # (25) vs (26) conflict: infeasible v
@@ -512,11 +627,53 @@ def solve_theta_external(
     M = len(machines)
     if M == 0 or maxw_sum < W1 - 1e-9:
         return None
-
     c = np.concatenate([snap.wprice[machines], snap.sprice[machines]])
-    A_ub, b_ub, n_cap = _build_external_rows(job, snap, machines, W1)
+    A_ub, b_ub, _ = _build_external_rows(job, snap, machines, W1)
+    return ExternalCandidate(W1=W1, machines=machines, c=c,
+                             A_ub=A_ub, b_ub=b_ub)
 
-    res = linprog(c, A_ub=A_ub, b_ub=b_ub)
+
+def _packing_w2(job: JobSpec, snap: PriceSnapshot,
+                machines: np.ndarray) -> float:
+    """W2 = min over packing rows of rhs/coef (Theorem 3). Depends only
+    on the machine subset and the frozen free capacities — NOT on the
+    workload level — so the plan layer caches it per (slot, subset).
+
+    One masked column-min replaces the per-(resource, demand) scan; the
+    running min accumulates the same candidate set (min is exact, so the
+    value is bit-identical to the scalar double loop)."""
+    fr = snap.free_mat[machines]                       # (M, R)
+    with np.errstate(invalid="ignore"):
+        colmin = np.where(fr > 0, fr, np.inf).min(axis=0) if fr.size \
+            else np.full(fr.shape[1], np.inf)
+    w2 = float(job.batch_size)
+    for k in range(len(snap.resources)):
+        if not np.isfinite(colmin[k]):
+            continue
+        for d in (snap.wdem[k], snap.sdem[k]):
+            if d > 0:
+                w2 = min(w2, float(colmin[k]) / d)
+    return w2
+
+
+def _external_finish(
+    job: JobSpec,
+    snap: PriceSnapshot,
+    cand: ExternalCandidate,
+    res,
+    cfg: SubproblemConfig,
+    rng: np.random.Generator,
+    w2: Optional[float] = None,
+) -> Optional[ThetaResult]:
+    """Post-LP half of ``solve_theta_external``: G_delta, the randomized
+    rounding (the ONLY rng consumer — reached iff the LP is optimal),
+    repair, and the ratio guarantee. ``res`` is the candidate's
+    ``LPResult`` from either ``linprog`` or ``linprog_batch``; ``w2``
+    optionally injects the cached ``_packing_w2`` value (bit-identical —
+    it is a pure function of the candidate's machine subset)."""
+    W1, machines = cand.W1, cand.machines
+    b_ub = cand.b_ub
+    M = len(machines)
     if res.status != "optimal" or res.x is None:
         return None
     x_frac = res.x
@@ -527,15 +684,8 @@ def solve_theta_external(
     elif cfg.favor == "cover":
         gd = g_delta_cover(cfg.delta, max(W1, 1.0))
     else:
-        # W2 = min over packing rows of rhs/coef (Theorem 3)
-        w2 = float(job.batch_size)
-        for k in range(len(snap.resources)):
-            for d in (snap.wdem[k], snap.sdem[k]):
-                if d > 0:
-                    fr = snap.free_mat[machines, k]
-                    pos = fr[fr > 0]
-                    if pos.size:
-                        w2 = min(w2, float(pos.min()) / d)
+        if w2 is None:
+            w2 = _packing_w2(job, snap, machines)
         gd = g_delta_packing(cfg.delta, max(w2, 1e-6),
                              num_packing_rows=len(b_ub) - 1)
 
@@ -580,6 +730,26 @@ def solve_theta_external(
     )
 
 
+def solve_theta_external(
+    job: JobSpec,
+    snap: PriceSnapshot,
+    v: float,
+    cfg: SubproblemConfig,
+    rng: np.random.Generator,
+) -> Optional[ThetaResult]:
+    """Algorithm 4 steps 8-11 (external case): LP relax + randomized round.
+
+    Variables x = [w_0..w_{M-1}, s_0..s_{M-1}] over the pruned machine set.
+    Composition of the candidate/LP/finish phases — the plan layer
+    (``core.solve_plan``) runs the same three phases with the LP step
+    batched across every pending (t, v) candidate."""
+    cand = _external_candidate(job, snap, v, cfg)
+    if cand is None:
+        return None
+    res = linprog(cand.c, A_ub=cand.A_ub, b_ub=cand.b_ub)
+    return _external_finish(job, snap, cand, res, cfg, rng)
+
+
 # ------------------------------------------------------------- repair ops
 def _fits_machine(job: JobSpec, snap: PriceSnapshot, h: int, w: int, s: int) -> bool:
     """Whole-vector feasibility for one machine's (w, s) load."""
@@ -593,8 +763,9 @@ def _headroom_one(snap: PriceSnapshot, kind: str, h: int,
     machine h can take on top of its current (w_h, s_h) load, under the
     same 1e-9 tolerance as ``_fits_machine``: closed-form floor of the
     slack/demand ratio, pinned by a one-ulp fix-up against the
-    multiplicative per-unit check of the frozen reference. Evaluated
-    lazily inside the greedy repair loops so only visited machines pay."""
+    multiplicative per-unit check of the frozen reference. The repair
+    paths use the whole-vector ``_headroom_all``; this per-machine form
+    is kept as its parity oracle (tests/test_solve_plan.py)."""
     pos, dpos, fpos, wdp, sdp, wdn, sdn, fnon = snap.head_aux(kind)
     P = dpos.shape[1]
     if P == 0:
@@ -634,14 +805,76 @@ def _headroom_one(snap: PriceSnapshot, kind: str, h: int,
     return k
 
 
-def _repair(job, snap, w, s, W1):
+def _headroom_all(snap: PriceSnapshot, kind: str, w: np.ndarray,
+                  s: np.ndarray) -> np.ndarray:
+    """``_headroom_one`` for every machine in one vectorized pass —
+    accepts one (H,) load pair or a stacked (C, H) batch of candidates'
+    loads (the plan layer's grouped repair; the machine axis is always
+    last and every candidate row is independent).
+
+    The greedy repair loops visit machines in price order and each
+    machine's (w_h, s_h) load only changes at its own visit, so the whole
+    head-room vector can be precomputed from the entry loads. Per machine
+    the arithmetic is ``_headroom_one``'s exactly: the nonpos-column
+    guard short-circuits to 0 (skipping the grow fix-up, like the scalar
+    early return), the closed form is the same floor of the same float
+    ratios, and the one-ulp fix-up loops apply the same single-multiply
+    predicate — so every entry is bit-identical to the lazy scalar call."""
+    pos, dpos, fpos, wdp, sdp, wdn, sdn, fnon = snap.head_aux(kind)
+    P = dpos.shape[1]
+    if P == 0:
+        return np.full(np.shape(w), np.iinfo(np.int64).max // 2,
+                       dtype=np.int64)
+    wf = w.astype(np.float64)
+    sf = s.astype(np.float64)
+    if fnon is not None:
+        guard = ((wf[..., :, None] * wdn + sf[..., :, None] * sdn)
+                 > fnon).any(axis=-1)
+    else:
+        guard = np.zeros(np.shape(w), dtype=bool)
+    need = wf[..., :, None] * wdp + sf[..., :, None] * sdp
+    k = np.floor((fpos - need) / dpos[0]).min(axis=-1)
+    k = np.maximum(k.astype(np.int64), 0)
+
+    # fix-up against the multiplicative predicate (see _headroom_one):
+    # grown-count single multiply, never the additive form
+    if kind == "w":
+        def fits_at(kk):
+            lhs = ((wf + kk)[..., :, None] * wdp
+                   + sf[..., :, None] * sdp)
+            return (lhs <= fpos).all(axis=-1)
+    else:
+        def fits_at(kk):
+            lhs = (wf[..., :, None] * wdp
+                   + (sf + kk)[..., :, None] * sdp)
+            return (lhs <= fpos).all(axis=-1)
+
+    live = ~guard
+    while True:
+        shrink = live & (k > 0) & ~fits_at(k)
+        if not shrink.any():
+            break
+        k[shrink] -= 1
+    while True:
+        grow = live & fits_at(k + 1)
+        if not grow.any():
+            break
+        k[grow] += 1
+    k[guard] = 0
+    return k
+
+
+def _repair(job, snap, w, s, W1, heads=None):
     """Clip per-machine packing violations, then greedily add workers on the
     cheapest machines until the cover constraint holds.
 
     Vectorized: one mask over the loaded machines finds packing violations
-    (usually none), lazy per-machine head-room replaces the per-unit while
-    loops; identical greedy order and outcomes as the frozen scalar
-    reference."""
+    (usually none), whole-vector head-room + a closed-form prefix fill
+    replace the per-unit while loops; identical greedy order and outcomes
+    as the frozen scalar reference. ``heads`` optionally injects the
+    (H,) worker head-room row (the plan layer computes it for a whole
+    candidate batch at once); only valid when the clip phase left the
+    loads untouched, so callers pass it for clip-free candidates only."""
     loaded = np.flatnonzero((w > 0) | (s > 0))
     if loaded.size:
         need_mat = (w[loaded, None] * snap.wdem[None, :]
@@ -650,58 +883,70 @@ def _repair(job, snap, w, s, W1):
         bad = loaded[~okrow]
     else:
         bad = loaded
-    for h in bad:
-        while (w[h] > 0 or s[h] > 0) and not _fits_machine(
-            job, snap, h, int(w[h]), int(s[h])
-        ):
-            if w[h] >= s[h] and w[h] > 0:
-                w[h] -= 1
-            elif s[h] > 0:
-                s[h] -= 1
-            else:
-                break
+    if bad.size:
+        for h in bad:
+            while (w[h] > 0 or s[h] > 0) and not _fits_machine(
+                job, snap, h, int(w[h]), int(s[h])
+            ):
+                if w[h] >= s[h] and w[h] > 0:
+                    w[h] -= 1
+                elif s[h] > 0:
+                    s[h] -= 1
+                else:
+                    break
+        heads = None   # loads changed: injected head-room is stale
     need = int(math.ceil(W1 - w.sum()))
     if need > 0:
         budget = int(job.batch_size - w.sum())  # cap (25)
+        filled = 0
         if budget > 0:
-            for h in snap.wprice_order:
-                take = min(need, budget,
-                           _headroom_one(snap, "w", int(h), int(w[h]), int(s[h])))
-                if take > 0:
-                    w[h] += take
-                    need -= take
-                    budget -= take
-                if need <= 0:
-                    break
-        if need > 0:
+            # whole-vector head-room: each machine is visited once and its
+            # load only changes at that visit, so the entry-load vector is
+            # exactly what the lazy per-machine calls would have seen —
+            # and the greedy walk itself collapses to a closed-form
+            # prefix fill: take_h = min(head_h, X - taken_before), X the
+            # binding of cover need and batch budget (both shrink by the
+            # same takes, so min(need_rem, budget_rem) = X - prefix).
+            # Integer arithmetic throughout — takes identical to the loop.
+            if heads is None:
+                heads = _headroom_all(snap, "w", w, s)
+            X = min(need, budget)
+            # heads clip at X first: a take never exceeds the remaining
+            # fill, so takes are unchanged — and the no-demand sentinel
+            # (iinfo.max // 2) cannot overflow the prefix sums
+            hv = np.minimum(heads[snap.wprice_order], X)
+            prefix = np.cumsum(hv) - hv
+            takes = np.clip(X - prefix, 0, hv)
+            w[snap.wprice_order] += takes
+            filled = int(takes.sum())
+        if need - filled > 0:
             return None, None
     if w.sum() > job.batch_size:
-        order = snap.wprice_order_desc
+        # same closed form along the descending price order
         excess = int(w.sum() - job.batch_size)
-        for h in order:
-            take = min(excess, int(w[h]))
-            w[h] -= take
-            excess -= take
-            if excess <= 0:
-                break
+        wv = w[snap.wprice_order_desc]
+        prefix = np.cumsum(wv) - wv
+        takes = np.clip(excess - prefix, 0, wv)
+        w[snap.wprice_order_desc] -= takes
     return w, s
 
 
-def _ensure_ratio(job, snap, w, s):
+def _ensure_ratio(job, snap, w, s, heads=None):
     """Ensure sum(s) >= ceil(sum(w)/gamma), adding PSs cheapest-first —
-    bulk head-room per machine instead of unit-at-a-time."""
+    whole-vector head-room + closed-form prefix fill instead of
+    unit-at-a-time. ``heads`` optionally injects the (H,) PS head-room
+    row computed for a whole candidate batch (must match the CURRENT
+    (w, s) loads — the plan layer recomputes after any repair)."""
     need = max(1, int(math.ceil(w.sum() / job.gamma))) - int(s.sum())
     if need <= 0:
         return s
-    for h in snap.sprice_order:
-        take = min(need,
-                   _headroom_one(snap, "s", int(h), int(w[h]), int(s[h])))
-        if take > 0:
-            s[h] += take
-            need -= take
-        if need <= 0:
-            break
-    return s if need <= 0 else None
+    if heads is None:
+        heads = _headroom_all(snap, "s", w, s)
+    hv = np.minimum(heads[snap.sprice_order], need)  # sentinel-safe cumsum
+    prefix = np.cumsum(hv) - hv
+    takes = np.clip(need - prefix, 0, hv)
+    s[snap.sprice_order] += takes
+    return s if need - int(takes.sum()) <= 0 else None
 
 
 # ----------------------------------------------------------------------

@@ -45,7 +45,8 @@ import numpy as np
 
 _pallas_broken: Optional[str] = None   # first failure reason, warn once
 _jnp_bundle = None                     # lazily created jit
-TRACE_COUNTS = {"bundle_jnp": 0}
+_jnp_bundle_batch = None               # lazily created jit (fused multi-slot)
+TRACE_COUNTS = {"bundle_jnp": 0, "bundle_batch_jnp": 0}
 
 Bundle = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]
 
@@ -206,6 +207,151 @@ def price_bundle_pallas(price, free, wdem: np.ndarray, sdem: np.ndarray,
         )
         out = price_bundle_jnp(price, free, wdem, sdem, gamma)
         return out[0], out[1], out[2], max_w, max_s
+
+
+# ------------------------------------------------- fused multi-slot batch
+def price_bundle_batch_numpy(price: np.ndarray, free: np.ndarray,
+                             wdem: np.ndarray, sdem: np.ndarray,
+                             gamma: float) -> Bundle:
+    """``price_bundle_numpy`` over a whole (W, H, R) slot stack in one
+    pass, returning five (W, H) arrays. The per-resource accumulation
+    loop is identical — each (t, h) element receives the same sequence of
+    multiply-adds as the per-slot call, so every float is bit-identical
+    to W separate ``price_bundle_numpy`` invocations."""
+    W, H, _ = price.shape
+    wprice = np.zeros((W, H))
+    sprice = np.zeros((W, H))
+    coloc = np.zeros((W, H))
+    for k in range(price.shape[2]):
+        a = wdem[k]
+        b = sdem[k]
+        pcol = price[:, :, k]
+        if a:
+            wprice += pcol * a
+        if b:
+            sprice += pcol * b
+        coloc += pcol * (a * gamma + b)
+
+    def headroom(dem: np.ndarray) -> np.ndarray:
+        pos = dem > 0
+        if not pos.any():
+            return np.full((W, H), np.inf)
+        ratio = (free[:, :, pos] / dem[pos][None, None, :]).min(axis=2)
+        return np.floor(np.maximum(ratio, 0.0))
+
+    return wprice, sprice, coloc, headroom(wdem), headroom(sdem)
+
+
+def _get_jnp_bundle_batch():
+    global _jnp_bundle_batch
+    if _jnp_bundle_batch is None:
+        import jax
+        import jax.numpy as jnp
+
+        def impl(price, free, wdem, sdem, gamma):
+            TRACE_COUNTS["bundle_batch_jnp"] += 1
+            wprice = price @ wdem                       # (W, H)
+            sprice = price @ sdem
+            coloc = price @ (wdem * gamma + sdem)
+
+            def headroom(dem):
+                pos = dem > 0
+                ratio = jnp.where(
+                    pos[None, None, :],
+                    free / jnp.where(pos, dem, 1.0)[None, None, :],
+                    jnp.inf,
+                )
+                return jnp.floor(jnp.maximum(jnp.min(ratio, axis=2), 0.0))
+
+            return wprice, sprice, coloc, headroom(wdem), headroom(sdem)
+
+        _jnp_bundle_batch = jax.jit(impl)
+    return _jnp_bundle_batch
+
+
+def price_bundle_batch_jnp(price, free, wdem: np.ndarray, sdem: np.ndarray,
+                           gamma: float) -> Bundle:
+    """One jit-compiled device pass over the whole (W, H, R) slot stack —
+    the jax backend's fused bundle: W slots' decision vectors reduced
+    with ONE dispatch and ONE host sync instead of W per-slot round
+    trips. Dot-order accumulation (tolerance-equal to the reference, like
+    the per-slot jnp path)."""
+    fn = _get_jnp_bundle_batch()
+    out = fn(price, free, np.asarray(wdem, dtype=np.float64),
+             np.asarray(sdem, dtype=np.float64), float(gamma))
+    return tuple(np.asarray(o, dtype=np.float64) for o in out)
+
+
+def price_bundle_batch_pallas(price, free, wdem: np.ndarray,
+                              sdem: np.ndarray, gamma: float,
+                              interpret: Optional[bool] = None) -> Bundle:
+    """Pallas TPU path for the fused batch: the (W, H, R) price stack is
+    flattened to one (W*H, R) operand and pushed through the same padded
+    MXU ``dot_general`` kernel as the per-slot path — one kernel launch
+    for every slot of the plan. Head-room rows stay host-side float64
+    (integer-valued decisions; see the module docstring). Falls back to
+    the jnp batch pass on any kernel failure."""
+    global _pallas_broken
+    free64 = np.asarray(free, dtype=np.float64)
+    wdem = np.asarray(wdem, dtype=np.float64)
+    sdem = np.asarray(sdem, dtype=np.float64)
+    # .shape reads need no host transfer (device or host array alike)
+    W, H, R = price.shape[0], free64.shape[1], free64.shape[2]
+
+    def headroom(dem):
+        pos = dem > 0
+        if not pos.any():
+            return np.full((W, H), np.inf)
+        ratio = (free64[:, :, pos] / dem[pos][None, None, :]).min(axis=2)
+        return np.floor(np.maximum(ratio, 0.0))
+
+    max_w = headroom(wdem)
+    max_s = headroom(sdem)
+    if _pallas_broken is not None:
+        out = price_bundle_batch_jnp(price, free, wdem, sdem, gamma)
+        return out[0], out[1], out[2], max_w, max_s
+    try:
+        import jax
+        import jax.numpy as jnp
+
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        flat = np.asarray(price, dtype=np.float32).reshape(W * H, R)
+        WH = W * H
+        Hp = max(128, int(np.ceil(WH / 128)) * 128)
+        Rp = max(128, int(np.ceil(R / 128)) * 128)
+        P = np.zeros((Hp, Rp), dtype=np.float32)
+        P[:WH, :R] = flat
+        Wm = np.zeros((8, Rp), dtype=np.float32)
+        Wm[0, :R] = wdem.astype(np.float32)
+        Wm[1, :R] = sdem.astype(np.float32)
+        Wm[2, :R] = (wdem * gamma + sdem).astype(np.float32)
+        out = _pallas_bundle_call(
+            jnp.asarray(P), jnp.asarray(Wm), interpret
+        )[:3, :WH].astype(np.float64).reshape(3, W, H)
+        return out[0], out[1], out[2], max_w, max_s
+    except Exception as e:  # missing jax, lowering failure, ...
+        _pallas_broken = f"{type(e).__name__}: {e}"
+        warnings.warn(
+            f"pricing Pallas batch path unavailable ({_pallas_broken}); "
+            "falling back to jnp",
+            RuntimeWarning,
+        )
+        out = price_bundle_batch_jnp(price, free, wdem, sdem, gamma)
+        return out[0], out[1], out[2], max_w, max_s
+
+
+def price_bundle_batch(price, free, wdem: np.ndarray, sdem: np.ndarray,
+                       gamma: float, backend: Optional[str] = None) -> Bundle:
+    """Fused multi-slot snapshot reduction; same backend contract as
+    ``price_bundle`` but over (W, H, R) operands, returning five (W, H)
+    host float64 arrays (one row per slot)."""
+    if backend == "pallas":
+        return price_bundle_batch_pallas(price, free, wdem, sdem, gamma)
+    if backend == "numpy":
+        return price_bundle_batch_numpy(np.asarray(price), np.asarray(free),
+                                        wdem, sdem, gamma)
+    return price_bundle_batch_jnp(price, free, wdem, sdem, gamma)
 
 
 # -------------------------------------------------------------- dispatch

@@ -79,8 +79,29 @@ class SimEngine:
         self.check_ledger = check_ledger
         self.metrics = MetricsCollector(window.cluster.resources)
         self.states: Dict[int, JobState] = {}
+        # incremental active-set index: the slot loop touches only jobs
+        # that are live (active) or awaiting a requeue, so 1e4+-job
+        # traces don't pay a full-state rescan per slot (the finished
+        # majority never re-enters either set)
+        self._active: set = set()
+        self._awaiting: set = set()
         self.queue = EventQueue()
         policy.bind(window, seed)
+
+    # -- active-set index maintenance ----------------------------------
+    def _set_active(self, js: JobState, active: bool) -> None:
+        js.active = active
+        if active:
+            self._active.add(js.job.job_id)
+        else:
+            self._active.discard(js.job.job_id)
+
+    def _set_awaiting(self, js: JobState, awaiting: bool) -> None:
+        js.awaiting_requeue = awaiting
+        if awaiting:
+            self._awaiting.add(js.job.job_id)
+        else:
+            self._awaiting.discard(js.job.job_id)
 
     # ------------------------------------------------------------------
     def _notify(self, kind: EventKind, job_id: int, t: int) -> None:
@@ -119,8 +140,8 @@ class SimEngine:
             residual = self._residual(js, t)
             if residual is None:
                 return
-            js.active = False
-            js.awaiting_requeue = True
+            self._set_active(js, False)
+            self._set_awaiting(js, True)
             self.queue.push(Event(time=t + 1, kind=EventKind.ARRIVAL,
                                   job=residual, requeue=True))
         # slot-driven: the job stays active; the policy dropped any held
@@ -128,7 +149,7 @@ class SimEngine:
 
     def _depart(self, job_id: int, t: int) -> None:
         js = self.states[job_id]
-        js.active = False
+        self._set_active(js, False)
         js.finished = True
         self.window.release_from(job_id, t)  # same-slot admissions may hold rows
         oc = self.metrics.outcome(job_id, js.orig_arrival)
@@ -145,7 +166,7 @@ class SimEngine:
                 js.job = job
                 js.attempt += 1
                 js.progress = 0.0
-                js.awaiting_requeue = False
+                self._set_awaiting(js, False)
             else:
                 js = self.states[job.job_id] = JobState(
                     job=job, orig_arrival=job.arrival
@@ -166,30 +187,35 @@ class SimEngine:
             js = self.states[job.job_id]
             oc = self.metrics.outcome(job.job_id, js.orig_arrival)
             if self.policy.slot_driven:
-                js.active = True     # implicit admission: queue until served
+                self._set_active(js, True)  # implicit admission: queue
                 continue
             admitted = dec.admitted.get(job.job_id, False)
             if js.attempt == 0:
                 oc.admitted = admitted
             if admitted:
-                js.active = True
+                self._set_active(js, True)
             elif js.attempt == 0:
                 # rejected offers leave immediately (Algorithm 1 admits/drops)
-                js.active = False
+                self._set_active(js, False)
                 js.finished = True
                 self.metrics.count("rejection")
             else:
                 # a preempted job whose residual re-offer was rejected: it
                 # WAS admitted, trained, and then left incomplete — surfaced
                 # as an eviction so completion shortfalls stay attributable
-                js.active = False
+                self._set_active(js, False)
                 js.finished = True
                 oc.evicted_at = t
                 self.metrics.count("eviction")
 
     def _account_progress(self, t: int) -> None:
-        for job_id, js in self.states.items():
-            if not js.active or js.finished:
+        # per-job accounting is independent (progress reads the job's own
+        # commitments; a completion releases only its own rows), so the
+        # sorted active set is both deterministic and equivalent to the
+        # old full-state scan
+        for job_id in sorted(self._active):
+            js = self.states[job_id]
+            if js.finished:
                 continue
             alloc = self.window.alloc_at(job_id, t)
             if alloc is None or alloc.empty():
@@ -199,7 +225,7 @@ class SimEngine:
                 oc.first_service = t
             js.progress += alloc.samples_trained(js.job)
             if js.progress >= js.job.total_workload() - 1e-6:
-                js.active = False
+                self._set_active(js, False)
                 js.finished = True
                 self.window.release_from(job_id, t + 1)
                 oc.completed_at = t
@@ -210,8 +236,9 @@ class SimEngine:
     def _check_patience(self, t: int) -> None:
         if self.patience is None:
             return
-        for job_id, js in list(self.states.items()):
-            if not js.active or js.finished:
+        for job_id in sorted(self._active):
+            js = self.states[job_id]
+            if js.finished:
                 continue
             oc = self.metrics.outcome(job_id, js.orig_arrival)
             if oc.admitted is True:
@@ -228,8 +255,7 @@ class SimEngine:
             while pending is not None and pending.time <= t:
                 self.queue.push(pending)
                 pending = next(stream, None)
-            busy = any(js.active or js.awaiting_requeue
-                       for js in self.states.values())
+            busy = bool(self._active) or bool(self._awaiting)
             if not busy and not len(self.queue) and pending is None:
                 break
             self.window.advance_to(t)
@@ -267,8 +293,9 @@ class SimEngine:
                 self._depart(job_id, t)
             if self.policy.slot_driven:
                 actives = sorted(
-                    (js.job for js in self.states.values()
-                     if js.active and not js.finished and js.down_at != t),
+                    (self.states[jid].job for jid in self._active
+                     if not self.states[jid].finished
+                     and self.states[jid].down_at != t),
                     key=lambda j: (j.arrival, j.job_id),
                 )
                 if actives:
@@ -289,11 +316,11 @@ class SimEngine:
                 )
             self._account_progress(t)
             self._check_patience(t)
-            active = sum(1 for js in self.states.values() if js.active)
+            active = len(self._active)
             queued = sum(
-                1 for js in self.states.values()
-                if js.active and self.metrics.outcome(
-                    js.job.job_id, js.orig_arrival).first_service is None
+                1 for jid in self._active
+                if self.metrics.outcome(
+                    jid, self.states[jid].orig_arrival).first_service is None
             )
             self.metrics.record_slot(
                 t, self.window.utilization_now(), active, queued

@@ -53,6 +53,7 @@ from ..core.baselines import (
 from ..core.job import Allocation, JobSpec
 from ..core.pricing import PriceParams, PriceTable
 from ..core.schedule import find_best_schedule
+from ..core.solve_plan import SolvePlan, solve_plans
 from ..core.subproblem import SubproblemConfig
 from .events import Event, EventKind
 from .window import RollingWindow
@@ -253,9 +254,10 @@ class PDORSPolicy(SchedulingPolicy):
         super().bind(view, seed)
         self.prices = PriceTable(self.params, view.cluster)
 
-    def _offer_one(self, job: JobSpec, view: RollingWindow) -> Optional[Dict[int, Allocation]]:
+    def _offer_cfg(self, job: JobSpec) -> tuple:
+        """(cfg, rng) for one offer — peeks the attempt counter without
+        consuming it (``_offer_one`` advances it)."""
         attempt = self.attempts.get(job.job_id, 0)
-        self.attempts[job.job_id] = attempt + 1
         key = (self.seed, _TAG_PDORS, job.job_id, attempt)
         if self.rng_mode == "derived":
             offer_seed = int(
@@ -263,25 +265,58 @@ class PDORSPolicy(SchedulingPolicy):
                     tuple(_nonneg(k) for k in key)
                 ).generate_state(1)[0]
             )
-            cfg = replace(self.base_cfg, rng_mode="derived", seed=offer_seed)
-            rng = None
-        else:
-            cfg = replace(self.base_cfg, rng_mode="compat")
-            rng = derived_rng(*key)
+            return replace(self.base_cfg, rng_mode="derived",
+                           seed=offer_seed), None
+        return replace(self.base_cfg, rng_mode="compat"), derived_rng(*key)
+
+    def _offer_one(self, job: JobSpec, view: RollingWindow,
+                   plan: Optional[SolvePlan] = None,
+                   cfg: Optional[SubproblemConfig] = None,
+                   rng: Optional[np.random.Generator] = None,
+                   ) -> Optional[Dict[int, Allocation]]:
+        if cfg is None:
+            cfg, rng = self._offer_cfg(job)
+        self.attempts[job.job_id] = self.attempts.get(job.job_id, 0) + 1
         rel = view.rel_job(job)
         sched = find_best_schedule(
             rel, view.cluster, self.prices, view.lookahead,
-            cfg=cfg, quanta=self.quanta, rng=rng,
+            cfg=cfg, quanta=self.quanta, rng=rng, plan=plan,
         )
         if sched is None or sched.payoff <= 0:
             return None
         return {view.now + t: a for t, a in sched.slots.items()}
 
     def on_arrivals(self, event: Event, view: RollingWindow) -> Decision:
+        """Batched arrival offers: one price-tensor prewarm, one
+        ``SolvePlan`` per job (rng-free; per-job cfg — the derived-mode
+        seed differs per job), and every job's external LPs stacked into
+        one ``linprog_batch`` call. An admission reprices the window's
+        ledger, invalidating the remaining pre-built plans; the rest of
+        the batch falls back to per-job plans built inside the DP
+        (``SolvePlan.fresh`` guards against a stale plan ever being
+        consumed) — re-stacking after every admission would cost O(B^2)
+        plan builds on admit-heavy batches."""
         dec = Decision()
         self.prices.prewarm()
+        plans: Dict[int, Optional[SolvePlan]] = {}
+        offer_env = {}
+        if self.base_cfg.use_plan:
+            for job in event.jobs:
+                cfg, rng = self._offer_cfg(job)
+                offer_env[job.job_id] = (cfg, rng)
+                rel = view.rel_job(job)
+                plans[job.job_id] = (
+                    SolvePlan(rel, view.cluster, self.prices, cfg,
+                              rel.arrival, view.lookahead - 1,
+                              quanta=self.quanta)
+                    if rel.arrival < view.lookahead else None
+                )
+            solve_plans([p for p in plans.values() if p is not None])
         for job in event.jobs:
-            schedule = self._offer_one(job, view)
+            cfg, rng = offer_env.get(job.job_id, (None, None))
+            schedule = self._offer_one(
+                job, view, plan=plans.get(job.job_id), cfg=cfg, rng=rng,
+            )
             if schedule is None:
                 dec.admitted[job.job_id] = False
                 continue
