@@ -64,10 +64,15 @@ FULL_GRID = [
     (25, 20, 50, HEAVY_SCALE),
     (50, 40, 100, ONLINE_SCALE),
 ]
-# smoke: one online point + one heavy-contention point, so CI exercises
-# (and bench_guard gates) BOTH regimes — the LP-bound path's batched
-# solve plan can't silently regress between recorded baselines
-SMOKE_GRID = [(6, 8, 10, ONLINE_SCALE), (6, 8, 10, HEAVY_SCALE)]
+# smoke: one online point + two heavy-contention points, so CI exercises
+# (and bench_guard gates) BOTH regimes. The tiny heavy point covers the
+# LP-bound code path cheaply; the FULL heavy point (25x20x50) is where
+# the structure-aware solver's speedup is large and stable enough to
+# gate (`--min-speedup-point` in bench_guard) — at small scale the
+# per-offer fixed costs dominate and the ratio is noise (see
+# docs/BENCHMARKS.md). Run last so partial runs keep the cheap rows.
+SMOKE_GRID = [(6, 8, 10, ONLINE_SCALE), (6, 8, 10, HEAVY_SCALE),
+              (25, 20, 50, HEAVY_SCALE)]
 BENCH_BATCH = (50, 200)
 QUANTA = 32  # DP workload granularity: the run_pdors default
 
@@ -89,26 +94,40 @@ def _decisions(records) -> List[tuple]:
     return out
 
 
-def _run_pdors_timed(jobs, cluster, scheduler_cls, seed: int) -> Dict:
-    params = estimate_price_params(jobs, cluster, cluster.horizon)
-    sched = scheduler_cls(cluster, params, quanta=QUANTA, seed=seed)
-    lat: List[float] = []
-    t0 = time.perf_counter()
-    for job in sorted(jobs, key=lambda j: (j.arrival, j.job_id)):
-        t1 = time.perf_counter()
-        sched.offer(job)
-        lat.append(time.perf_counter() - t1)
-    wall = time.perf_counter() - t0
-    records = sched.records
-    return {
-        "wall_s": wall,
-        "jobs_per_sec": len(jobs) / wall if wall else float("inf"),
-        "latency_p50_ms": _pct(lat, 50) * 1e3,
-        "latency_p95_ms": _pct(lat, 95) * 1e3,
-        "utility": float(sum(r.utility for r in records)),
-        "admitted": sum(1 for r in records if r.admitted),
-        "decisions": _decisions(records),
-    }
+def _run_pdors_timed(jobs, cluster_factory, scheduler_cls, seed: int,
+                     repeat_best_of: int = 1) -> Dict:
+    """Time one scheduler run; with ``repeat_best_of > 1`` repeat the
+    whole run on a FRESH cluster each time and report the best wall
+    clock (latencies from the best run).  Decisions are deterministic at
+    a fixed seed, so every rep produces the same records — the repeats
+    only filter out scheduling noise from shared benchmark boxes (see
+    docs/BENCHMARKS.md, "noisy-box vs quiet-run methodology")."""
+    best: Optional[Dict] = None
+    ordered = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    for _ in range(max(1, repeat_best_of)):
+        cluster = cluster_factory()
+        params = estimate_price_params(jobs, cluster, cluster.horizon)
+        sched = scheduler_cls(cluster, params, quanta=QUANTA, seed=seed)
+        lat: List[float] = []
+        t0 = time.perf_counter()
+        for job in ordered:
+            t1 = time.perf_counter()
+            sched.offer(job)
+            lat.append(time.perf_counter() - t1)
+        wall = time.perf_counter() - t0
+        records = sched.records
+        out = {
+            "wall_s": wall,
+            "jobs_per_sec": len(jobs) / wall if wall else float("inf"),
+            "latency_p50_ms": _pct(lat, 50) * 1e3,
+            "latency_p95_ms": _pct(lat, 95) * 1e3,
+            "utility": float(sum(r.utility for r in records)),
+            "admitted": sum(1 for r in records if r.admitted),
+            "decisions": _decisions(records),
+        }
+        if best is None or out["wall_s"] < best["wall_s"]:
+            best = out
+    return best
 
 
 def _run_baseline_timed(name: str, jobs, cluster, seed: int) -> Dict:
@@ -128,26 +147,32 @@ def _run_baseline_timed(name: str, jobs, cluster, seed: int) -> Dict:
 
 def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
                 with_reference: bool, baselines: List[str],
-                backend: str = "numpy") -> List[Dict]:
+                backend: str = "numpy", repeat_best_of: int = 1
+                ) -> List[Dict]:
     cfg = WorkloadConfig(num_jobs=num_jobs, horizon=T, seed=seed,
                          batch=BENCH_BATCH, workload_scale=scale)
     jobs = synthetic_jobs(cfg)
     point = {"H": H, "T": T, "num_jobs": num_jobs, "seed": seed,
              "workload_scale": scale, "quanta": QUANTA, "backend": backend}
+    # only the pdors/pdors_reference measurements repeat; the slot-driven
+    # baselines are timed single-shot, so the field is stamped per row
+    bo = {"repeat_best_of": repeat_best_of}
     rows: List[Dict] = []
 
     vec = _run_pdors_timed(
-        jobs, make_cluster(H, T, backend=backend), PDORS, seed
+        jobs, lambda: make_cluster(H, T, backend=backend), PDORS, seed,
+        repeat_best_of,
     )
     vec_decisions = vec.pop("decisions")
-    rows.append({**point, "policy": "pdors", **vec})
+    rows.append({**point, "policy": "pdors", **bo, **vec})
 
     if with_reference:
         # the frozen scalar core is host-only: reference rows are always
         # backend "numpy"; against a jax pdors row the identity flag is
         # informational (the jax backend's contract is tolerance parity)
         ref = _run_pdors_timed(
-            jobs, make_cluster_reference(H, T), PDORSReference, seed
+            jobs, lambda: make_cluster_reference(H, T), PDORSReference,
+            seed, repeat_best_of,
         )
         ref_decisions = ref.pop("decisions")
         identical = (
@@ -165,7 +190,7 @@ def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
             # (the jax pdors row keeps its own self-contained speedup
             # field from this run's fresh reference timing)
             rows.append({**point, "policy": "pdors_reference",
-                         "backend": "numpy", **ref,
+                         "backend": "numpy", **bo, **ref,
                          "speedup_vs_reference": 1.0})
         if not identical:
             print(f"!! decision divergence at H={H} T={T} N={num_jobs} "
@@ -230,6 +255,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--append", action="store_true",
                     help="merge rows into an existing --out file instead "
                          "of rewriting it")
+    ap.add_argument("--repeat-best-of", type=int, default=1,
+                    help="run each timed measurement N times on a fresh "
+                         "cluster and keep the best wall — the quiet-run "
+                         "hint for shared boxes (decisions are "
+                         "deterministic, so only timing changes; see "
+                         "docs/BENCHMARKS.md)")
     ap.add_argument("--out", default="BENCH_scheduler.json")
     args = ap.parse_args(argv)
 
@@ -254,7 +285,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         t0 = time.time()
         rows = bench_point(H, T, N, scale, args.seed,
                            with_reference=not args.no_reference,
-                           baselines=baselines, backend=args.backend)
+                           baselines=baselines, backend=args.backend,
+                           repeat_best_of=args.repeat_best_of)
         for r in rows:
             extra = ""
             if "speedup_vs_reference" in r and r["policy"] == "pdors":

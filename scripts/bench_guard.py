@@ -3,11 +3,13 @@ recorded baseline rows in BENCH_scheduler.json.
 
 Fails (exit 1) if the fresh pdors smoke jobs/sec drops more than
 ``--max-drop`` (default 30%) below the recorded baseline at the same
-(H, T, num_jobs, workload_scale, backend) grid point — the key is
-backend-aware, so numpy and jax rows gate independently. Grid points
-present in only one of the two files are reported and skipped, so the
-guard never false-fails on a machine that has not recorded a baseline
-yet.
+(H, T, num_jobs, workload_scale, seed, quanta, backend) grid point — the
+key is backend-aware AND shape-aware, so numpy and jax rows gate
+independently and a grid edit (different quanta, seed, or point) can
+never silently reuse a stale baseline row. A fresh grid point with NO
+matching baseline row fails loudly by default — record a baseline (or
+pass ``--allow-missing-baseline`` for machines that genuinely have none
+yet) instead of letting the guard silently enforce nothing.
 
 ``--min-speedup X --min-speedup-scale S`` additionally gates the
 LP-regime speedup: every fresh row at workload_scale S carrying a
@@ -38,9 +40,14 @@ def _points(doc: dict, policy: str) -> dict:
     for row in doc.get("rows", []):
         if row.get("policy") != policy:
             continue
-        # rows written before the backend axis existed are numpy rows
+        # the full shape key: a baseline only gates a fresh row measured
+        # at the SAME grid point, seed, and DP granularity (rows written
+        # before the backend axis existed are numpy rows; quanta rows
+        # predating the field fall back to the file-level meta)
         key = (row["H"], row["T"], row["num_jobs"],
-               row.get("workload_scale"), row.get("backend") or "numpy")
+               row.get("workload_scale"), row.get("seed"),
+               row.get("quanta") or doc.get("quanta"),
+               row.get("backend") or "numpy")
         out[key] = (row["jobs_per_sec"], row.get("speedup_vs_reference"))
     return out
 
@@ -57,6 +64,14 @@ def main(argv=None) -> int:
                          "--min-speedup-scale")
     ap.add_argument("--min-speedup-scale", type=float, default=0.3,
                     help="workload_scale the --min-speedup floor applies to")
+    ap.add_argument("--min-speedup-point", default=None,
+                    help="restrict the --min-speedup gate to one HxTxJOBS "
+                         "grid point (e.g. 25x20x50) — the ratio is only "
+                         "stable at scale; small points are noise-bound")
+    ap.add_argument("--allow-missing-baseline", action="store_true",
+                    help="downgrade a fresh grid point with no baseline "
+                         "row from FAIL to a skip notice (for machines "
+                         "that have not recorded baselines yet)")
     args = ap.parse_args(argv)
 
     if os.environ.get("BENCH_GUARD_SKIP"):
@@ -71,8 +86,15 @@ def main(argv=None) -> int:
     for key, (fresh_jps, fresh_spd) in sorted(fresh.items()):
         hit = base.get(key)
         if hit is None:
-            print(f"bench_guard: no baseline for H,T,N,scale,backend={key} "
-                  "— skipped")
+            if args.allow_missing_baseline:
+                print("bench_guard: no baseline for "
+                      f"H,T,N,scale,seed,quanta,backend={key} — skipped "
+                      "(--allow-missing-baseline)")
+            else:
+                print("bench_guard: NO baseline row for "
+                      f"H,T,N,scale,seed,quanta,backend={key} — a grid "
+                      "edit must re-record its baseline: FAIL")
+                failed += 1
         else:
             base_jps = hit[0]
             checked += 1
@@ -83,8 +105,13 @@ def main(argv=None) -> int:
             print(f"bench_guard: {args.policy} @ {key}: {fresh_jps:.1f} "
                   f"jobs/s vs baseline {base_jps:.1f} (floor {floor:.1f}) "
                   f"{verdict}")
+        point_ok = True
+        if args.min_speedup_point is not None:
+            point_ok = tuple(
+                int(v) for v in args.min_speedup_point.split("x")
+            ) == (key[0], key[1], key[2])
         if (args.min_speedup is not None and fresh_spd is not None
-                and key[3] is not None
+                and point_ok and key[3] is not None
                 and abs(key[3] - args.min_speedup_scale) < 1e-9):
             spd_checked += 1
             verdict = "OK" if fresh_spd >= args.min_speedup else "REGRESSION"

@@ -1,4 +1,5 @@
-"""Docs-reference check: every repo path mentioned in docs/*.md exists.
+"""Docs-reference check: every repo path mentioned in docs/*.md exists,
+and every registered public symbol exists in code AND is documented.
 
 Cheap grep-based gate for the equations-to-code map: extracts every
 backtick-quoted repo path (``src/...``, ``scripts/...``, ``tests/...``,
@@ -7,6 +8,12 @@ and every dotted ``repro.foo.bar`` module reference from the markdown
 files under docs/ (plus README.md), and fails listing anything that no
 longer exists — so module renames cannot silently rot the architecture
 docs.
+
+``PUBLIC_SYMBOLS`` additionally pins the public API surfaces the docs
+promise to cover: for each (source file, symbol) entry the symbol must
+be defined in that file (a rename fails here) and mentioned in at least
+one checked markdown file (dropping its documentation fails here).  Add
+an entry for every public symbol a PR introduces.
 
 Usage:  python scripts/check_docs_refs.py  [docfile ...]
 """
@@ -23,6 +30,30 @@ PATH_RE = re.compile(
     r"|BENCH_[\w.]+\.json|[A-Z][\w\-]*\.md)`"
 )
 MODULE_RE = re.compile(r"`(repro(?:\.\w+)+)`")
+
+# public API surfaces the docs must keep covering: file -> symbols that
+# must be defined there and mentioned in docs/*.md or README.md
+PUBLIC_SYMBOLS = {
+    "src/repro/core/cover_packing.py": [
+        "CoverPackingLP",
+        "TemplateCache",
+        "detect_cover_packing",
+        "solve_cover_packing_batch",
+        "solve_lp_batch",
+        "subset_template_cache",
+    ],
+    "src/repro/core/lp.py": [
+        "linprog_batch",
+        "linprog_batch_built",
+        "TableauTemplate",
+        "lazy_rhs",
+    ],
+    "src/repro/core/solve_plan.py": ["SolvePlan", "solve_plans"],
+    "src/repro/core/subproblem.py": ["SubproblemConfig", "rng_mode",
+                                     "lp_solver"],
+    "src/repro/backend/__init__.py": ["lp_solver_default"],
+    "benchmarks/bench_scheduler.py": ["repeat-best-of"],
+}
 
 
 def module_exists(dotted: str) -> bool:
@@ -47,6 +78,36 @@ def check_file(doc: Path) -> list:
     return missing
 
 
+def check_symbols(docs: list) -> list:
+    """(origin, complaint) pairs for PUBLIC_SYMBOLS violations."""
+    corpus = "\n".join(d.read_text() for d in docs if d.exists())
+    out = []
+    for rel, symbols in PUBLIC_SYMBOLS.items():
+        path = ROOT / rel
+        if not path.exists():
+            out.append(("PUBLIC_SYMBOLS", f"{rel} (file gone)"))
+            continue
+        src = path.read_text()
+        for sym in symbols:
+            # flags like `repeat-best-of` appear verbatim; identifiers
+            # must be defined (def/class/field/assignment)
+            ident = re.escape(sym)
+            defined = (
+                "-" in sym and sym in src
+            ) or re.search(
+                rf"(?:def {ident}\b|class {ident}\b|^\s*{ident}\s*[:=])",
+                src, re.M,
+            ) is not None
+            if not defined:
+                out.append(("PUBLIC_SYMBOLS",
+                            f"{rel}: symbol {sym!r} not defined"))
+            if sym not in corpus:
+                out.append(("PUBLIC_SYMBOLS",
+                            f"{rel}: symbol {sym!r} undocumented "
+                            "(no mention in docs/ or README)"))
+    return out
+
+
 def main(argv=None) -> int:
     args = (argv if argv is not None else sys.argv[1:])
     docs = [Path(a) for a in args] if args else sorted(
@@ -60,6 +121,8 @@ def main(argv=None) -> int:
             continue
         checked += 1
         missing.extend(check_file(doc))
+    if not args:      # symbol coverage runs against the full default set
+        missing.extend(check_symbols(docs))
     for doc, ref in missing:
         print(f"check_docs_refs: {doc}: missing reference {ref!r}")
     print(f"check_docs_refs: {checked} file(s) checked, "

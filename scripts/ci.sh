@@ -20,12 +20,15 @@
 # process-wide default (skipped cleanly when jax is not importable — e.g.
 # a CPU-only box without the toolchain). Finally the guard fails if the
 # fresh pdors smoke jobs/sec drops >30% below the smoke baseline recorded
-# in BENCH_scheduler.json at the same backend-aware grid key, or if the
+# in BENCH_scheduler.json at the same backend- and shape-aware grid key
+# (a grid edit with no matching baseline fails loudly), or if the
 # heavy-contention point's in-process speedup over the frozen core falls
-# under 1.2x — a deliberately loose floor: the smoke point is sub-second,
-# so the ratio jitters with host scheduling, but a broken batched solve
-# plan shows up as ~1x or worse (BENCH_GUARD_SKIP=1 to bypass entirely
-# on known-noisy runners).
+# under 2.5x at the FULL heavy point (25x20x50, best-of-2 — the ratio
+# is only stable at scale; the cover/packing exact-replay solver lands
+# ~3.5x there on recorded best-of rows, and a broken fast path shows
+# up as ~1x; see
+# docs/SOLVER.md and docs/BENCHMARKS.md). BENCH_GUARD_SKIP=1 bypasses
+# entirely on known-noisy runners.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -37,7 +40,9 @@ if python -c "import jax" >/dev/null 2>&1; then
 else
   echo "ci: jax unavailable — skipping the REPRO_BACKEND=jax smoke leg"
 fi
-python -m benchmarks.bench_scheduler --smoke --out BENCH_scheduler_smoke.json
+python -m benchmarks.bench_scheduler --smoke --repeat-best-of 2 \
+  --out BENCH_scheduler_smoke.json
 python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
 python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json \
-  --max-drop 0.30 --min-speedup 1.2 --min-speedup-scale 0.3
+  --max-drop 0.30 --min-speedup 2.5 --min-speedup-scale 0.3 \
+  --min-speedup-point 25x20x50

@@ -127,6 +127,19 @@ class ArrayBackend:
         keeps the decision-stable float64 path."""
         return None
 
+    def lp_solver_default(self) -> str:
+        """Preferred external-LP dispatch when
+        ``SubproblemConfig.lp_solver`` is None: "cover_packing" routes
+        shape-matched Algorithm-4 LPs through the structure-aware
+        exact-replay solver (``repro.core.cover_packing``; bit-identical
+        to the stacked simplex, which remains the fallback), "simplex"
+        forces the stacked-tableau path.  Both current backends prefer
+        "cover_packing" — the LP solve is host-side float64 control flow
+        under both — but the hint sits on the backend so a future
+        device-resident LP can claim its own dispatch without touching
+        the plan layer."""
+        return "cover_packing"
+
 
 def available_backends() -> List[str]:
     return ["numpy", "jax"]

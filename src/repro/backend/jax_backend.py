@@ -199,3 +199,9 @@ class JaxBackend(ArrayBackend):
         except Exception:
             pass
         return None
+
+    def lp_solver_default(self) -> str:
+        # the LP solve stays host-side float64 under the jax backend too
+        # (pivot control flow is branch-heavy and decision-critical);
+        # the structure-aware solver applies unchanged
+        return "cover_packing"

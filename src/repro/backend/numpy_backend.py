@@ -84,3 +84,8 @@ class NumpyBackend(ArrayBackend):
 
     def minplus_default(self) -> Optional[str]:
         return None
+
+    def lp_solver_default(self) -> str:
+        # host ledger, host LP: the exact-replay cover/packing solver is
+        # bit-identical to the stacked simplex and strictly faster
+        return "cover_packing"

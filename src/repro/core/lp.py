@@ -305,6 +305,12 @@ class TableauTemplate:
     <=-row's RHS (Algorithm 4: for a fixed (slot, pruned-machine-set) the
     workload levels change only the cover row's -W1).
 
+    Two instantiation forms exist: the single-cell ``instantiate`` /
+    ``lazy`` below (one row's RHS varies — retained for direct callers
+    and the lp test-suite's coverage) and the full-RHS ``lazy_rhs``
+    (every RHS cell patched per instance — what the solve-plan layer's
+    shared subset-template cache uses, ``cover_packing.TemplateCache``).
+
     The template is built once from a placeholder RHS carrying the SAME
     SIGN as every instance (the flip pattern, artificial structure, and
     basis are sign-determined); ``instantiate`` copies the tableau,
@@ -364,6 +370,24 @@ class TableauTemplate:
             )
         return _LazyProb(self, row, value)
 
+    def lazy_rhs(self, b: np.ndarray, c: np.ndarray) -> "_LazyProbRHS":
+        """A deferred instance patching the WHOLE RHS column and carrying
+        its own objective: the form used by the content-addressed subset
+        template cache (``cover_packing.TemplateCache``), where one
+        template — built from a placeholder RHS with the instance sign
+        pattern — serves every (slot, machine-subset) with the same
+        constraint matrix and only ``(c, b)`` vary per instance.
+        ``_solve_group`` writes the flipped cells as ``b * -1.0`` (the
+        exact op the builder's row flip applies) and re-prices phase 1
+        with the same sequential subtraction, so the stacked tableau is
+        bit-identical to ``_build_tableau_ub(c, A_ub, b)``."""
+        b = np.asarray(b, dtype=np.float64)
+        if ((b < 0) != (self.flip_sign < 0)).any():
+            raise ValueError(
+                "RHS patch changes a row's sign; rebuild, don't patch"
+            )
+        return _LazyProbRHS(self, b, np.asarray(c, dtype=np.float64))
+
 
 class _LazyProb:
     """A (template, RHS patch) pair quacking like ``_Prob`` for the
@@ -379,6 +403,44 @@ class _LazyProb:
     @property
     def c(self):
         return self.tmpl.c
+
+    @property
+    def n(self):
+        return self.tmpl.n
+
+    @property
+    def n_sx(self):
+        return self.tmpl.n_sx
+
+    @property
+    def n_art(self):
+        return self.tmpl.n_art
+
+    @property
+    def m(self):
+        return self.tmpl.m
+
+    @property
+    def T(self):
+        return self.tmpl.T0
+
+    @property
+    def basis(self):
+        return self.tmpl.basis0
+
+
+class _LazyProbRHS:
+    """A (template, full-RHS patch, objective) triple quacking like
+    ``_Prob``: the instantiation unit of the shared subset-template
+    cache (see ``TableauTemplate.lazy_rhs``).  Unlike ``_LazyProb`` it
+    owns its ``c`` — the cached template is price-free."""
+
+    __slots__ = ("tmpl", "b", "c")
+
+    def __init__(self, tmpl: TableauTemplate, b: np.ndarray, c: np.ndarray):
+        self.tmpl = tmpl
+        self.b = b
+        self.c = c
 
     @property
     def n(self):
@@ -636,6 +698,19 @@ def _solve_group(probs: List[_Prob], max_iter: int) -> List[LPResult]:
                 OBJ[b, art_start:art_start + p.n_art] = 1.0
                 for i in p.tmpl.need_art:
                     OBJ[b] -= CON[b, i]
+        elif isinstance(p, _LazyProbRHS):
+            # full-RHS patch (shared subset template): flipped rows get
+            # b * -1.0 — the very op the builder's row flip applies — and
+            # phase 1 is re-priced with the same sequential subtraction,
+            # so the stacked tableau is bit-identical to a fresh build
+            CON[b, :p.m, -1] = np.where(
+                p.tmpl.flip_sign < 0, p.b * -1.0, p.b
+            )
+            if p.n_art:
+                OBJ[b, :] = 0.0
+                OBJ[b, art_start:art_start + p.n_art] = 1.0
+                for i in p.tmpl.need_art:
+                    OBJ[b] -= CON[b, i]
 
     results: List[Optional[LPResult]] = [None] * B
     status = np.empty(B, dtype=object)
@@ -726,9 +801,12 @@ def linprog_batch_built(
     max_iter: int = 20000,
     chunk: int = 256,
 ) -> List[LPResult]:
-    """``linprog_batch`` over pre-built tableaus (``_Prob``s, typically
-    from ``TableauTemplate.instantiate`` — the solve-plan fast path that
-    skips per-candidate tableau construction).
+    """``linprog_batch`` over pre-built tableaus: ``_Prob``s, or the
+    deferred template instantiations ``_LazyProbRHS`` (the solve-plan
+    layer's simplex-fallback path — full-RHS patches of the shared
+    subset templates, see ``TableauTemplate.lazy_rhs``) and ``_LazyProb``
+    (the single-RHS-cell variant, retained for direct callers and the
+    lp test-suite's template coverage).
 
     Problems are bucketed by QUANTIZED shape (rows/cols rounded up to
     small multiples) and each bucket is solved as one padded stack — see

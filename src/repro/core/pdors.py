@@ -5,10 +5,12 @@ lambda_i > 0; commit the allocation to the cluster ledger, which updates
 rho_h^r[t] and therefore the prices p_h^r[t] = Q_h^r(rho_h^r[t]).
 
 The scheduling core under ``offer()`` is fully vectorized (dense ledger,
-cached price matrices, min-plus DP step, vectorized simplex — see
-cluster.py / pricing.py / dp.py / lp.py / subproblem.py); commits bump the
-cluster's ledger version, which is what invalidates those caches between
-admissions. ``repro.core._reference.run_pdors_reference`` is the frozen
+cached price matrices, min-plus DP step, structure-aware cover/packing
+LP solve with a vectorized-simplex fallback — see cluster.py /
+pricing.py / dp.py / cover_packing.py / lp.py / subproblem.py); commits
+bump the cluster's ledger version, which is what invalidates those
+caches between admissions (the subset-template cache is
+content-addressed and survives them — ``docs/SOLVER.md``). ``repro.core._reference.run_pdors_reference`` is the frozen
 pre-vectorization implementation producing bit-identical decisions —
 ``benchmarks/bench_scheduler.py`` measures one against the other.
 """
@@ -106,11 +108,13 @@ class PDORS:
         prewarm amortizes the per-slot price builds across every job in the
         batch, one ``SolvePlan`` per job collects its (t, v) candidates
         (plan building is rng-free), and EVERY job's external LPs are
-        stacked into a single ``linprog_batch`` call (``solve_plans``) —
-        jobs in one batch share the ledger until an admission reprices.
+        stacked into a single structure-aware solve (``solve_plans`` ->
+        ``cover_packing.solve_lp_batch``: exact Bland replay with
+        stacked-simplex fallback, see ``docs/SOLVER.md``) — jobs in one
+        batch share the ledger until an admission reprices.
         After an admission the remaining jobs' plans are stale (the
-        ledger version moved); they are rebuilt — and re-stacked — for
-        the remainder of the batch.
+        ledger version moved); each is rebuilt per job inside its own
+        offer's DP, without re-stacking across jobs.
 
         The cross-job stack is built ONCE per batch: after an admission
         invalidates the remaining pre-built plans, the rest of the batch

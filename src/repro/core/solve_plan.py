@@ -19,10 +19,16 @@ module restructures that into four phases over the WHOLE grid:
   3. **Classify + batch-solve** — the dominance / feasibility gates of
      ``solve_theta_snapshot`` are evaluated as whole level vectors
      (``_dominance_class`` branch-for-branch, vectorized); the surviving
-     external candidates are built once and dispatched to the batched
-     stacked-tableau simplex (``lp.linprog_batch``) — bit-identical pivot
-     trajectories per problem, inactive problems masked out as they
-     terminate.
+     external candidates are dispatched to the structure-aware
+     cover/packing solver (``core.cover_packing``): instances matching
+     the one-cover-row shape are solved by exact Bland replay — no
+     tableau is ever built for them — and the rest go to the batched
+     stacked-tableau simplex (``lp.linprog_batch``) via the shared
+     subset-template cache (one template per demand signature serves
+     every job, slot, and machine subset).  Either path produces
+     bit-identical pivot trajectories per problem.
+     ``SubproblemConfig.lp_solver`` (default: the backend's
+     ``lp_solver_default`` hint) forces one path for parity testing.
   4. **Resolve** — walk the grid in the reference's evaluation order
      (t ascending, v ascending) consuming the rng exactly as the
      per-(t, v) loop would: dominated levels burn their (S, 2M) block,
@@ -51,8 +57,14 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from .cluster import Cluster
+from .cover_packing import (
+    CoverPackingLP,
+    SubsetTemplate,
+    solve_lp_batch,
+    subset_template_cache,
+)
 from .job import Allocation, JobSpec
-from .lp import LPResult, TableauTemplate, linprog_batch_built
+from .lp import LPResult
 from .pricing import PriceTable
 from .rounding import g_delta_cover, g_delta_packing
 from .subproblem import (
@@ -64,23 +76,45 @@ from .subproblem import (
     SubproblemConfig,
     ThetaResult,
     _alloc_cost,
-    _build_external_rows,
     _burn_rounding_block,
-    _headroom_all,
+    _external_rows_A,
+    _external_rows_b,
+    _headroom_from_aux,
     _packing_w2,
     _prune_fill,
     _prune_keys,
     _repair,
 )
 
-# per-(t, v) resolution actions
-_A_NONE = 0       # no feasible candidate: theta = None
-_A_INT = 1        # internal only; reference bails pre-rounding (no rng)
+
+def _resolve_lp_solver(cfg: SubproblemConfig, cluster: Cluster) -> str:
+    """The external-LP dispatch for one plan: ``cfg.lp_solver`` if set,
+    else the backend's ``ArrayBackend.lp_solver_default`` hint.  Unknown
+    names fail loudly — a typo in a config whose purpose is forcing the
+    parity oracle must not silently run the fast path instead."""
+    solver = cfg.lp_solver or cluster.backend.lp_solver_default()
+    if solver not in ("cover_packing", "simplex"):
+        raise ValueError(
+            f"unknown lp_solver {solver!r}; expected 'cover_packing' "
+            "or 'simplex'"
+        )
+    return solver
+
+def _ext_subset(job: JobSpec, wd_act: np.ndarray, sd_act: np.ndarray,
+                M: int) -> tuple:
+    """(A, cover_row, n_cap) builder for a subset-template cache miss."""
+    A, n_cap = _external_rows_A(job, wd_act, sd_act, M)
+    return A, n_cap + 1, n_cap
+
+
+# per-(t, v) resolution actions for entries that must stay in the
+# ORDERED resolve walk; rng-free order-free entries (no candidate, or an
+# uncontested internal-only result) bypass _Pending via SolvePlan.trivial
 _A_INT_BURN = 2   # internal wins by dominance; burn the rounding block
 _A_LP = 3         # external LP candidate pending in the batch
 
 
-@dataclass
+@dataclass(slots=True)
 class _Pending:
     t: int
     v: int                               # workload level (units)
@@ -114,9 +148,31 @@ def infeasible_levels(job: JobSpec, quanta: int, unit: float) -> frozenset:
 class SolvePlan:
     """One job's collected, fused, batch-solvable theta grid.
 
-    Build is rng-free; ``solve`` runs the LP batch (also rng-free — or the
-    caller stacks several plans via ``solve_plans``); ``resolve_into``
-    consumes the rng in reference order and fills a theta memo."""
+    Lifecycle contract (what each phase may and may not touch):
+
+    * **Build** (``__init__`` / ``_collect``) is rng-free and
+      ledger-read-only: it snapshots prices/free capacities for every
+      slot in ``[t_lo, t_hi]``, classifies all (slot, level) candidates,
+      and materializes the surviving external LPs as tableau-free
+      ``CoverPackingLP`` instances via the shared subset-template cache.
+      The plan records ``cluster.version``; any later ledger mutation
+      makes it stale (``fresh()`` -> False) and it must be rebuilt, never
+      partially reused.
+    * **Solve** (``solve`` / ``solve_plans``) is also rng-free: the LP
+      batch goes through the structure-aware dispatch
+      (``cover_packing.solve_lp_batch`` — exact Bland replay with
+      stacked-simplex fallback; ``cfg.lp_solver`` forces a path).
+      ``solve_plans`` stacks several plans' instances into one call (the
+      cross-job batched-offer path).
+    * **Resolve** (``resolve_into``) is the ONLY rng consumer: it walks
+      the grid in the reference's (t asc, v asc) order, burning/drawing
+      exactly the blocks the lazy per-(t, v) loop would (see the
+      compat-burn contract on ``SubproblemConfig.rng_mode``), then runs
+      the rng-free rounding/repair finish in one stacked pass.
+
+    Decisions are bit-identical to the lazy loop in both rng modes
+    (``tests/test_solve_plan.py``) and independent of the LP dispatch
+    choice (``tests/test_cover_packing.py``)."""
 
     def __init__(
         self,
@@ -140,6 +196,12 @@ class SolvePlan:
         self.version = cluster.version   # staleness guard (see ``fresh``)
         self.snaps: Dict[int, PriceSnapshot] = {}
         self.pending: List[_Pending] = []
+        # (t, v) -> ThetaResult|None for grid entries whose resolution
+        # neither consumes rng nor depends on order (no candidate, or an
+        # uncontested internal-only result): resolve_into setdefaults
+        # them into the memo wholesale instead of walking ~Q*T pending
+        # objects
+        self.trivial: Dict[Tuple[int, int], Optional[ThetaResult]] = {}
         self.lp_built: List = []         # pre-built tableaus (lp._Prob)
         self.lp_results: Optional[List[LPResult]] = None
         self._collect(prices, skip or set())
@@ -204,14 +266,24 @@ class SolvePlan:
         pairs = [(int(w_need[i]), int(s_need[i]))
                  for i in range(Q) if int_ok[i]]
 
+        # shared subset-template cache: the constraint matrix A depends
+        # only on (M, demand signature, gamma, batch cap) — see
+        # cover_packing.TemplateCache — so the per-(slot, subset) work
+        # left below is the b/c vectors and the W2 scalar
+        cache = subset_template_cache()
+        act0 = self.snaps[ts[0]].act
+        wd_act, sd_act = wdem[act0], sdem[act0]
+        dem_sig = (len(act0), wd_act.tobytes(), sd_act.tobytes(),
+                   float(job.gamma), float(job.batch_size))
+
         for t in ts:
             snap = self.snaps[t]
             todo = [i for i in range(Q) if (t, i + 1) not in skip]
             if not todo:
                 continue
-            # per-(slot, pruned-subset) LP template: the constraint rows
-            # and every RHS entry except the cover row are shared by all
-            # workload levels of one machine subset
+            # per-(slot, pruned-subset) LP pieces: prices (c), free
+            # capacities (b), W2 — everything the shared template can't
+            # carry — shared by all workload levels of one machine subset
             templates: Dict[Tuple[int, int], tuple] = {}
             # batch the internal case across every pending level (the
             # (K, H, P) comparison of precompute_internal)
@@ -262,46 +334,72 @@ class SolvePlan:
                 has_int = internal[i] is not None
                 code = int(dom_code[i])
                 if has_int and code != _DOM_SOLVE:
-                    self.pending.append(_Pending(
-                        t, v,
-                        _A_INT_BURN if code == _DOM_SKIP_BURN else _A_INT,
-                        internal[i], burn_M=int(Ms[i]),
-                    ))
+                    if code == _DOM_SKIP_BURN:
+                        # burns consume rng: must stay in the ordered walk
+                        self.pending.append(_Pending(
+                            t, v, _A_INT_BURN, internal[i],
+                            burn_M=int(Ms[i]),
+                        ))
+                    else:
+                        # rng-free and order-free: straight to the memo
+                        self.trivial[(t, v)] = internal[i]
                     continue
                 # external path (internal missing, or dominance failed):
                 # a candidate exists iff the reference's pre-LP gates pass
                 if hard_inf[i] or prune_dead[i]:
-                    self.pending.append(_Pending(
-                        t, v, _A_INT if has_int else _A_NONE, internal[i],
-                    ))
+                    self.trivial[(t, v)] = internal[i] if has_int else None
                     continue
                 key = (int(i_w[i]), int(j_s[i]))
                 tmpl = templates.get(key)
                 if tmpl is None:
                     machines = stats_by_key[key][0]
+                    M = len(machines)
                     c = np.concatenate(
                         [snap.wprice[machines], snap.sprice[machines]]
                     )
+                    sub = cache.get(
+                        dem_sig + (M,),
+                        lambda: SubsetTemplate(
+                            *_ext_subset(job, wd_act, sd_act, M)
+                        ),
+                    )
                     # W1=1.0 placeholder: b[cover] = -1.0 carries the sign
                     # of every instance's -W1 (W1 > 0 for all v >= 1)
-                    A, b_base, n_cap = _build_external_rows(
-                        job, snap, machines, 1.0
+                    b_base = _external_rows_b(
+                        job, snap, machines, 1.0, sub.n_cap
                     )
-                    tmpl = (TableauTemplate(c, A, b_base), machines, A,
-                            b_base, n_cap + 1,
-                            _packing_w2(job, snap, machines))
+                    # a tolerance-committed ledger can leave a free cell
+                    # epsilon-negative: then the instances do NOT have
+                    # the one-negative-row shape (the dense builder adds
+                    # a second artificial) — such subsets bypass both
+                    # the replay and the shared template and are solved
+                    # by the general simplex from fresh full builds
+                    shape_ok = not bool(
+                        (np.delete(b_base, sub.n_cap + 1) < 0).any()
+                    )
+                    tmpl = (sub, machines, b_base, sub.n_cap + 1, c,
+                            _packing_w2(job, snap, machines), shape_ok)
                     templates[key] = tmpl
-                template, machines, A, b_base, cover_row, w2 = tmpl
+                sub, machines, b_base, cover_row, c, w2, shape_ok = tmpl
                 W1f = float(W1[i])
                 b = b_base.copy()
                 b[cover_row] = -W1f
                 cand = ExternalCandidate(W1=W1f, machines=machines,
-                                         c=template.c, A_ub=A, b_ub=b)
+                                         c=c, A_ub=sub.A, b_ub=b)
                 self.pending.append(_Pending(
                     t, v, _A_LP, internal[i], cand=cand,
                     lp_index=len(self.lp_built), w2=w2,
                 ))
-                self.lp_built.append(template.lazy(cover_row, -W1f))
+                # b_base is the SHARED per-subset RHS (the replay never
+                # reads its cover cell — cover_value carries the level),
+                # so the whole subset's instances alias two arrays and
+                # the solver's init can broadcast instead of copying
+                ok = shape_ok and -W1f < 0
+                self.lp_built.append(CoverPackingLP(
+                    c=c, A_flip=sub.A_flip, b_base=b_base, cover=cover_row,
+                    cover_value=-W1f, template=sub if ok else None,
+                    shape_ok=ok,
+                ))
 
     # ------------------------------------------------------------------
     def install_lp_results(self, results: List[LPResult]) -> None:
@@ -309,9 +407,16 @@ class SolvePlan:
         self.lp_results = results
 
     def solve(self) -> "SolvePlan":
-        """Run this plan's own LP batch (the single-job path)."""
+        """Run this plan's own LP batch (the single-job path) through the
+        structure-aware dispatch: exact-replay cover/packing solve with
+        stacked-simplex fallback, or pure simplex when
+        ``cfg.lp_solver="simplex"`` — bit-identical results either way
+        (``tests/test_cover_packing.py``)."""
         if self.lp_results is None:
-            self.install_lp_results(linprog_batch_built(self.lp_built))
+            force = _resolve_lp_solver(self.cfg, self.cluster) == "simplex"
+            self.install_lp_results(
+                solve_lp_batch(self.lp_built, force_simplex=force)
+            )
         return self
 
     # ------------------------------------------------------------------
@@ -346,17 +451,17 @@ class SolvePlan:
             xp = np.maximum(res.x, 0.0) * self._g_delta(p)
             lo = np.floor(xp)
             prep[p.lp_index] = (lo, xp - lo)
+        # rng-free grid entries first (order-free; setdefault preserves
+        # the "lazily pre-solved outside the plan" precedence)
+        for key, val in self.trivial.items():
+            memo.setdefault(key, val)
         work: List[Tuple[_Pending, np.ndarray]] = []
         keys: List[Tuple[int, int]] = []
         for p in self.pending:
             key = (p.t, p.v)
             if key in memo:        # lazily pre-solved outside the plan
                 continue
-            if p.action == _A_NONE:
-                memo[key] = None
-            elif p.action == _A_INT:
-                memo[key] = p.internal
-            elif p.action == _A_INT_BURN:
+            if p.action == _A_INT_BURN:
                 _burn_rounding_block(cfg, rng_for(p.t, p.v), p.burn_M)
                 memo[key] = p.internal
             else:
@@ -385,6 +490,21 @@ class SolvePlan:
         return g_delta_packing(cfg.delta, max(p.w2, 1e-6),
                                num_packing_rows=len(p.cand.b_ub) - 1)
 
+    def _aux_stacked(self, kind: str, F_rows: np.ndarray) -> tuple:
+        """Stacked-slot head-room operands: the demand-derived components
+        of ``PriceSnapshot.head_aux`` (shared — demands don't vary by
+        slot) combined with per-candidate SLOT free matrices ``F_rows``
+        ((C, H, R)).  Each candidate's cells are the exact per-slot aux
+        values (same gather + the same ``+ 1e-9`` shift), so
+        ``_headroom_from_aux`` over the stack is bit-identical to
+        per-slot ``_headroom_all`` calls."""
+        snap0 = next(iter(self.snaps.values()))
+        pos, dpos, _fp, wdp, sdp, wdn, sdn, _fn = snap0.head_aux(kind)
+        nonpos = ~pos
+        fpos = F_rows[:, :, pos] + 1e-9
+        fnon = (F_rows[:, :, nonpos] + 1e-9) if nonpos.any() else None
+        return (pos, dpos, fpos, wdp, sdp, wdn, sdn, fnon)
+
     def _finish_batched(
         self,
         work: List[Tuple[_Pending, np.ndarray]],
@@ -392,12 +512,17 @@ class SolvePlan:
         memo: Dict[Tuple[int, int], Optional[ThetaResult]],
     ) -> None:
         """The rng-free tail of ``_external_finish`` over every candidate
-        at once: rounding feasibility evaluated per machine-subset-size
-        group (the (C, S, M, P) broadcast is elementwise the structured
-        scalar evaluation), head-room rows computed per (slot, kind)
-        group, repair/ratio via the closed-form prefix fills. Results are
-        bit-identical to the per-candidate finish — covered by the
-        plan-vs-loop parity tests."""
+        in ONE stacked pass: rounding feasibility for all candidates of
+        all subset sizes and slots together (machine-padded — padding is
+        neutral because the padded packing cells evaluate to 0 and
+        ``pack_v`` is clamped at 0 anyway, and padded worker cells add
+        exact zeros to the integer-exact sums), head-room rows from
+        per-candidate stacked slot operands (``_aux_stacked``), and the
+        cover/ratio prefix fills over the whole candidate set with
+        per-candidate price orders gathered row-wise.  Only candidates
+        whose clip phase actually fires (rare) fall back to the scalar
+        ``_repair``.  Results are bit-identical to the per-candidate
+        finish — covered by the plan-vs-loop parity tests."""
         if not work:
             return
         cfg, job = self.cfg, self.job
@@ -408,147 +533,203 @@ class SolvePlan:
         act = snap0.act
         wdem_act = snap0.wdem[act]
         sdem_act = snap0.sdem[act]
-
-        # ---- rounding selection, grouped by subset size M --------------
         n_work = len(work)
-        rx = [None] * n_work
-        rfeas = np.zeros(n_work, dtype=bool)
-        attempts = np.full(n_work, S, dtype=np.int64)
-        groups: Dict[int, List[int]] = {}
+
+        # ---- stacked per-slot operands (one gather per unique slot) ----
+        uniq_ts = sorted({p.t for p, _ in work})
+        tpos = {t: u for u, t in enumerate(uniq_ts)}
+        F = np.stack([self.snaps[t].free_mat for t in uniq_ts])
+        WO = np.stack([self.snaps[t].wprice_order for t in uniq_ts])
+        WOD = np.stack([self.snaps[t].wprice_order_desc for t in uniq_ts])
+        SO = np.stack([self.snaps[t].sprice_order for t in uniq_ts])
+        si = np.array([tpos[p.t] for p, _ in work], dtype=np.int64)
+
+        # ---- rounding selection, fused across subset sizes -------------
+        # every round's feasibility is independent of the other rounds,
+        # so the evaluation is windowed: a short first window settles the
+        # common case (round 1-2 feasible) at a fraction of the (C, S,
+        # M, P) tensor, and only the stragglers pay the full-S pass
+        # (recomputing a round gives the identical floats)
+        Ms = np.array([len(p.cand.machines) for p, _ in work])
+        M_max = int(Ms.max())
+        P = wdem_act.size
+        Fa = np.zeros((n_work, M_max, P))
+        W1s = np.empty(n_work)
         for i, (p, _) in enumerate(work):
-            groups.setdefault(len(p.cand.machines), []).append(i)
-        for M, idxs in groups.items():
-            Xs = np.stack([work[i][1] for i in idxs])        # (C, S, 2M)
-            W = Xs[:, :, :M].astype(np.float64)
-            Sx = Xs[:, :, M:].astype(np.float64)
-            wsum = W.sum(axis=2)                             # integer-exact
-            W1s = np.array([work[i][0].cand.W1 for i in idxs])
+            Fa[i, :Ms[i]] = self.snaps[p.t].free_act[p.cand.machines]
+            W1s[i] = p.cand.W1
+
+        def _eval_rounds(sel: np.ndarray, r0: int, r1: int):
+            """(feas, cov_v, pack_v) for candidates ``sel`` over rounds
+            [r0, r1) — cell-for-cell the structured scalar evaluation
+            (padded machine slots contribute rel = 0, absorbed exactly
+            by the >= 0 clamp, and exact zeros to the integer sums).
+            Rounds are mutually independent, so any window partition
+            evaluates to the same floats as one full pass."""
+            nR = r1 - r0
+            Wp = np.zeros((sel.size, nR, M_max))
+            Sp = np.zeros((sel.size, nR, M_max))
+            for a, i in enumerate(sel):
+                _, X = work[int(i)]
+                M = Ms[i]
+                Wp[a, :, :M] = X[r0:r1, :M]
+                Sp[a, :, :M] = X[r0:r1, M:]
+            wsum = Wp.sum(axis=2)                        # integer-exact
+            Wf = W1s[sel]
             cov_v = np.where(
-                (W1s > 0)[:, None],
+                (Wf > 0)[:, None],
                 np.maximum(
-                    (W1s[:, None] - wsum)
-                    / np.maximum(W1s, 1e-12)[:, None], 0.0,
+                    (Wf[:, None] - wsum)
+                    / np.maximum(Wf, 1e-12)[:, None], 0.0,
                 ),
                 0.0,
             )
-            free = np.stack([
-                self.snaps[work[i][0].t].free_act[work[i][0].cand.machines]
-                for i in idxs
-            ])                                               # (C, M, P)
-            cap_lhs = (W[:, :, :, None] * wdem_act
-                       + Sx[:, :, :, None] * sdem_act)       # (C, S, M, P)
-            b = free[:, None, :, :]
+            cap_lhs = (Wp[:, :, :, None] * wdem_act
+                       + Sp[:, :, :, None] * sdem_act)   # (C, r, M, P)
+            b = Fa[sel][:, None, :, :]
             with np.errstate(divide="ignore", invalid="ignore"):
                 rel = np.where(
                     b > 0,
                     (cap_lhs - b) / np.maximum(b, 1e-12),
                     np.where(cap_lhs > 0, np.inf, 0.0),
                 )
-            pack_v = rel.reshape(len(idxs), S, -1).max(axis=2)
+            pack_v = rel.reshape(sel.size, nR, -1).max(axis=2)
             relw = (wsum - batch_cap) / max(batch_cap, 1e-12)
             pack_v = np.maximum(pack_v, relw)
             pack_v = np.maximum(pack_v, 0.0)
             feas = (cov_v <= cfg.cover_slack + 1e-9) & (pack_v <= 1e-9)
-            anyfeas = feas.any(axis=1)
-            first = feas.argmax(axis=1)
-            for c, i in enumerate(idxs):
-                if anyfeas[c]:
-                    j = int(first[c])                        # first feasible
-                    rx[i], rfeas[i], attempts[i] = Xs[c, j], True, j + 1
-                else:
-                    order = np.lexsort((cov_v[c], pack_v[c]))
-                    rx[i] = Xs[c, int(order[0])]
+            return feas, cov_v, pack_v
+
+        R0 = min(4, S)
+        all_c = np.arange(n_work)
+        feas0, cov0, pack0 = _eval_rounds(all_c, 0, R0)
+        rfeas = feas0.any(axis=1)
+        pick = np.zeros(n_work, dtype=np.int64)
+        pick[rfeas] = feas0[rfeas].argmax(axis=1)  # global first feasible
+        rest = np.flatnonzero(~rfeas)
+        if rest.size and S > R0:
+            # evaluate ONLY the remaining rounds and splice the windows —
+            # no round is ever evaluated twice
+            feas1, cov1, pack1 = _eval_rounds(rest, R0, S)
+            got = feas1.any(axis=1)
+            first = R0 + feas1.argmax(axis=1)
+            # infeasible rows replay np.lexsort((cov, pack))[0] exactly:
+            # smallest pack_v, ties by smallest cov_v, ties by index
+            cov_v = np.concatenate([cov0[rest], cov1], axis=1)
+            pack_v = np.concatenate([pack0[rest], pack1], axis=1)
+            pmin = pack_v.min(axis=1, keepdims=True)
+            t1 = pack_v == pmin
+            covm = np.where(t1, cov_v, np.inf)
+            t2 = t1 & (covm == covm.min(axis=1, keepdims=True))
+            pick[rest] = np.where(got, first, t2.argmax(axis=1))
+            rfeas[rest] = got
+        elif rest.size:
+            # S <= R0: the first window was already the whole range
+            cov_v, pack_v = cov0[rest], pack0[rest]
+            pmin = pack_v.min(axis=1, keepdims=True)
+            t1 = pack_v == pmin
+            covm = np.where(t1, cov_v, np.inf)
+            t2 = t1 & (covm == covm.min(axis=1, keepdims=True))
+            pick[rest] = t2.argmax(axis=1)
+        attempts = np.where(rfeas, pick + 1, S).astype(np.int64)
 
         # ---- scatter picks onto the full machine axis ------------------
         Wall = np.zeros((n_work, H), dtype=np.int64)
         Sall = np.zeros((n_work, H), dtype=np.int64)
         ws: List[Optional[np.ndarray]] = [None] * n_work
         ss: List[Optional[np.ndarray]] = [None] * n_work
-        for i, (p, _) in enumerate(work):
+        for i, (p, X) in enumerate(work):
             machines = p.cand.machines
-            M = len(machines)
-            Wall[i, machines] = rx[i][:M]
-            Sall[i, machines] = rx[i][M:]
+            M = Ms[i]
+            j = int(pick[i])
+            Wall[i, machines] = X[j, :M]
+            Sall[i, machines] = X[j, M:]
             ws[i], ss[i] = Wall[i], Sall[i]
 
-        # ---- repair (infeasible roundings), batched per slot -----------
-        # the whole greedy repair collapses to: clip detection (batched),
-        # head-room rows (batched), and the closed-form prefix fill
-        # applied to every candidate of a slot at once; only candidates
-        # whose clip phase actually fires (rare) fall back to the scalar
-        # ``_repair``, which re-derives everything after clipping
-        need_repair = [i for i in range(n_work) if not rfeas[i]]
-        by_t: Dict[int, List[int]] = {}
-        for i in need_repair:
-            by_t.setdefault(work[i][0].t, []).append(i)
-        for t, ti in by_t.items():
-            snap = self.snaps[t]
-            Wst = np.stack([ws[i] for i in ti])              # (C, H) copies
-            Sst = np.stack([ss[i] for i in ti])
-            need_mat = (Wst[:, :, None] * snap.wdem
-                        + Sst[:, :, None] * snap.sdem)       # (C, H, R)
-            okrow = (need_mat <= snap.free_mat + 1e-9).all(axis=2)
+        # ---- repair (infeasible roundings), one stacked pass -----------
+        # the whole greedy repair collapses to: clip detection (batched
+        # over every candidate of every slot at once), head-room rows
+        # (stacked slot operands), and the closed-form prefix fill; only
+        # candidates whose clip phase actually fires (rare) fall back to
+        # the scalar ``_repair``, which re-derives everything after
+        # clipping
+        need_repair = np.flatnonzero(~rfeas)
+        if need_repair.size:
+            ti = need_repair
+            Wst = Wall[ti].copy()                        # (C, H)
+            Sst = Sall[ti].copy()
+            Fr = F[si[ti]]                               # (C, H, R)
+            need_mat = (Wst[:, :, None] * snap0.wdem
+                        + Sst[:, :, None] * snap0.sdem)  # (C, H, R)
+            okrow = (need_mat <= Fr + 1e-9).all(axis=2)
             clip = (((Wst > 0) | (Sst > 0)) & ~okrow).any(axis=1)
             for c in np.flatnonzero(clip):
-                i = ti[c]
+                i = int(ti[c])
+                snap = self.snaps[work[i][0].t]
                 w, s = _repair(job, snap, ws[i], ss[i], work[i][0].cand.W1)
                 ws[i], ss[i] = w, (s if w is not None else None)
             clean = np.flatnonzero(~clip)
-            if not clean.size:
-                continue
-            idx = [ti[c] for c in clean]
-            Wc, Sc = Wst[clean], Sst[clean]
-            W1c = np.array([work[i][0].cand.W1 for i in idx])
-            wsum = Wc.sum(axis=1)
-            need = np.ceil(W1c - wsum).astype(np.int64)
-            budget = (job.batch_size - wsum).astype(np.int64)
-            heads = _headroom_all(snap, "w", Wc, Sc)
-            X = np.minimum(need, budget)
-            hv = np.minimum(heads[:, snap.wprice_order],
-                            np.maximum(X, 0)[:, None])
-            prefix = np.cumsum(hv, axis=1) - hv
-            takes = np.clip(X[:, None] - prefix, 0, hv)
-            takes[need <= 0] = 0                  # cover already satisfied
-            Wc[:, snap.wprice_order] += takes
-            fail = (need > 0) & (need - takes.sum(axis=1) > 0)
-            for c, i in enumerate(idx):
-                if fail[c]:
-                    ws[i] = ss[i] = None
-                    continue
-                w = Wc[c]
-                ws[i], ss[i] = w, Sc[c]
-                if w.sum() > job.batch_size:      # rounding overshoot: trim
-                    excess = int(w.sum() - job.batch_size)
-                    wv = w[snap.wprice_order_desc]
-                    pre = np.cumsum(wv) - wv
-                    tk = np.clip(excess - pre, 0, wv)
-                    w[snap.wprice_order_desc] -= tk
+            if clean.size:
+                idx = ti[clean]
+                Wc, Sc = Wst[clean], Sst[clean]
+                W1c = W1s[idx]
+                wsum1 = Wc.sum(axis=1)
+                need = np.ceil(W1c - wsum1).astype(np.int64)
+                budget = (job.batch_size - wsum1).astype(np.int64)
+                heads = _headroom_from_aux(
+                    self._aux_stacked("w", F[si[idx]]), "w", Wc, Sc
+                )
+                X = np.minimum(need, budget)
+                order = WO[si[idx]]                      # (C, H) per-slot
+                hv = np.minimum(np.take_along_axis(heads, order, 1),
+                                np.maximum(X, 0)[:, None])
+                prefix = np.cumsum(hv, axis=1) - hv
+                takes = np.clip(X[:, None] - prefix, 0, hv)
+                takes[need <= 0] = 0              # cover already satisfied
+                ci = np.arange(clean.size)
+                Wc[ci[:, None], order] += takes
+                fail = (need > 0) & (need - takes.sum(axis=1) > 0)
+                for c, i in enumerate(idx):
+                    i = int(i)
+                    if fail[c]:
+                        ws[i] = ss[i] = None
+                        continue
+                    w = Wc[c]
+                    ws[i], ss[i] = w, Sc[c]
+                    if w.sum() > job.batch_size:  # rounding overshoot: trim
+                        excess = int(w.sum() - job.batch_size)
+                        od = WOD[si[i]]
+                        wv = w[od]
+                        pre = np.cumsum(wv) - wv
+                        tk = np.clip(excess - pre, 0, wv)
+                        w[od] -= tk
 
-        # ---- ratio guarantee (all surviving candidates), batched -------
-        alive = [i for i in range(n_work) if ws[i] is not None]
-        by_t = {}
-        for i in alive:
-            by_t.setdefault(work[i][0].t, []).append(i)
-        for t, ti in by_t.items():
-            snap = self.snaps[t]
-            Wst = np.stack([ws[i] for i in ti])
-            Sst = np.stack([ss[i] for i in ti])
+        # ---- ratio guarantee (all surviving candidates), one pass ------
+        alive = np.array([i for i in range(n_work) if ws[i] is not None],
+                         dtype=np.int64)
+        if alive.size:
+            Wst = np.stack([ws[i] for i in alive])
+            Sst = np.stack([ss[i] for i in alive])
             need = (np.maximum(
                 1, np.ceil(Wst.sum(axis=1) / job.gamma)
             ).astype(np.int64) - Sst.sum(axis=1))
             todo = np.flatnonzero(need > 0)
-            if not todo.size:
-                continue
-            Wc, Sc, needc = Wst[todo], Sst[todo], need[todo]
-            heads = _headroom_all(snap, "s", Wc, Sc)
-            hv = np.minimum(heads[:, snap.sprice_order], needc[:, None])
-            prefix = np.cumsum(hv, axis=1) - hv
-            takes = np.clip(needc[:, None] - prefix, 0, hv)
-            Sc[:, snap.sprice_order] += takes
-            fail = needc - takes.sum(axis=1) > 0
-            for c, j in enumerate(todo):
-                i = ti[j]
-                ss[i] = None if fail[c] else Sc[c]
+            if todo.size:
+                idx = alive[todo]
+                Wc, Sc, needc = Wst[todo], Sst[todo], need[todo]
+                heads = _headroom_from_aux(
+                    self._aux_stacked("s", F[si[idx]]), "s", Wc, Sc
+                )
+                order = SO[si[idx]]
+                hv = np.minimum(np.take_along_axis(heads, order, 1),
+                                needc[:, None])
+                prefix = np.cumsum(hv, axis=1) - hv
+                takes = np.clip(needc[:, None] - prefix, 0, hv)
+                ci = np.arange(todo.size)
+                Sc[ci[:, None], order] += takes
+                fail = needc - takes.sum(axis=1) > 0
+                for c, i in enumerate(idx):
+                    ss[int(i)] = None if fail[c] else Sc[c]
 
         # ---- assemble results ------------------------------------------
         for i, (p, _) in enumerate(work):
@@ -573,20 +754,28 @@ class SolvePlan:
 
 
 def solve_plans(plans: List[SolvePlan]) -> None:
-    """Stack EVERY plan's LP candidates into one ``linprog_batch`` call —
+    """Stack EVERY plan's LP candidates into one structure-aware solve —
     the cross-job half of the batched offer path (same-slot jobs share
-    the ledger until an admission reprices, so their tableaus coexist in
-    one batch). Plans that already have results are skipped."""
+    the ledger until an admission reprices, so their instances coexist
+    in one batch; the exact-replay groups and the simplex-fallback
+    stacks both span jobs). Plans that already have results are skipped;
+    plans forcing ``lp_solver="simplex"`` batch separately so the parity
+    mode never mixes into the fast path."""
     todo = [p for p in plans if p.lp_results is None]
-    probs: List = []
-    offsets = []
+    by_mode: Dict[bool, List[SolvePlan]] = {}
     for p in todo:
-        offsets.append(len(probs))
-        probs.extend(p.lp_built)
-    if not probs:
-        for p in todo:
-            p.install_lp_results([])
-        return
-    results = linprog_batch_built(probs)
-    for p, off in zip(todo, offsets):
-        p.install_lp_results(results[off:off + len(p.lp_built)])
+        force = _resolve_lp_solver(p.cfg, p.cluster) == "simplex"
+        by_mode.setdefault(force, []).append(p)
+    for force, group in by_mode.items():
+        probs: List = []
+        offsets = []
+        for p in group:
+            offsets.append(len(probs))
+            probs.extend(p.lp_built)
+        if not probs:
+            for p in group:
+                p.install_lp_results([])
+            continue
+        results = solve_lp_batch(probs, force_simplex=force)
+        for p, off in zip(group, offsets):
+            p.install_lp_results(results[off:off + len(p.lp_built)])

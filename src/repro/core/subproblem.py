@@ -89,7 +89,26 @@ class SubproblemConfig:
     #               units), so results are independent of evaluation order
     #               and no burn accounting is needed (the mode the
     #               event-driven simulator uses; see repro/sim).
+    # THE COMPAT-BURN CONTRACT (load-bearing for every "compat" caller):
+    # the reference consumes exactly ONE (rounding_rounds, 2M) uniform
+    # block per external solve that reaches rounding, and nothing on any
+    # earlier-returning path; every optimization that skips or reorders
+    # solves must burn/draw precisely those blocks in the reference's
+    # (t asc, v asc) evaluation order (_burn_rounding_block,
+    # SolvePlan.resolve_into). If the rounding scheme itself ever changes
+    # shape — different draw count, different block layout — this burn
+    # accounting must be re-derived from the new scheme, or "compat"
+    # retired; there is no partial credit, one desynced draw shifts every
+    # later decision.
     rng_mode: str = "compat"
+    # external-LP dispatch: None resolves via the cluster backend's
+    # ArrayBackend.lp_solver_default() — "cover_packing" routes plan-time
+    # shape-matched instances through the structure-aware exact-replay
+    # solver (core.cover_packing; bit-identical results, simplex fallback
+    # for trajectories it cannot certify), "simplex" forces every
+    # instance through the stacked-tableau lp.linprog_batch path
+    # (parity tests / debugging).
+    lp_solver: Optional[str] = None
     # plan-then-solve pipeline (core.solve_plan): collect every pending
     # (t, v) candidate up front, build the per-machine decision vectors
     # for all slots in one fused (W, H) bundle pass, and dispatch the
@@ -428,12 +447,22 @@ def _prune_fill(snap: PriceSnapshot, key: tuple,
         i_w, j_s = key
         wp, cw, sp, cs = snap._prune_aux
         cap = cfg.max_lp_machines
-        sel = {int(h) for h in wp[:i_w + 1]}
-        for i in range(sp.size):
-            sel.add(int(sp[i]))
-            if i >= j_s or len(sel) >= cap:
-                break
-        machines = np.array(sorted(sel), dtype=int)
+        machines = None
+        if sp.size:
+            # fast path: when the whole union stays strictly under the
+            # machine cap, the incremental loop's cap-break can never
+            # fire and the result is exactly the sorted union of the two
+            # prefixes (at == cap the loop may stop one element short)
+            uni = np.union1d(wp[:i_w + 1], sp[:j_s + 1])
+            if uni.size < cap:
+                machines = uni.astype(int)
+        if machines is None:
+            sel = {int(h) for h in wp[:i_w + 1]}
+            for i in range(sp.size):
+                sel.add(int(sp[i]))
+                if i >= j_s or len(sel) >= cap:
+                    break
+            machines = np.array(sorted(sel), dtype=int)
         hit = (
             machines,
             float(snap.max_w[machines].sum()) if machines.size else 0.0,
@@ -443,41 +472,69 @@ def _prune_fill(snap: PriceSnapshot, key: tuple,
     return hit
 
 
-def _build_external_rows(
-    job: JobSpec, snap: PriceSnapshot, machines: np.ndarray, W1: float,
-) -> Tuple[np.ndarray, np.ndarray, int]:
-    """Constraint rows of program (23): per-(machine, resource) capacity
-    packing rows (24), worker cap (25), workload cover (26), ratio (Eq. 2).
+def _external_rows_A(
+    job: JobSpec, wdem_act: np.ndarray, sdem_act: np.ndarray, M: int,
+) -> Tuple[np.ndarray, int]:
+    """The constraint MATRIX of program (23) for an M-machine subset:
+    per-(machine, resource) capacity packing rows (24), worker cap (25),
+    workload cover (26), ratio (Eq. 2).  Returns (A_ub, n_capacity_rows).
 
-    Returns (A_ub, b_ub, n_capacity_rows). Rows are machine-major with
-    resources inner — the frozen reference's ordering — written with
-    strided assignments instead of per-row np.zeros."""
-    M = len(machines)
+    Note what is absent: which machines are in the subset.  A is a pure
+    function of the job's demand vectors, gamma, the batch cap, and M —
+    machines enter the LP only through prices (``c``) and free
+    capacities (``b``) — which is what lets the shared subset-template
+    cache (``cover_packing.TemplateCache``) serve every (job, slot,
+    subset) with one build.  Rows are machine-major with resources
+    inner, the frozen reference's ordering, written with strided
+    assignments instead of per-row np.zeros."""
     n = 2 * M
-    act = snap.act                     # demand-positive resource columns
-    nact = len(act)
+    nact = len(wdem_act)
     n_cap = M * nact
     A = np.zeros((n_cap + 3, n))
-    b = np.empty(n_cap + 3)
     # capacity block as two diagonal writes on the (M, nact, n) view:
     # cell (i*nact + j, i) = alpha[act[j]] and (i*nact + j, M+i) =
     # beta[act[j]] — the same cells the per-resource strided writes fill
     A3 = A[:n_cap].reshape(M, nact, n)
     ar = np.arange(M)
-    A3[ar, :, ar] = snap.wdem[act]
-    A3[ar, :, M + ar] = snap.sdem[act]
-    # machine-major/resource-inner RHS block in one raveled write
-    b[:n_cap] = snap.free_mat[machines][:, act].ravel()
+    A3[ar, :, ar] = wdem_act
+    A3[ar, :, M + ar] = sdem_act
     # worker cap (25)
     A[n_cap, :M] = 1.0
-    b[n_cap] = float(job.batch_size)
     # workload cover (26): -sum w <= -W1
     A[n_cap + 1, :M] = -1.0
-    b[n_cap + 1] = -W1
     # worker:PS ratio (Eq. 2, covering form): sum w - gamma sum s <= 0
     A[n_cap + 2, :M] = 1.0
     A[n_cap + 2, M:] = -job.gamma
+    return A, n_cap
+
+
+def _external_rows_b(
+    job: JobSpec, snap: PriceSnapshot, machines: np.ndarray, W1: float,
+    n_cap: int,
+) -> np.ndarray:
+    """The RHS of program (23) for one (slot, machine subset, workload
+    level): the only part of the constraint system that reads the ledger
+    (free capacities) or the level (the cover row's -W1)."""
+    b = np.empty(n_cap + 3)
+    # machine-major/resource-inner RHS block in one raveled write
+    b[:n_cap] = snap.free_mat[machines][:, snap.act].ravel()
+    b[n_cap] = float(job.batch_size)
+    b[n_cap + 1] = -W1
     b[n_cap + 2] = 0.0
+    return b
+
+
+def _build_external_rows(
+    job: JobSpec, snap: PriceSnapshot, machines: np.ndarray, W1: float,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Constraint rows of program (23) — the (A_ub, b_ub, n_capacity_rows)
+    composition of ``_external_rows_A`` + ``_external_rows_b`` (cells and
+    ordering bit-identical to the pre-split builder)."""
+    act = snap.act                     # demand-positive resource columns
+    A, n_cap = _external_rows_A(
+        job, snap.wdem[act], snap.sdem[act], len(machines)
+    )
+    b = _external_rows_b(job, snap, machines, W1, n_cap)
     return A, b, n_cap
 
 
@@ -646,14 +703,20 @@ def _packing_w2(job: JobSpec, snap: PriceSnapshot,
     with np.errstate(invalid="ignore"):
         colmin = np.where(fr > 0, fr, np.inf).min(axis=0) if fr.size \
             else np.full(fr.shape[1], np.inf)
-    w2 = float(job.batch_size)
-    for k in range(len(snap.resources)):
-        if not np.isfinite(colmin[k]):
-            continue
-        for d in (snap.wdem[k], snap.sdem[k]):
-            if d > 0:
-                w2 = min(w2, float(colmin[k]) / d)
-    return w2
+    # min over the same candidate set as the scalar (resource, demand)
+    # double loop — min is exact, so the value is bit-identical; the
+    # demand operands are snapshot constants, hoisted per snapshot
+    aux = getattr(snap, "_w2_aux", None)
+    if aux is None:
+        dems = np.stack([snap.wdem, snap.sdem], axis=1)  # (R, 2)
+        aux = snap._w2_aux = (dems, dems > 0)
+    dems, dpos = aux
+    ok = dpos & np.isfinite(colmin)[:, None]
+    if ok.any():
+        with np.errstate(divide="ignore"):
+            cand = np.where(ok, colmin[:, None] / dems, np.inf)
+        return float(min(float(job.batch_size), float(cand.min())))
+    return float(job.batch_size)
 
 
 def _external_finish(
@@ -820,7 +883,18 @@ def _headroom_all(snap: PriceSnapshot, kind: str, w: np.ndarray,
     early return), the closed form is the same floor of the same float
     ratios, and the one-ulp fix-up loops apply the same single-multiply
     predicate — so every entry is bit-identical to the lazy scalar call."""
-    pos, dpos, fpos, wdp, sdp, wdn, sdn, fnon = snap.head_aux(kind)
+    return _headroom_from_aux(snap.head_aux(kind), kind, w, s)
+
+
+def _headroom_from_aux(aux: tuple, kind: str, w: np.ndarray,
+                       s: np.ndarray) -> np.ndarray:
+    """Head-room core over explicit aux operands.  ``fpos``/``fnon`` may
+    carry a leading candidate axis ((C, H, P) instead of (H, P)) — the
+    plan layer's fused finish stacks per-candidate SLOT free matrices
+    this way, so candidates of different slots batch in one call.  Every
+    op is elementwise over the broadcast cells, so each (candidate,
+    machine) entry is bit-identical to the per-slot call."""
+    pos, dpos, fpos, wdp, sdp, wdn, sdn, fnon = aux
     P = dpos.shape[1]
     if P == 0:
         return np.full(np.shape(w), np.iinfo(np.int64).max // 2,

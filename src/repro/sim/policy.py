@@ -290,7 +290,9 @@ class PDORSPolicy(SchedulingPolicy):
         """Batched arrival offers: one price-tensor prewarm, one
         ``SolvePlan`` per job (rng-free; per-job cfg — the derived-mode
         seed differs per job), and every job's external LPs stacked into
-        one ``linprog_batch`` call. An admission reprices the window's
+        one structure-aware solve (``solve_plans``: the cover/packing
+        exact-replay solver with stacked-simplex fallback — decisions
+        identical either way). An admission reprices the window's
         ledger, invalidating the remaining pre-built plans; the rest of
         the batch falls back to per-job plans built inside the DP
         (``SolvePlan.fresh`` guards against a stale plan ever being
