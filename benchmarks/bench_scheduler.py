@@ -218,11 +218,13 @@ def merge_rows(path: str, fresh: List[Dict], meta: Dict,
                key_fields=SCHED_KEY_FIELDS) -> Dict:
     """--append: replace same-key rows of an existing bench file, keep the
     rest, and add anything new. The key is ``key_fields`` + backend
-    (rows written before the backend axis existed mean numpy)."""
+    (rows written before the backend axis existed mean numpy; rows
+    written before the faults axis existed mean clean traces)."""
     def key(r):
-        return tuple(r.get(f) for f in key_fields) + (
-            r.get("backend") or "numpy",
-        )
+        return tuple(
+            bool(r.get(f)) if f == "faults" else r.get(f)
+            for f in key_fields
+        ) + (r.get("backend") or "numpy",)
 
     try:
         with open(path) as f:

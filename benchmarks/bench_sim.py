@@ -36,14 +36,17 @@ import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.core import make_cluster
+from repro.core import SubproblemConfig, make_cluster
 from repro.sim import (
+    FaultPlan,
+    ResilientPolicy,
     RollingWindow,
     SimEngine,
     TraceConfig,
     available_policies,
     calibrate_prices,
     make_policy,
+    merge_event_streams,
     stream,
 )
 
@@ -59,6 +62,18 @@ QUANTA = 12
 CALIB_JOBS = 48
 
 
+def chaos_plan(seed: int, H: int, max_slots: int) -> FaultPlan:
+    """The benchmark's fault grid: correlated rack crashes + stragglers
+    plus injected LP faults (contained by the resilient wrapper)."""
+    return FaultPlan(
+        seed=seed, until=min(max_slots, 256),
+        crash_rate=0.01, straggler_rate=0.01, downtime=(2, 8),
+        domains=[(h, h + 1) for h in range(0, H - 1, 2)],
+        domain_correlation=0.5,
+        solver_fault_rate=0.2,
+    )
+
+
 def run_point(
     H: int,
     W: int,
@@ -70,6 +85,7 @@ def run_point(
     seed: int,
     max_slots: int,
     backend: str = "numpy",
+    faults: bool = False,
 ) -> List[Dict]:
     tcfg = TraceConfig(
         preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
@@ -79,22 +95,38 @@ def run_point(
         "H": H, "W": W, "preset": preset, "num_jobs": num_jobs,
         "arrival_rate": rate, "failure_rate": failure_rate, "seed": seed,
         "quanta": QUANTA, "patience": tcfg.patience, "backend": backend,
+        "faults": faults,
     }
+    plan = chaos_plan(seed, H, max_slots) if faults else None
     rows = []
     for name in policies:
         cluster = make_cluster(H, W, backend=backend)
         window = RollingWindow(cluster)
         if name.startswith("pdors"):
             params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
-            policy = make_policy(name, price_params=params, quanta=QUANTA)
+            if plan is not None:
+                # chaos leg: the pdors family runs resilient-wrapped with
+                # the plan's injected-solver-fault hook (fresh injector
+                # per policy run), so LP faults degrade instead of crash
+                policy = ResilientPolicy(
+                    inner=name, price_params=params, quanta=QUANTA,
+                    cfg=SubproblemConfig(
+                        lp_fault_hook=plan.solver_fault_hook()),
+                )
+            else:
+                policy = make_policy(name, price_params=params,
+                                     quanta=QUANTA)
         else:
             policy = make_policy(name)
         engine = SimEngine(
             window, policy, seed=seed, max_slots=max_slots,
             patience=tcfg.patience,
         )
+        events = stream(tcfg)
+        if plan is not None:
+            events = merge_event_streams(events, plan.events(H))
         t0 = time.perf_counter()
-        report = engine.run(stream(tcfg))
+        report = engine.run(events)
         wall = time.perf_counter() - t0
         s = report.summary
         rows.append({
@@ -102,12 +134,17 @@ def run_point(
             "jobs_per_sec": num_jobs / wall if wall else float("inf"),
             "slots_run": report.slots_run, **s,
         })
+        extra = ""
+        if faults:
+            extra = (f" goodput={s['goodput_fraction']:.2f} "
+                     f"mttr={s['mttr']:.1f} "
+                     f"avail={s['machine_availability']:.3f}")
         print(
             f"  {name:>10}: {num_jobs / wall:8.1f} jobs/s "
             f"done={s['jobs_completed']}/{s['jobs_offered']} "
             f"adm={s['admission_rate']:.2f} pre={s['preemptions']} "
             f"jct p50={s['jct_p50']:.1f} p95={s['jct_p95']:.1f} "
-            f"util={s['total_utility']:.1f}",
+            f"util={s['total_utility']:.1f}" + extra,
             flush=True,
         )
     return rows
@@ -129,6 +166,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=["numpy", "jax"],
                     help="array backend for the window ledger "
                          "(see docs/ARCHITECTURE.md)")
+    ap.add_argument("--faults", action="store_true",
+                    help="chaos leg: merge a correlated machine-fault "
+                         "plan into every trace and inject LP solver "
+                         "faults (pdors runs resilient-wrapped); rows "
+                         "carry faults=true plus goodput/MTTR/"
+                         "availability columns")
     ap.add_argument("--append", action="store_true",
                     help="merge rows into an existing --out file instead "
                          "of rewriting it")
@@ -153,7 +196,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         t0 = time.time()
         all_rows.extend(
             run_point(H, W, preset, n, rate, frate, policies, args.seed,
-                      args.max_slots, backend=args.backend)
+                      args.max_slots, backend=args.backend,
+                      faults=args.faults)
         )
         print(f"# point done in {time.time() - t0:.1f}s", flush=True)
 
@@ -163,7 +207,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         doc = merge_rows(
             args.out, all_rows, meta,
             key_fields=("H", "W", "preset", "num_jobs", "arrival_rate",
-                        "failure_rate", "seed", "policy"),
+                        "failure_rate", "seed", "policy", "faults"),
         )
     else:
         doc = dict(meta, rows=all_rows)

@@ -47,7 +47,8 @@ def _points(doc: dict, policy: str) -> dict:
         key = (row["H"], row["T"], row["num_jobs"],
                row.get("workload_scale"), row.get("seed"),
                row.get("quanta") or doc.get("quanta"),
-               row.get("backend") or "numpy")
+               row.get("backend") or "numpy",
+               row.get("faults") or False)
         out[key] = (row["jobs_per_sec"], row.get("speedup_vs_reference"))
     return out
 
@@ -88,11 +89,11 @@ def main(argv=None) -> int:
         if hit is None:
             if args.allow_missing_baseline:
                 print("bench_guard: no baseline for "
-                      f"H,T,N,scale,seed,quanta,backend={key} — skipped "
+                      f"H,T,N,scale,seed,quanta,backend,faults={key} — skipped "
                       "(--allow-missing-baseline)")
             else:
                 print("bench_guard: NO baseline row for "
-                      f"H,T,N,scale,seed,quanta,backend={key} — a grid "
+                      f"H,T,N,scale,seed,quanta,backend,faults={key} — a grid "
                       "edit must re-record its baseline: FAIL")
                 failed += 1
         else:

@@ -50,7 +50,17 @@ PUBLIC_SYMBOLS = {
     ],
     "src/repro/core/solve_plan.py": ["SolvePlan", "solve_plans"],
     "src/repro/core/subproblem.py": ["SubproblemConfig", "rng_mode",
-                                     "lp_solver"],
+                                     "lp_solver", "SolverFault",
+                                     "SolverTimeout", "lp_fault_hook"],
+    "src/repro/core/cluster.py": ["set_capacity_mask",
+                                  "machine_overcommitted"],
+    "src/repro/sim/faults.py": ["FaultPlan", "FaultIncident",
+                                "SolverFaultInjector",
+                                "merge_event_streams"],
+    "src/repro/sim/engine.py": ["LedgerInvariantError", "SimKilled",
+                                "checkpoint_every", "refail_rate"],
+    "src/repro/sim/policy.py": ["ResilientPolicy"],
+    "src/repro/sim/metrics.py": ["samples_trained"],
     "src/repro/backend/__init__.py": ["lp_solver_default"],
     "benchmarks/bench_scheduler.py": ["repeat-best-of"],
 }

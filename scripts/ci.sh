@@ -14,7 +14,9 @@
 #
 # The sim smoke replays a short google-trace stream (completions, failures/
 # preemption, departures) through all four policies via the unified
-# registry (python -m benchmarks.bench_sim for the full sweep). The docs
+# registry (python -m benchmarks.bench_sim for the full sweep); the chaos
+# smoke leg reruns it under the fault-domain harness (machine crashes,
+# stragglers, injected LP faults). The docs
 # check fails if docs/*.md reference modules that no longer exist. The jax
 # leg reruns the backend parity suite with REPRO_BACKEND=jax as the
 # process-wide default (skipped cleanly when jax is not importable — e.g.
@@ -43,6 +45,12 @@ fi
 python -m benchmarks.bench_scheduler --smoke --repeat-best-of 2 \
   --out BENCH_scheduler_smoke.json
 python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
+# chaos smoke: the same trace under correlated machine crashes,
+# stragglers, and injected LP faults (pdors resilient-wrapped) — every
+# policy must finish with the ledger invariant intact (check_ledger is
+# always on in the engine; a violation raises LedgerInvariantError)
+python -m benchmarks.bench_sim --smoke --faults \
+  --out BENCH_sim_chaos_smoke.json
 python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json \
   --max-drop 0.30 --min-speedup 2.5 --min-speedup-scale 0.3 \
   --min-speedup-point 25x20x50

@@ -77,6 +77,14 @@ class Cluster:
         for h, m in enumerate(self.machines):
             for r, c in m.capacity.items():
                 self.capacity_matrix[h, self.res_index[r]] = c
+        # fault-domain capacity mask (repro.sim.faults): nominal capacities
+        # are kept in _base_capacity; a mask entry < 1 models a degraded
+        # machine (0 = crashed) and scales every derived tensor — free,
+        # prices, fits — through capacity_matrix. None means no mask has
+        # ever been applied and capacity_matrix IS _base_capacity (same
+        # object), so clean runs keep the exact pre-mask bit patterns.
+        self._base_capacity = self.capacity_matrix
+        self._capacity_mask: Optional[np.ndarray] = None
         # rho_h^r[t]: the dense allocation ledger (device-resident on jax)
         self._used = self.backend.zeros((self.horizon, H, R))
         # bumped on every commit/release; lets PriceTable & snapshots cache
@@ -165,6 +173,60 @@ class Cluster:
     def total_capacity(self) -> float:
         """sum_h sum_r C_h^r (used by mu in pricing, Eq. 14)."""
         return float(sum(sum(m.capacity.values()) for m in self.machines))
+
+    # ------------------------------------------------- fault-domain mask
+    @property
+    def capacity_mask(self) -> np.ndarray:
+        """Effective per-machine capacity factors (H,): 1 everywhere when
+        no fault is active, 0 for a crashed machine, in (0, 1) for a
+        straggler."""
+        if self._capacity_mask is None:
+            return np.ones(self.num_machines)
+        return self._capacity_mask.copy()
+
+    def set_capacity_mask(self, mask) -> None:
+        """Install per-machine capacity factors (repro.sim fault domains).
+
+        ``capacity_matrix`` becomes ``_base_capacity * mask[:, None]``, so
+        every derived tensor — free, prices (a zeroed row prices at the U^r
+        ceiling), ``fits`` — sees the degraded machine without any backend
+        change. ``version`` bumps on every effective change so free/price
+        caches and ``SolvePlan.fresh()`` invalidate. Restoring the all-ones
+        mask reinstates the *original* capacity array object: clean-trace
+        bit patterns are untouched, and a faulted cluster recovers
+        bit-identically."""
+        mask = np.asarray(mask, dtype=float)
+        if mask.shape != (self.num_machines,):
+            raise ValueError(
+                f"capacity mask shape {mask.shape} != ({self.num_machines},)"
+            )
+        if np.any(mask < 0.0) or np.any(mask > 1.0):
+            raise ValueError("capacity mask factors must lie in [0, 1]")
+        clean = bool(np.all(mask == 1.0))
+        if self._capacity_mask is None and clean:
+            return  # no-op: never masked, nothing to restore
+        if (self._capacity_mask is not None
+                and np.array_equal(mask, self._capacity_mask)):
+            return  # unchanged: don't invalidate caches for nothing
+        self.version += 1
+        if clean:
+            self._capacity_mask = None
+            self.capacity_matrix = self._base_capacity
+        else:
+            self._capacity_mask = mask.copy()
+            self.capacity_matrix = self._base_capacity * mask[:, None]
+
+    def machine_overcommitted(self, h: int, tol: float = 1e-6) -> bool:
+        """True if any in-horizon ledger row on machine ``h`` exceeds its
+        current (possibly masked) capacity — the eviction-cascade driver
+        after a MACHINE_DOWN shrinks ``capacity_matrix`` under committed
+        rows. Cold path: one host read of the machine's (T, R) ledger
+        column per call."""
+        if self.backend.is_device:
+            used = self.backend.to_host(self._used)[:, h, :]
+        else:
+            used = self._used[:, h, :]
+        return bool(np.any(used > self.capacity_matrix[h][None, :] + tol))
 
     # ------------------------------------------------------------------
     def demand_vectors(self, job: JobSpec) -> Tuple[np.ndarray, np.ndarray]:

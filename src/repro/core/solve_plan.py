@@ -413,6 +413,8 @@ class SolvePlan:
         ``cfg.lp_solver="simplex"`` — bit-identical results either way
         (``tests/test_cover_packing.py``)."""
         if self.lp_results is None:
+            if self.cfg.lp_fault_hook is not None and self.lp_built:
+                self.cfg.lp_fault_hook("lp_batch")
             force = _resolve_lp_solver(self.cfg, self.cluster) == "simplex"
             self.install_lp_results(
                 solve_lp_batch(self.lp_built, force_simplex=force)
@@ -762,6 +764,12 @@ def solve_plans(plans: List[SolvePlan]) -> None:
     plans forcing ``lp_solver="simplex"`` batch separately so the parity
     mode never mixes into the fast path."""
     todo = [p for p in plans if p.lp_results is None]
+    for p in todo:
+        # chaos-harness dispatch hook: fire per plan that actually built
+        # LPs, BEFORE any solve, so a raised SolverFault leaves every
+        # plan unresolved (no partial batch to reconcile)
+        if p.cfg.lp_fault_hook is not None and p.lp_built:
+            p.cfg.lp_fault_hook("lp_batch")
     by_mode: Dict[bool, List[SolvePlan]] = {}
     for p in todo:
         force = _resolve_lp_solver(p.cfg, p.cluster) == "simplex"

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -55,6 +55,20 @@ from .rounding import (
     round_cover_packing_structured,
     round_until_feasible,
 )
+
+
+class SolverFault(RuntimeError):
+    """The external-LP solve path failed (or was made to fail).
+
+    Raised by ``SubproblemConfig.lp_fault_hook`` at an LP dispatch site to
+    model a crashed/misbehaving solver. Lives in core (not ``repro.sim``)
+    so the dispatch sites can raise it without a core -> sim import;
+    ``repro.sim.faults`` injects it and ``ResilientPolicy`` contains it
+    with a retry-then-fallback ladder."""
+
+
+class SolverTimeout(SolverFault):
+    """Deadline-shaped solver fault (the LP ran out of its pivot budget)."""
 
 
 @dataclass
@@ -117,6 +131,12 @@ class SubproblemConfig:
     # per-(t, v) loop in both rng modes; False forces the loop (parity
     # tests / debugging).
     use_plan: bool = True
+    # chaos-harness fault injection (repro.sim.faults): when set, the hook
+    # is invoked with a context string ("lp" lazy per-candidate, "lp_batch"
+    # plan-time batched dispatch) immediately before each external-LP
+    # solve, and may raise SolverFault/SolverTimeout to simulate a solver
+    # failure. None (the default) costs nothing and changes nothing.
+    lp_fault_hook: Optional[Callable[[str], None]] = None
 
 
 class PriceSnapshot:
@@ -809,6 +829,8 @@ def solve_theta_external(
     cand = _external_candidate(job, snap, v, cfg)
     if cand is None:
         return None
+    if cfg.lp_fault_hook is not None:
+        cfg.lp_fault_hook("lp")
     res = linprog(cand.c, A_ub=cand.A_ub, b_ub=cand.b_ub)
     return _external_finish(job, snap, cand, res, cfg, rng)
 

@@ -10,14 +10,27 @@ substrate that closes that gap.
 
 Event model
 -----------
-A heap-ordered clock (``events.EventQueue``) drives five event kinds:
-ARRIVAL, COMPLETION, DEPARTURE, FAILURE, PREEMPT. Within one slot the
-processing order is fixed (failures -> arrival batch -> exogenous
-departures -> slot tick -> progress accounting), and ties break by
-insertion order, so a trace replays to the identical event log on every
-run. Same-slot arrivals are
+A heap-ordered clock (``events.EventQueue``) drives seven event kinds:
+ARRIVAL, COMPLETION, DEPARTURE, FAILURE, PREEMPT, MACHINE_DOWN,
+MACHINE_UP. Within one slot the processing order is fixed (machine
+recoveries -> machine crashes/degradations -> job failures -> arrival
+batch -> exogenous departures -> slot tick -> progress accounting), and
+ties break by insertion order, so a trace replays to the identical event
+log on every run. Same-slot arrivals are
 offered to the policy as ONE batch, which lets the PD-ORS adapter amortize
 its price-tensor construction across the burst (``PriceTable.prewarm``).
+
+Fault model and recovery
+------------------------
+``faults.FaultPlan`` generates machine crash/straggler incidents (and an
+LP-dispatch solver-fault hook) under derived per-(machine, incident)
+seeds; the engine folds active incidents into the cluster's capacity mask
+and evicts displaced jobs through the PREEMPT path. ``ResilientPolicy``
+contains solver faults with a retry-then-greedy-fallback ladder so an
+offer is never dropped. The engine checkpoints its state every K slots
+and journals stream pulls; ``SimEngine.recover()`` resumes a killed run
+bit-identically. A ledger violation raises ``LedgerInvariantError`` with
+the partial report and journal tail. See docs/ARCHITECTURE.md.
 
 Rolling horizon vs the paper's fixed T
 --------------------------------------
@@ -61,28 +74,49 @@ Public API
     available_policies                    — unified policy registry
     TraceConfig, stream, sample_jobs,
     calibrate_prices                      — trace replay
+    FaultPlan, FaultIncident,
+    SolverFaultInjector,
+    merge_event_streams                   — chaos harness
+    ResilientPolicy                       — degraded-mode wrapper
     MetricsCollector                      — metrics pipeline
-    SimEngine, simulate, SimReport        — the engine
+    SimEngine, simulate, SimReport,
+    SimKilled, LedgerInvariantError       — the engine
 """
 from .events import Event, EventKind, EventQueue
 from .window import RollingWindow
 from .policy import (
     Decision,
+    ResilientPolicy,
     SchedulingPolicy,
     available_policies,
     make_policy,
     register_policy,
 )
 from .traces import TraceConfig, calibrate_prices, sample_jobs, stream
+from .faults import (
+    FaultIncident,
+    FaultPlan,
+    SolverFaultInjector,
+    merge_event_streams,
+)
 from .metrics import MetricsCollector
-from .engine import SimEngine, SimReport, simulate
+from .engine import (
+    LedgerInvariantError,
+    SimEngine,
+    SimKilled,
+    SimReport,
+    simulate,
+)
 
 __all__ = [
     "Event", "EventKind", "EventQueue",
     "RollingWindow",
-    "Decision", "SchedulingPolicy",
+    "Decision", "SchedulingPolicy", "ResilientPolicy",
     "register_policy", "make_policy", "available_policies",
     "TraceConfig", "stream", "sample_jobs", "calibrate_prices",
+    "FaultPlan", "FaultIncident", "SolverFaultInjector",
+    "merge_event_streams",
     "MetricsCollector",
     "SimEngine", "SimReport", "simulate",
+    "SimKilled", "LedgerInvariantError",
 ]

@@ -2,14 +2,19 @@
 
 One slot of simulated time is processed as:
 
-  1. advance the rolling window to the slot (elapsed ledger rows roll off);
-  2. drain the event queue for the slot in deterministic order — failures
-     (running job -> PREEMPT: release held rows, notify the policy, sit the
-     job out for the failed slot — a uniform one-slot minimum penalty
-     across policy shapes — and for arrival-driven policies requeue the
-     residual workload as a fresh arrival next slot), then the arrival
-     batch, then exogenous departures (after the batch, so a same-slot
-     DEPARTURE + ARRIVAL pair departs instead of being dropped);
+  1. take a crash-consistency checkpoint when due (``checkpoint_every``),
+     then advance the rolling window to the slot (elapsed rows roll off);
+  2. drain the event queue for the slot in deterministic order — machine
+     recoveries, then machine crashes/degradations (the capacity mask
+     shrinks and jobs holding rows the machine can no longer carry are
+     evicted through the PREEMPT path, cascading re-offers), then job
+     failures (running job -> PREEMPT: release held rows, notify the
+     policy, sit the job out for the failed slot — a uniform one-slot
+     minimum penalty across policy shapes — and for arrival-driven
+     policies requeue the residual workload as a fresh arrival next slot),
+     then the arrival batch, then exogenous departures (after the batch,
+     so a same-slot DEPARTURE + ARRIVAL pair departs instead of being
+     dropped);
   3. offer the slot's arrival *batch* to the policy in one call (the
      batched-offer path: one price-tensor prewarm amortizes across every
      same-slot job);
@@ -24,18 +29,42 @@ One slot of simulated time is processed as:
 The engine owns ALL accounting (progress, completions, utility, metrics);
 policies only decide allocations. That is what makes the per-policy
 numbers in ``BENCH_sim.json`` apples-to-apples.
+
+Crash-consistent recovery
+-------------------------
+With ``checkpoint_every=K`` the engine snapshots its entire mutable state
+(window + ledger, policy, metrics, job states, event queue, fault mask,
+in-flight stream head) every K slots, and journals every event pulled
+from the trace stream since the snapshot. ``recover()`` restores the
+snapshot and replays — from the journal alone, or from the original
+stream (skipping the consumed prefix) — so a run killed mid-trace
+(``SimKilled``, a crashed process, a chaos test's ``kill_at``) resumes
+and finishes with the *bit-identical* summary of an uninterrupted run:
+every random decision is drawn from derived seeds keyed on (job, attempt,
+slot, …), never from shared stream position, so replayed slots redo
+exactly what the lost slots did.
+
+A ledger-invariant violation raises ``LedgerInvariantError`` carrying the
+partial ``SimReport`` and the journal tail — a violated run is debuggable
+instead of vaporized.
 """
 from __future__ import annotations
 
+import copy
+import itertools
 import math
-from dataclasses import dataclass, replace
-from typing import Dict, Iterable, Iterator, List, Optional
+from dataclasses import dataclass, field, replace
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from ..core.job import Allocation, JobSpec
 from .events import Event, EventKind, EventQueue
 from .metrics import MetricsCollector
-from .policy import SchedulingPolicy
+from .policy import SchedulingPolicy, derived_rng
 from .window import RollingWindow
+
+_TAG_REFAIL = 13  # derived-seed tag for per-(job, attempt) failure redraws
 
 
 @dataclass
@@ -61,6 +90,42 @@ class SimReport:
     slots_run: int
 
 
+class SimKilled(RuntimeError):
+    """The engine was killed mid-trace (``kill_at`` — the chaos harness's
+    stand-in for a crashed scheduler process). State up to the last
+    checkpoint survives; ``SimEngine.recover()`` resumes from it."""
+
+
+class LedgerInvariantError(AssertionError):
+    """The allocation ledger exceeded capacity at some slot.
+
+    Subclasses ``AssertionError`` for continuity with the bare assert it
+    replaced, but carries the post-mortem: ``slot``, ``policy``, the
+    partial ``report`` (metrics up to the violated slot), and
+    ``journal_tail`` — the events pulled from the trace stream since the
+    last checkpoint — so a violated run is debuggable, not vaporized."""
+
+    def __init__(self, slot: int, policy: str, report: SimReport,
+                 journal_tail: Tuple[Event, ...]):
+        super().__init__(
+            f"ledger oversubscribed at slot {slot} (policy {policy})"
+        )
+        self.slot = slot
+        self.policy = policy
+        self.report = report
+        self.journal_tail = journal_tail
+
+
+@dataclass
+class Checkpoint:
+    """One crash-consistency snapshot: the deep-copied engine state plus
+    the stream position (events consumed) it corresponds to."""
+
+    slot: int
+    consumed: int
+    state: tuple = field(repr=False)
+
+
 class SimEngine:
     def __init__(
         self,
@@ -70,6 +135,10 @@ class SimEngine:
         max_slots: int = 100_000,
         patience: Optional[int] = None,
         check_ledger: bool = True,
+        checkpoint_every: Optional[int] = None,
+        kill_at: Optional[int] = None,
+        refail_rate: float = 0.0,
+        refail_delay: Tuple[int, int] = (1, 8),
     ):
         self.window = window
         self.policy = policy
@@ -77,7 +146,20 @@ class SimEngine:
         self.max_slots = max_slots
         self.patience = patience
         self.check_ledger = check_ledger
-        self.metrics = MetricsCollector(window.cluster.resources)
+        # crash-consistency: snapshot every K slots (None = never) and
+        # journal stream pulls between snapshots; kill_at injects a
+        # SimKilled at the named slot (chaos tests / recovery drills)
+        self.checkpoint_every = checkpoint_every
+        self.kill_at = kill_at
+        # requeued residual attempts draw a fresh failure with this
+        # probability (per (job_id, attempt) derived seeds) — fixes the
+        # failure-immunity of survivors; default 0 keeps recorded golden
+        # traces reproducible
+        self.refail_rate = float(refail_rate)
+        self.refail_delay = refail_delay
+        self.metrics = MetricsCollector(
+            window.cluster.resources, window.cluster.num_machines
+        )
         self.states: Dict[int, JobState] = {}
         # incremental active-set index: the slot loop touches only jobs
         # that are live (active) or awaiting a requeue, so 1e4+-job
@@ -86,6 +168,15 @@ class SimEngine:
         self._active: set = set()
         self._awaiting: set = set()
         self.queue = EventQueue()
+        # machine -> {incident id -> capacity factor} for active incidents
+        self._incidents: Dict[int, Dict[int, float]] = {}
+        # crash-consistency state
+        self.journal: List[Event] = []
+        self._checkpoint: Optional[Checkpoint] = None
+        self._consumed = 0
+        self._stream: Optional[Iterator[Event]] = None
+        self._pending: Optional[Event] = None
+        self._t = 0
         policy.bind(window, seed)
 
     # -- active-set index maintenance ----------------------------------
@@ -123,6 +214,11 @@ class SimEngine:
         js = self.states.get(job_id)
         if js is None or js.finished or not js.active:
             return  # not running (never served / already done): fault is moot
+        if js.down_at == t:
+            # already knocked out this slot (duplicate FAILURE, or a
+            # machine-crash eviction followed by the job's own failure):
+            # one slot is lost once, not per fault
+            return
         oc = self.metrics.outcome(job_id, js.orig_arrival)
         released = self.window.release_from(job_id, t)
         if released == 0 and js.progress <= 0:
@@ -147,6 +243,60 @@ class SimEngine:
         # slot-driven: the job stays active; the policy dropped any held
         # allocation in on_preempt and will re-place it next tick
 
+    # -- machine fault domains -----------------------------------------
+    def _apply_capacity_mask(self) -> None:
+        """Fold the active incidents into the cluster's capacity mask
+        (overlapping incidents on one machine compose by min)."""
+        cl = self.window.cluster
+        mask = np.ones(cl.num_machines)
+        for h, incs in self._incidents.items():
+            if incs:
+                mask[h] = min(incs.values())
+        cl.set_capacity_mask(mask)
+
+    def _machine_down(self, ev: Event, t: int) -> None:
+        """MACHINE_DOWN: shrink the machine's capacity share to
+        ``ev.factor`` and evict committed holders the shrunk machine can
+        no longer carry — each eviction runs the ordinary PREEMPT path
+        (release, notify, requeue residual), so a crash is indirectly a
+        cascade of re-offers. Eviction order is ascending job id: smallest
+        ids first, deterministic across runs and replays."""
+        h = ev.machine
+        self._incidents.setdefault(h, {})[ev.incident] = float(ev.factor)
+        self._apply_capacity_mask()
+        kind = "crash" if ev.factor <= 0.0 else "straggler"
+        self.metrics.record_incident(h, ev.incident, t, float(ev.factor),
+                                     kind)
+        self.metrics.count("machine_down")
+        cl = self.window.cluster
+        evicted = 0
+        while cl.machine_overcommitted(h):
+            holders = self.window.jobs_on_machine(h)
+            if not holders:
+                break  # sub-tolerance residue, nothing left to evict
+            victim = holders[0]
+            self._fail(victim, t)
+            if victim in self.window.commitments:
+                # the PREEMPT path declined (job unknown/finished): force
+                # the rows off the dead machine so the loop progresses
+                self.window.release_from(victim, t)
+            evicted += 1
+        self.metrics.record_cascade(evicted)
+
+    def _machine_up(self, ev: Event, t: int) -> None:
+        """MACHINE_UP: retire the incident; capacity restores when the
+        machine's last overlapping incident clears (bit-identically to
+        the pre-fault capacity matrix — see Cluster.set_capacity_mask)."""
+        h = ev.machine
+        incs = self._incidents.get(h)
+        if incs is not None:
+            incs.pop(ev.incident, None)
+            if not incs:
+                del self._incidents[h]
+        self._apply_capacity_mask()
+        self.metrics.record_recovery(h, ev.incident, t)
+        self.metrics.count("machine_up")
+
     def _depart(self, job_id: int, t: int) -> None:
         js = self.states[job_id]
         self._set_active(js, False)
@@ -167,6 +317,19 @@ class SimEngine:
                 js.attempt += 1
                 js.progress = 0.0
                 self._set_awaiting(js, False)
+                if self.refail_rate > 0.0:
+                    # failure-immunity fix: survivors are mortal again —
+                    # each requeued attempt redraws its own failure from a
+                    # per-(job, attempt) derived seed, so the draw depends
+                    # on nothing but identity (replay/recovery safe)
+                    rng = derived_rng(self.seed, _TAG_REFAIL,
+                                      job.job_id, js.attempt)
+                    if rng.random() < self.refail_rate:
+                        lo, hi = self.refail_delay
+                        self.queue.push(Event(
+                            time=t + int(rng.integers(lo, hi + 1)),
+                            kind=EventKind.FAILURE, job_id=job.job_id,
+                        ))
             else:
                 js = self.states[job.job_id] = JobState(
                     job=job, orig_arrival=job.arrival
@@ -223,7 +386,9 @@ class SimEngine:
             oc = self.metrics.outcome(job_id, js.orig_arrival)
             if oc.first_service is None:
                 oc.first_service = t
-            js.progress += alloc.samples_trained(js.job)
+            earned = alloc.samples_trained(js.job)
+            js.progress += earned
+            oc.samples_trained += earned  # goodput/wasted-work basis
             if js.progress >= js.job.total_workload() - 1e-6:
                 self._set_active(js, False)
                 js.finished = True
@@ -246,24 +411,92 @@ class SimEngine:
             if oc.first_service is None and t - js.orig_arrival >= self.patience:
                 self._depart(job_id, t)
 
+    # -- crash consistency ---------------------------------------------
+    def _pull(self) -> Optional[Event]:
+        """Pull the next trace event, journaling it for recovery."""
+        ev = next(self._stream, None)
+        if ev is not None:
+            self._consumed += 1
+            self.journal.append(ev)
+        return ev
+
+    def _take_checkpoint(self, t: int) -> None:
+        """Snapshot every piece of mutable engine state in ONE deepcopy
+        (shared references — policy.view is the window, price tables hold
+        the cluster — stay shared inside the snapshot) and reset the
+        journal: recovery = snapshot + journal replay."""
+        state = copy.deepcopy((
+            self.window, self.policy, self.metrics, self.states,
+            self.queue, self._active, self._awaiting, self._incidents,
+            self._pending,
+        ))
+        self._checkpoint = Checkpoint(slot=t, consumed=self._consumed,
+                                      state=state)
+        self.journal = []
+
+    def recover(self, events: Optional[Iterable[Event]] = None) -> SimReport:
+        """Resume a killed run from the last checkpoint, bit-identically.
+
+        Restores the snapshot (the checkpoint itself stays pristine, so
+        recovery can be repeated) and re-runs the slot loop. With
+        ``events`` — the original trace, regenerated — the consumed prefix
+        is skipped and the run continues to the end; with ``events=None``
+        the journaled tail alone is replayed (enough to reach the kill
+        point when the stream died with the process). Because every
+        random decision derives from identity-keyed seeds, the recovered
+        run's summary equals the uninterrupted run's bit-for-bit."""
+        ck = self._checkpoint
+        if ck is None:
+            raise RuntimeError(
+                "no checkpoint to recover from (run with checkpoint_every)"
+            )
+        tail = list(self.journal)
+        (self.window, self.policy, self.metrics, self.states,
+         self.queue, self._active, self._awaiting, self._incidents,
+         self._pending) = copy.deepcopy(ck.state)
+        self.journal = []
+        self._consumed = ck.consumed
+        self._t = ck.slot
+        self.kill_at = None  # the kill already happened; don't re-die
+        if events is None:
+            self._stream = iter(tail)
+        else:
+            self._stream = itertools.islice(iter(events), ck.consumed, None)
+        return self._loop()
+
     # ------------------------------------------------------------------
     def run(self, events: Iterable[Event]) -> SimReport:
-        stream: Iterator[Event] = iter(events)
-        pending = next(stream, None)
-        t = 0
-        while t < self.max_slots:
-            while pending is not None and pending.time <= t:
-                self.queue.push(pending)
-                pending = next(stream, None)
+        self._stream = iter(events)
+        self._pending = self._pull()
+        self._t = 0
+        return self._loop()
+
+    def _loop(self) -> SimReport:
+        while self._t < self.max_slots:
+            t = self._t
+            if (self.checkpoint_every is not None
+                    and t % self.checkpoint_every == 0
+                    and (self._checkpoint is None
+                         or self._checkpoint.slot != t)):
+                self._take_checkpoint(t)
+            if self.kill_at is not None and t == self.kill_at:
+                raise SimKilled(f"engine killed at slot {t} (kill_at)")
+            while self._pending is not None and self._pending.time <= t:
+                self.queue.push(self._pending)
+                self._pending = self._pull()
             busy = bool(self._active) or bool(self._awaiting)
-            if not busy and not len(self.queue) and pending is None:
+            if not busy and not len(self.queue) and self._pending is None:
                 break
             self.window.advance_to(t)
 
             batch: List[Event] = []
             departures: List[int] = []
             for ev in self.queue.pop_until(t):
-                if ev.kind == EventKind.FAILURE:
+                if ev.kind == EventKind.MACHINE_UP:
+                    self._machine_up(ev, t)
+                elif ev.kind == EventKind.MACHINE_DOWN:
+                    self._machine_down(ev, t)
+                elif ev.kind == EventKind.FAILURE:
                     self._fail(ev.subject(), t)
                 elif ev.kind == EventKind.ARRIVAL:
                     batch.append(ev)
@@ -310,9 +543,15 @@ class SimEngine:
                         self.window,
                     )
             if self.check_ledger and self.window.oversubscribed():
-                raise AssertionError(
-                    f"ledger oversubscribed at slot {t} "
-                    f"(policy {self.policy.name})"
+                raise LedgerInvariantError(
+                    slot=t, policy=self.policy.name,
+                    report=SimReport(
+                        summary=self.metrics.summary(),
+                        metrics=self.metrics,
+                        states=self.states,
+                        slots_run=t,
+                    ),
+                    journal_tail=tuple(self.journal[-64:]),
                 )
             self._account_progress(t)
             self._check_patience(t)
@@ -322,15 +561,23 @@ class SimEngine:
                 if self.metrics.outcome(
                     jid, self.states[jid].orig_arrival).first_service is None
             )
+            degraded = tuple(sorted(
+                h for h, incs in self._incidents.items() if incs
+            ))
             self.metrics.record_slot(
-                t, self.window.utilization_now(), active, queued
+                t, self.window.utilization_now(), active, queued,
+                degraded=degraded,
             )
-            t += 1
+            self._t = t + 1
+        summary = self.metrics.summary()
+        health = getattr(self.policy, "health_stats", None)
+        if callable(health):
+            summary["policy_health"] = health()
         return SimReport(
-            summary=self.metrics.summary(),
+            summary=summary,
             metrics=self.metrics,
             states=self.states,
-            slots_run=t,
+            slots_run=self._t,
         )
 
 
@@ -341,8 +588,12 @@ def simulate(
     seed: int = 0,
     max_slots: int = 100_000,
     patience: Optional[int] = None,
+    **engine_kwargs,
 ) -> SimReport:
-    """One-call convenience wrapper."""
+    """One-call convenience wrapper (extra kwargs — ``check_ledger``,
+    ``checkpoint_every``, ``refail_rate``, … — pass through to
+    ``SimEngine``)."""
     return SimEngine(
-        window, policy, seed=seed, max_slots=max_slots, patience=patience
+        window, policy, seed=seed, max_slots=max_slots, patience=patience,
+        **engine_kwargs,
     ).run(events)

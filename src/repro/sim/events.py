@@ -1,38 +1,49 @@
 """Discrete-event vocabulary and the heap-ordered clock for ``repro.sim``.
 
-Five event kinds drive the simulation:
+Seven event kinds drive the simulation:
 
-  ARRIVAL    — a job (or same-slot batch of jobs) enters the system and is
-               offered to the policy. Queue input (traces yield these).
-  FAILURE    — an exogenous fault kills a running job's allocation. Queue
-               input (the engine materializes it from an ARRIVAL's
-               ``fail_at``; tests may push it directly).
-  DEPARTURE  — a job abandons before ever being served. Usually emitted by
-               the engine when patience expires; also accepted as queue
-               input for traces that model jobs leaving on their own clock.
-  COMPLETION — a job finished its workload V_i = E_i K_i. Engine-emitted
-               notification only (progress accounting crosses V_i) — never
-               valid queue input.
-  PREEMPT    — the engine's response to a FAILURE of a running job: its
-               commitments are released, it sits out the failed slot, and
-               admission-driven policies get the residual re-offered.
-               Engine-emitted notification only.
+  ARRIVAL      — a job (or same-slot batch of jobs) enters the system and
+                 is offered to the policy. Queue input (traces yield
+                 these).
+  FAILURE      — an exogenous fault kills a running job's allocation.
+                 Queue input (the engine materializes it from an ARRIVAL's
+                 ``fail_at``; tests may push it directly).
+  DEPARTURE    — a job abandons before ever being served. Usually emitted
+                 by the engine when patience expires; also accepted as
+                 queue input for traces that model jobs leaving on their
+                 own clock.
+  MACHINE_DOWN — machine ``machine`` crashes (``factor`` 0) or degrades to
+                 a straggler (``factor`` in (0, 1)); ``incident`` pairs it
+                 with its MACHINE_UP. Queue input (``repro.sim.faults``
+                 generates them).
+  MACHINE_UP   — the incident's repair completes; the machine's capacity
+                 share returns. Queue input.
+  COMPLETION   — a job finished its workload V_i = E_i K_i. Engine-emitted
+                 notification only (progress accounting crosses V_i) —
+                 never valid queue input.
+  PREEMPT      — the engine's response to a FAILURE of a running job (or a
+                 machine-crash eviction): its commitments are released, it
+                 sits out the failed slot, and admission-driven policies
+                 get the residual re-offered. Engine-emitted notification
+                 only.
 
-The engine raises on queued kinds outside {ARRIVAL, FAILURE, DEPARTURE}.
+The engine raises on queued kinds outside {ARRIVAL, FAILURE, DEPARTURE,
+MACHINE_DOWN, MACHINE_UP}.
 
 Determinism contract: the queue orders events by (time, kind-priority,
 sequence number), with ties within a kind popping in insertion order.
-Within one slot the engine processes failures first, then the arrival
-batch, then exogenous departures (after the batch, so a same-slot
-DEPARTURE + ARRIVAL pair departs instead of dropping against a job state
-that does not exist yet), then the slot tick. Nothing about processing
-depends on heap internals, so a replayed trace produces the identical
-event log on every run.
+Within one slot the engine processes machine recoveries first (so a
+same-slot repair + crash of one machine nets to the crash), then machine
+crashes/degradations (evictions cascade through PREEMPT), then job
+failures, then the arrival batch, then exogenous departures (after the
+batch, so a same-slot DEPARTURE + ARRIVAL pair departs instead of
+dropping against a job state that does not exist yet), then the slot
+tick. Nothing about processing depends on heap internals, so a replayed
+trace produces the identical event log on every run.
 """
 from __future__ import annotations
 
 import heapq
-import itertools
 from dataclasses import dataclass
 from enum import IntEnum
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -44,12 +55,14 @@ class EventKind(IntEnum):
     """Event kinds; the integer value is the same-slot processing priority
     (lower pops first)."""
 
-    FAILURE = 0
-    PREEMPT = 1
-    DEPARTURE = 2
-    COMPLETION = 3
-    ARRIVAL = 4
-    SLOT = 5          # the per-slot scheduling tick (slot-driven policies)
+    MACHINE_UP = 0
+    MACHINE_DOWN = 1
+    FAILURE = 2
+    PREEMPT = 3
+    DEPARTURE = 4
+    COMPLETION = 5
+    ARRIVAL = 6
+    SLOT = 7          # the per-slot scheduling tick (slot-driven policies)
 
 
 @dataclass(frozen=True)
@@ -66,7 +79,13 @@ class Event:
     The engine-built events handed to policies carry extra payload:
     ``jobs`` — the same-slot arrival batch (ARRIVAL) or the active job set
     (SLOT), and ``progress`` — trained samples per active job (SLOT), which
-    slot-driven policies like Dorm use for fairness ordering."""
+    slot-driven policies like Dorm use for fairness ordering.
+
+    MACHINE_DOWN/MACHINE_UP carry ``machine`` (index), ``factor`` (the
+    machine's effective capacity share while the incident is active: 0 for
+    a crash, (0, 1) for a straggler), and ``incident`` (a unique id that
+    pairs the DOWN with its UP, so overlapping incidents on one machine
+    compose instead of clobbering each other)."""
 
     time: int
     kind: EventKind
@@ -76,23 +95,32 @@ class Event:
     requeue: bool = False
     jobs: Tuple[JobSpec, ...] = ()
     progress: Optional[Dict[int, float]] = None
+    machine: int = -1
+    factor: float = 0.0
+    incident: int = -1
 
     def subject(self) -> int:
         return self.job.job_id if self.job is not None else self.job_id
 
 
 class EventQueue:
-    """Heap-ordered clock: pop order is (time, kind priority, push order)."""
+    """Heap-ordered clock: pop order is (time, kind priority, push order).
+
+    The push counter is a plain int (not ``itertools.count``) so a queue
+    snapshot deep-copies cleanly — the engine's crash-consistent
+    checkpoints (``SimEngine.recover``) snapshot the queue mid-run."""
 
     def __init__(self) -> None:
         self._heap: List[tuple] = []
-        self._seq = itertools.count()
+        self._seq = 0
 
     def __len__(self) -> int:
         return len(self._heap)
 
     def push(self, ev: Event) -> None:
-        heapq.heappush(self._heap, (ev.time, int(ev.kind), next(self._seq), ev))
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (ev.time, int(ev.kind), seq, ev))
 
     def peek_time(self) -> Optional[int]:
         return self._heap[0][0] if self._heap else None

@@ -35,6 +35,7 @@ class JobOutcome:
     evicted_at: Optional[int] = None   # admitted, preempted, residual rejected
     preemptions: int = 0
     utility: float = 0.0
+    samples_trained: float = 0.0       # across ALL attempts (goodput basis)
 
     @property
     def jct(self) -> Optional[int]:
@@ -63,11 +64,17 @@ class MetricsCollector:
     scripts. Policies never touch this object — identical, engine-owned
     measurement is what keeps per-policy rows comparable."""
 
-    def __init__(self, resources: List[str]):
+    def __init__(self, resources: List[str], num_machines: int = 0):
         self.resources = list(resources)
+        self.num_machines = int(num_machines)
         self.outcomes: Dict[int, JobOutcome] = {}
         self.per_slot: List[Dict] = []
         self.event_counts: Dict[str, int] = {}
+        # fault bookkeeping (repro.sim.faults)
+        self._down_slots: Dict[int, int] = {}      # machine -> degraded slots
+        self._open_incidents: Dict[Tuple[int, int], Dict] = {}
+        self.incident_log: List[Dict] = []         # closed incidents
+        self.cascade_depths: List[int] = []        # evictions per incident
 
     # ------------------------------------------------------------ jobs
     def outcome(self, job_id: int, arrival: int) -> JobOutcome:
@@ -79,14 +86,39 @@ class MetricsCollector:
     def count(self, kind: str) -> None:
         self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
 
+    # ------------------------------------------------------------ faults
+    def record_incident(self, machine: int, incident: int, t: int,
+                        factor: float, kind: str) -> None:
+        """A MACHINE_DOWN landed: open the incident for MTTR pairing."""
+        self._open_incidents[(machine, incident)] = {
+            "machine": machine, "incident": incident, "down_at": t,
+            "factor": factor, "kind": kind,
+        }
+
+    def record_recovery(self, machine: int, incident: int, t: int) -> None:
+        """The incident's MACHINE_UP landed: close it and log the repair."""
+        rec = self._open_incidents.pop((machine, incident), None)
+        if rec is None:
+            return  # UP without a recorded DOWN (trace started mid-outage)
+        rec["up_at"] = t
+        rec["repair_slots"] = t - rec["down_at"]
+        self.incident_log.append(rec)
+
+    def record_cascade(self, depth: int) -> None:
+        """Jobs evicted by one machine incident (preemption cascade)."""
+        self.cascade_depths.append(int(depth))
+
     # ------------------------------------------------------------ slots
     def record_slot(
-        self, t: int, utilization: Dict[str, float], active: int, queued: int
+        self, t: int, utilization: Dict[str, float], active: int,
+        queued: int, degraded: Tuple[int, ...] = (),
     ) -> None:
         self.per_slot.append(
             {"t": t, "util": dict(utilization), "active": active,
              "queued": queued}
         )
+        for h in degraded:
+            self._down_slots[h] = self._down_slots.get(h, 0) + 1
 
     # ------------------------------------------------------------ report
     def jct_cdf(self) -> Tuple[List[float], List[float]]:
@@ -125,6 +157,22 @@ class MetricsCollector:
             if oc.admitted is True
             or (oc.admitted is None and oc.first_service is not None)
         ]
+        # goodput vs wasted work: samples trained by jobs that completed
+        # vs samples sunk into jobs that never did (evicted, departed,
+        # censored) — the fault model's primary cost signal
+        goodput = float(sum(oc.samples_trained for oc in completed))
+        wasted = float(sum(oc.samples_trained for oc in ocs
+                           if oc.completed_at is None))
+        trained = goodput + wasted
+        slots = len(self.per_slot)
+        repairs = [rec["repair_slots"] for rec in self.incident_log]
+        if self.num_machines > 0 and slots > 0:
+            availability = 1.0 - (
+                sum(self._down_slots.values())
+                / float(self.num_machines * slots)
+            )
+        else:
+            availability = 1.0
         return {
             "jobs_offered": offered,
             "jobs_admitted": len(admitted),
@@ -142,6 +190,16 @@ class MetricsCollector:
             "total_utility": float(sum(oc.utility for oc in ocs)),
             "utilization_mean": {r: mean(v) for r, v in util_all.items()},
             "utilization_busy_mean": {r: mean(v) for r, v in util_busy.items()},
+            "goodput_samples": goodput,
+            "wasted_samples": wasted,
+            "goodput_fraction": goodput / trained if trained > 0 else 1.0,
+            "machine_incidents": (len(self.incident_log)
+                                  + len(self._open_incidents)),
+            "mttr": mean([float(x) for x in repairs]),
+            "machine_availability": float(availability),
+            "preempt_cascade_max": max(self.cascade_depths, default=0),
+            "preempt_cascade_mean": mean(
+                [float(x) for x in self.cascade_depths]),
             "slots": len(self.per_slot),
             "events": dict(sorted(self.event_counts.items())),
         }

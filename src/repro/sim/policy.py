@@ -39,6 +39,8 @@ go through the registry.
 from __future__ import annotations
 
 import math
+import warnings
+from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -54,7 +56,7 @@ from ..core.job import Allocation, JobSpec
 from ..core.pricing import PriceParams, PriceTable
 from ..core.schedule import find_best_schedule
 from ..core.solve_plan import SolvePlan, solve_plans
-from ..core.subproblem import SubproblemConfig
+from ..core.subproblem import SolverFault, SubproblemConfig
 from .events import Event, EventKind
 from .window import RollingWindow
 
@@ -63,6 +65,7 @@ from .window import RollingWindow
 # it reuses _TAG_PDORS per (job, attempt), which is exactly what makes its
 # decisions bit-identical to PDORSPolicy(rng_mode="compat") on a trace.
 _TAG_PDORS, _TAG_FIFO, _TAG_DRF, _TAG_DORM = 1, 2, 3, 4
+_TAG_RESILIENT = 5  # ResilientPolicy's greedy-fallback placement draws
 
 
 def _nonneg(k: int) -> int:
@@ -371,7 +374,19 @@ class PDORSReferencePolicy(SchedulingPolicy):
 
     def _mirror(self) -> _ref.Cluster:
         cl = self.view.cluster
-        ref = _ref.Cluster(machines=self._ref_machines, horizon=cl.horizon)
+        if cl._capacity_mask is None:
+            machines = self._ref_machines  # clean cluster: bit-parity path
+        else:
+            # fault-degraded capacities: mirror the masked matrix so the
+            # frozen core sees the same effective cluster as pdors
+            machines = [
+                _ref.Machine(h, {
+                    r: float(cl.capacity_matrix[h, k])
+                    for r, k in cl.res_index.items()
+                })
+                for h in range(cl.num_machines)
+            ]
+        ref = _ref.Cluster(machines=machines, horizon=cl.horizon)
         used = cl.backend.to_host(cl._used)
         for t, h, k in zip(*np.nonzero(used)):
             ref._used[(int(t), int(h), cl.resources[int(k)])] = float(
@@ -462,8 +477,15 @@ class FIFOPolicy(_SlotPolicy):
         for job in event.jobs:  # engine supplies (arrival, job_id) order
             held = self.held.get(job.job_id)
             if held is not None:
-                view.commit(view.now, job, held)
-                dec.grants[job.job_id] = held
+                if view.cluster.fits(0, job, held):
+                    view.commit(view.now, job, held)
+                    dec.grants[job.job_id] = held
+                else:
+                    # a fault shrank capacity under the lease (machine
+                    # crash/straggler): drop it; the job re-places below.
+                    # Clean runs never hit this — the same re-grant fit
+                    # last slot against the same capacity.
+                    del self.held[job.job_id]
         # phase 2: place waiting jobs in queue order against what remains
         for job in event.jobs:
             if job.job_id in self.held:
@@ -535,8 +557,13 @@ class DormPolicy(_SlotPolicy):
         for job in actives:          # re-grant held allocations first
             held = self.held.get(job.job_id)
             if held is not None:
-                view.commit(view.now, job, held)
-                dec.grants[job.job_id] = held
+                if view.cluster.fits(0, job, held):
+                    view.commit(view.now, job, held)
+                    dec.grants[job.job_id] = held
+                else:
+                    # capacity shrank under the lease (fault domain):
+                    # drop the hold; the grant loop may re-place the job
+                    del self.held[job.job_id]
         if not actives:
             return dec
 
@@ -559,3 +586,164 @@ class DormPolicy(_SlotPolicy):
 
     def on_preempt(self, job_id: int, t: int, view: RollingWindow) -> None:
         self.held.pop(job_id, None)
+
+
+# ======================================================================
+# Degraded-mode wrapper: solver-fault containment
+# ======================================================================
+@register_policy("resilient")
+class ResilientPolicy(SchedulingPolicy):
+    """Wrap a policy so injected (or real) solver faults never lose an
+    offer.
+
+    Arrival batches are re-offered to the inner policy one job at a time
+    (single-job sub-events), bounding a fault's blast radius to one job —
+    the batch's other jobs still get their full solve. Per job the
+    degradation ladder is:
+
+      1. full inner offer;
+      2. on ``SolverFault``: one retry with a tightened pivot budget
+         (``max_lp_machines``/``rounding_rounds`` clamped to
+         ``retry_budget``) — smaller LPs, same admission logic;
+      3. on a second fault: greedy fallback — ``place_round_robin_free``
+         packs the job slot-by-slot across the window and admits iff the
+         whole workload fits, so the offer slot is *never* dropped, only
+         decided with a cheaper mechanism.
+
+    Health state (healthy/degraded/fallback) and per-rung counters are
+    tracked in ``health_stats()`` (the engine folds them into the summary
+    as ``policy_health``); each distinct fault category warns once. All
+    other event kinds delegate straight to the inner policy, and fallback
+    placement draws from per-(job, slot) derived seeds, so wrapping a
+    policy changes nothing on a fault-free trace."""
+
+    reoffers_on_preempt = True
+
+    def __init__(
+        self,
+        inner="pdors",
+        retry_budget: Tuple[int, int] = (8, 8),
+        fallback_workers: int = 8,
+        **inner_kwargs,
+    ):
+        self.inner = (inner if isinstance(inner, SchedulingPolicy)
+                      else make_policy(inner, **inner_kwargs))
+        # mirror the inner policy's shape so the engine drives us the way
+        # it would drive the inner policy directly
+        self.slot_driven = self.inner.slot_driven
+        self.reoffers_on_preempt = self.inner.reoffers_on_preempt
+        self.retry_budget = retry_budget
+        self.fallback_workers = int(fallback_workers)
+        self.health: Dict[str, object] = {
+            "offers": 0, "solver_faults": 0, "retries": 0,
+            "retry_recoveries": 0, "fallbacks": 0, "fallback_admits": 0,
+            "state": "healthy",
+        }
+        self._warned: set = set()
+
+    def bind(self, view: RollingWindow, seed: int) -> None:
+        super().bind(view, seed)
+        self.inner.bind(view, seed)
+
+    def health_stats(self) -> Dict[str, object]:
+        return dict(self.health)
+
+    def _warn_once(self, key: str, msg: str) -> None:
+        if key not in self._warned:
+            self._warned.add(key)
+            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+    @contextmanager
+    def _tightened(self):
+        """Temporarily clamp the inner solver's budgets (retry rung)."""
+        base = getattr(self.inner, "base_cfg", None)
+        if base is None or not isinstance(base, SubproblemConfig):
+            yield
+            return
+        lp_m, rounds = self.retry_budget
+        self.inner.base_cfg = replace(
+            base,
+            max_lp_machines=min(base.max_lp_machines, int(lp_m)),
+            rounding_rounds=min(base.rounding_rounds, int(rounds)),
+        )
+        try:
+            yield
+        finally:
+            self.inner.base_cfg = base
+
+    def offer(self, event: Event, view: RollingWindow) -> Decision:
+        if event.kind != EventKind.ARRIVAL:
+            return self.inner.offer(event, view)
+        dec = Decision()
+        for job in event.jobs:
+            self.health["offers"] += 1
+            sub = Event(time=event.time, kind=EventKind.ARRIVAL,
+                        jobs=(job,))
+            d = self._offer_laddered(sub, job, view)
+            dec.admitted.update(d.admitted)
+            dec.schedules.update(d.schedules)
+            dec.grants.update(d.grants)
+        return dec
+
+    def _offer_laddered(self, sub: Event, job: JobSpec,
+                        view: RollingWindow) -> Decision:
+        try:
+            d = self.inner.offer(sub, view)
+            self.health["state"] = "healthy"
+            return d
+        except SolverFault as e:
+            self.health["solver_faults"] += 1
+            self.health["state"] = "degraded"
+            self._warn_once(
+                type(e).__name__,
+                f"solver fault contained ({e}); retrying with a "
+                f"tightened budget",
+            )
+        self.health["retries"] += 1
+        try:
+            with self._tightened():
+                d = self.inner.offer(sub, view)
+            self.health["retry_recoveries"] += 1
+            return d
+        except SolverFault as e:
+            self.health["solver_faults"] += 1
+            self._warn_once(
+                "fallback",
+                f"retry faulted too ({e}); greedy fallback engaged",
+            )
+        self.health["fallbacks"] += 1
+        self.health["state"] = "fallback"
+        d = self._fallback(job, view)
+        if d.admitted.get(job.job_id):
+            self.health["fallback_admits"] += 1
+        return d
+
+    def _fallback(self, job: JobSpec, view: RollingWindow) -> Decision:
+        """Rung 3: pack the job's whole workload slot-by-slot with the
+        shared round-robin greedy; admit iff it fits inside the window
+        (a partial commit would strand an uncompletable job)."""
+        dec = Decision()
+        rng = derived_rng(self.seed, _TAG_RESILIENT, job.job_id, view.now)
+        nw = max(1, min(int(job.batch_size), self.fallback_workers))
+        ns = max(1, int(math.ceil(nw / job.gamma)))
+        remaining = job.total_workload()
+        schedule: Dict[int, Allocation] = {}
+        trained = 0.0
+        H = view.cluster.num_machines
+        for k in range(view.lookahead):
+            alloc = place_round_robin_free(
+                view.free_map(k), H, job, nw, ns, rng
+            )
+            if alloc is None:
+                continue
+            schedule[view.now + k] = alloc
+            trained += alloc.samples_trained(job)
+            if trained >= remaining - 1e-9:
+                break
+        if trained < remaining - 1e-9:
+            dec.admitted[job.job_id] = False
+            return dec
+        view.commit_schedule(job, schedule)
+        dec.admitted[job.job_id] = True
+        dec.schedules[job.job_id] = schedule
+        return dec

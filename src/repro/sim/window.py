@@ -139,15 +139,28 @@ class RollingWindow:
             self.jobs.pop(job_id, None)
         return len(hit)
 
+    def jobs_on_machine(self, h: int) -> List[int]:
+        """Job ids holding any committed row that touches machine ``h``,
+        sorted ascending — the deterministic eviction order the engine
+        walks when a MACHINE_DOWN shrinks capacity under committed rows."""
+        out = []
+        for jid, slots in self.commitments.items():
+            for alloc in slots.values():
+                if alloc.workers.get(h, 0) or alloc.ps.get(h, 0):
+                    out.append(jid)
+                    break
+        return sorted(out)
+
     # ------------------------------------------------------------------
-    def free_map(self) -> Dict[Tuple[int, str], float]:
-        """Current-slot free capacity as the {(h, r): amount} map the
-        round-robin placement helper mutates."""
-        fm = self.cluster.free_matrix(0)
+    def free_map(self, k: int = 0) -> Dict[Tuple[int, str], float]:
+        """Free capacity at window-relative slot ``k`` (default: the
+        current slot) as the {(h, r): amount} map the round-robin
+        placement helper mutates."""
+        fm = self.cluster.free_matrix(k)
         return {
-            (h, r): float(fm[h, k])
+            (h, r): float(fm[h, ri])
             for h in range(self.cluster.num_machines)
-            for k, r in enumerate(self.cluster.resources)
+            for ri, r in enumerate(self.cluster.resources)
         }
 
     def utilization_now(self) -> Dict[str, float]:

@@ -1,0 +1,433 @@
+"""Tests for the fault-domain chaos harness: FaultPlan generation,
+capacity-mask semantics, solver-fault injection, the ResilientPolicy
+degradation ladder, crash-consistent recovery, and multi-seed chaos
+storms across every registered policy."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Allocation,
+    JobSpec,
+    SigmoidUtility,
+    SubproblemConfig,
+    estimate_price_params,
+    make_cluster,
+)
+from repro.core.subproblem import SolverFault, SolverTimeout
+from repro.sim import (
+    Event,
+    EventKind,
+    FaultIncident,
+    FaultPlan,
+    ResilientPolicy,
+    RollingWindow,
+    SimEngine,
+    SimKilled,
+    SolverFaultInjector,
+    TraceConfig,
+    calibrate_prices,
+    make_policy,
+    merge_event_streams,
+    stream,
+)
+
+
+def small_job(job_id=0, arrival=0, V=2000, F=16, gamma=2.0, **kw):
+    defaults = dict(
+        epochs=1, num_samples=V, batch_size=F, tau=1e-3, grad_size=100.0,
+        gamma=gamma, bw_internal=1e6, bw_external=2e5,
+        worker_demand={"gpu": 1.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        ps_demand={"gpu": 0.0, "cpu": 2.0, "mem": 4.0, "storage": 1.0},
+        utility=SigmoidUtility(theta1=50.0, theta2=0.5, theta3=5.0),
+    )
+    defaults.update(kw)
+    return JobSpec(job_id=job_id, arrival=arrival, **defaults)
+
+
+CHAOS_PLAN = dict(crash_rate=0.02, straggler_rate=0.02, downtime=(2, 8),
+                  domains=[(0, 1), (2, 3)], domain_correlation=0.5)
+
+
+# ------------------------------------------------------------- FaultPlan
+def test_fault_plan_deterministic_and_seed_sensitive():
+    plan = FaultPlan(seed=5, until=200, **CHAOS_PLAN)
+    a = plan.incidents(4)
+    b = plan.incidents(4)
+    assert a == b                       # frozen dataclass equality
+    assert a, "chaos plan generated no incidents"
+    other = FaultPlan(seed=6, until=200, **CHAOS_PLAN).incidents(4)
+    assert a != other
+
+
+def test_fault_plan_incidents_never_self_overlap():
+    plan = FaultPlan(seed=1, until=400, crash_rate=0.1, straggler_rate=0.1,
+                     downtime=(2, 12))
+    incs = plan.incidents(3)
+    ids = [i.incident for i in incs]
+    assert len(ids) == len(set(ids))    # unique DOWN/UP pairing ids
+    by_machine = {}
+    for inc in incs:
+        by_machine.setdefault(inc.machine, []).append(inc)
+    for machine_incs in by_machine.values():
+        machine_incs.sort(key=lambda i: i.down_at)
+        for prev, nxt in zip(machine_incs, machine_incs[1:]):
+            assert nxt.down_at >= prev.up_at
+    for inc in incs:
+        assert inc.duration >= 2
+        if inc.kind == "crash":
+            assert inc.factor == 0.0
+        else:
+            assert 0.3 <= inc.factor <= 0.7
+
+
+def test_fault_plan_domain_correlation_spawns_peer_outages():
+    plan = FaultPlan(seed=2, until=600, crash_rate=0.02,
+                     domains=[(0, 1, 2)], domain_correlation=1.0)
+    incs = plan.incidents(3)
+    crashes = [i for i in incs if i.kind == "crash"]
+    intervals = {}
+    for i in crashes:
+        intervals.setdefault((i.down_at, i.up_at), set()).add(i.machine)
+    # every crash interval takes the whole domain down together
+    assert any(ms == {0, 1, 2} for ms in intervals.values())
+
+
+def test_fault_plan_events_pair_down_with_up():
+    plan = FaultPlan(seed=3, until=150, crash_rate=0.05)
+    incs = plan.incidents(2)
+    evs = plan.events(2)
+    downs = [e for e in evs if e.kind == EventKind.MACHINE_DOWN]
+    ups = [e for e in evs if e.kind == EventKind.MACHINE_UP]
+    assert len(downs) == len(ups) == len(incs)
+    assert {e.incident for e in downs} == {i.incident for i in incs}
+    times = [e.time for e in evs]
+    assert times == sorted(times)
+
+
+def test_merge_event_streams_is_time_ordered_and_stable():
+    a = [Event(time=0, kind=EventKind.ARRIVAL, job=small_job(0)),
+         Event(time=4, kind=EventKind.ARRIVAL, job=small_job(1))]
+    b = [Event(time=0, kind=EventKind.MACHINE_DOWN, machine=0, incident=0),
+         Event(time=2, kind=EventKind.MACHINE_UP, machine=0, incident=0)]
+    merged = list(merge_event_streams(a, b))
+    assert [e.time for e in merged] == [0, 0, 2, 4]
+    # stable within a tie: stream a listed first
+    assert merged[0].kind == EventKind.ARRIVAL
+
+
+# -------------------------------------------------------- capacity mask
+def test_capacity_mask_masks_and_restores_bit_identically():
+    cl = make_cluster(3, 6)
+    base = cl.capacity_matrix
+    v0 = cl.version
+    mask = np.array([1.0, 0.0, 0.5])
+    cl.set_capacity_mask(mask)
+    assert cl.version == v0 + 1
+    assert np.array_equal(cl.capacity_matrix[1], np.zeros(base.shape[1]))
+    assert np.allclose(cl.capacity_matrix[2], 0.5 * base[2])
+    # identical mask is a no-op (no spurious cache invalidation)
+    cl.set_capacity_mask(mask.copy())
+    assert cl.version == v0 + 1
+    # all-ones restore reinstates the ORIGINAL array object
+    cl.set_capacity_mask(np.ones(3))
+    assert cl.capacity_matrix is base
+    assert cl._capacity_mask is None
+    assert cl.version == v0 + 2
+    # never-masked cluster: all-ones mask does not bump the version
+    cl2 = make_cluster(3, 6)
+    v = cl2.version
+    cl2.set_capacity_mask(np.ones(3))
+    assert cl2.version == v
+
+
+def test_capacity_mask_validation():
+    cl = make_cluster(3, 6)
+    with pytest.raises(ValueError):
+        cl.set_capacity_mask(np.ones(4))
+    with pytest.raises(ValueError):
+        cl.set_capacity_mask(np.array([1.0, -0.1, 1.0]))
+
+
+def test_machine_overcommitted_tracks_mask():
+    cl = make_cluster(2, 6)
+    job = small_job()
+    cl.commit(0, job, Allocation(workers={0: 2}, ps={0: 1}))
+    assert not cl.machine_overcommitted(0)
+    cl.set_capacity_mask(np.array([0.0, 1.0]))
+    assert cl.machine_overcommitted(0)
+    assert not cl.machine_overcommitted(1)
+    cl.set_capacity_mask(np.ones(2))
+    assert not cl.machine_overcommitted(0)
+
+
+# ------------------------------------------------------- solver faults
+def test_solver_fault_injector_is_deterministic_by_dispatch_index():
+    def raised_pattern():
+        inj = SolverFaultInjector(rate=0.5, seed=9)
+        pat = []
+        for _ in range(40):
+            try:
+                inj("lp")
+                pat.append(None)
+            except SolverTimeout:
+                pat.append("timeout")
+            except SolverFault:
+                pat.append("fault")
+        return pat
+
+    a, b = raised_pattern(), raised_pattern()
+    assert a == b
+    assert "timeout" in a or "fault" in a
+    # a deep copy (checkpoint) continues the identical schedule
+    inj = SolverFaultInjector(rate=0.5, seed=9)
+    for _ in range(10):
+        try:
+            inj("lp")
+        except SolverFault:
+            pass
+    clone = copy.deepcopy(inj)
+    def drain(i):
+        out = []
+        for _ in range(30):
+            try:
+                i("lp")
+                out.append(None)
+            except SolverFault as e:
+                out.append(type(e).__name__)
+        return out
+    assert drain(inj) == drain(clone)
+
+
+def test_solver_fault_injector_max_faults_bound():
+    inj = SolverFaultInjector(rate=1.0, seed=0, max_faults=2)
+    raised = 0
+    for _ in range(20):
+        try:
+            inj("lp")
+        except SolverFault:
+            raised += 1
+    assert raised == 2
+    assert inj.raised == 2
+
+
+def test_fault_plan_solver_hook_gated_by_rate():
+    assert FaultPlan(solver_fault_rate=0.0).solver_fault_hook() is None
+    hook = FaultPlan(solver_fault_rate=0.4, seed=7).solver_fault_hook()
+    assert isinstance(hook, SolverFaultInjector)
+    assert hook.rate == 0.4
+
+
+# -------------------------------------------------- degradation ladder
+def _chaos_trace(num_jobs=10, seed=3, failure_rate=0.2):
+    return TraceConfig(num_jobs=num_jobs, seed=seed, arrival_rate=0.6,
+                       failure_rate=failure_rate)
+
+
+def _resilient_engine(hook, tcfg=None, H=5, W=12, **eng_kw):
+    tcfg = tcfg or _chaos_trace()
+    cl = make_cluster(H, W)
+    params = calibrate_prices(tcfg, cl, n=16)
+    pol = ResilientPolicy(
+        inner="pdors", price_params=params, quanta=8,
+        cfg=SubproblemConfig(lp_fault_hook=hook),
+    )
+    eng = SimEngine(RollingWindow(cl), pol, max_slots=600,
+                    patience=tcfg.patience, **eng_kw)
+    return eng, tcfg
+
+
+def test_resilient_retry_recovers_single_fault():
+    hook = SolverFaultInjector(rate=1.0, seed=0, max_faults=1)
+    eng, tcfg = _resilient_engine(hook)
+    rep = eng.run(stream(tcfg))
+    health = rep.summary["policy_health"]
+    assert health["solver_faults"] == 1
+    assert health["retries"] == 1
+    assert health["retry_recoveries"] == 1
+    assert health["fallbacks"] == 0
+    # the faulted offer was still decided
+    assert rep.summary["jobs_offered"] == 10
+
+
+def test_resilient_fallback_never_drops_an_offer():
+    hook = SolverFaultInjector(rate=1.0, seed=0)   # EVERY dispatch faults
+    eng, tcfg = _resilient_engine(hook)
+    rep = eng.run(stream(tcfg))
+    s = rep.summary
+    health = s["policy_health"]
+    assert health["fallbacks"] > 0
+    # each fallback consumed both ladder rungs first
+    assert health["solver_faults"] >= 2 * health["fallbacks"]
+    assert health["retries"] >= health["fallbacks"]
+    # every arrival got an explicit decision despite a 100% LP fault rate
+    assert s["jobs_offered"] == 10
+    assert s["jobs_admitted"] + s["jobs_rejected"] == 10
+    assert health["fallback_admits"] <= s["jobs_admitted"]
+
+
+def test_resilient_is_transparent_without_faults():
+    tcfg = _chaos_trace()
+    cl = make_cluster(5, 12)
+    params = calibrate_prices(tcfg, cl, n=16)
+    base = SimEngine(
+        RollingWindow(make_cluster(5, 12)),
+        make_policy("pdors", price_params=params, quanta=8),
+        max_slots=600, patience=tcfg.patience,
+    ).run(stream(tcfg))
+    wrapped = SimEngine(
+        RollingWindow(make_cluster(5, 12)),
+        ResilientPolicy(inner="pdors", price_params=params, quanta=8),
+        max_slots=600, patience=tcfg.patience,
+    ).run(stream(tcfg))
+    ws = dict(wrapped.summary)
+    health = ws.pop("policy_health")
+    assert ws == base.summary           # decision-identical on a clean trace
+    assert health["solver_faults"] == 0
+    assert health["state"] == "healthy"
+
+
+def test_unwrapped_policy_propagates_solver_fault():
+    tcfg = _chaos_trace()
+    cl = make_cluster(5, 12)
+    params = calibrate_prices(tcfg, cl, n=16)
+    pol = make_policy(
+        "pdors", price_params=params, quanta=8,
+        cfg=SubproblemConfig(
+            lp_fault_hook=SolverFaultInjector(rate=1.0, seed=0)),
+    )
+    eng = SimEngine(RollingWindow(cl), pol, max_slots=600,
+                    patience=tcfg.patience)
+    with pytest.raises(SolverFault):
+        eng.run(stream(tcfg))
+
+
+# ----------------------------------------------------------- recovery
+def _build_chaos_engine(policy_name="pdors", seed=0, **eng_kw):
+    tcfg = _chaos_trace(num_jobs=12, seed=seed)
+    plan = FaultPlan(seed=seed, until=200, **CHAOS_PLAN)
+    cl = make_cluster(4, 12)
+    kw = {}
+    if policy_name in ("pdors", "pdors_ref"):
+        kw = dict(price_params=calibrate_prices(tcfg, cl, n=16), quanta=8)
+    eng = SimEngine(RollingWindow(make_cluster(4, 12)),
+                    make_policy(policy_name, **kw), seed=seed,
+                    max_slots=600, patience=tcfg.patience, **eng_kw)
+    ev = lambda: merge_event_streams(stream(tcfg), plan.events(4))
+    return eng, ev
+
+
+def test_recover_is_bit_identical_to_uninterrupted_run():
+    base_eng, ev = _build_chaos_engine()
+    base = base_eng.run(ev()).summary
+
+    eng, ev = _build_chaos_engine(checkpoint_every=10, kill_at=27)
+    with pytest.raises(SimKilled):
+        eng.run(ev())
+    rep = eng.recover(ev())             # full stream: islice past consumed
+    assert rep.summary == base
+
+
+def test_recover_from_journal_alone_when_stream_drained():
+    """With no replayable stream, recovery resumes from checkpoint +
+    journaled pulls — exact whenever the stream was fully consumed before
+    the crash (here: last event at t=25, kill at t=28, checkpoint at 20)."""
+    tcfg = _chaos_trace(num_jobs=10, seed=4, failure_rate=0.25)
+    plan = FaultPlan(seed=4, until=16, crash_rate=0.04, straggler_rate=0.02,
+                     downtime=(2, 6), domains=[(0, 1), (2, 3)],
+                     domain_correlation=0.5)
+    cl = make_cluster(4, 12)
+    params = calibrate_prices(tcfg, cl, n=16)
+
+    def build(**kw):
+        return SimEngine(
+            RollingWindow(make_cluster(4, 12)),
+            make_policy("pdors", price_params=params, quanta=8),
+            max_slots=600, patience=tcfg.patience, **kw)
+
+    ev = lambda: merge_event_streams(stream(tcfg), plan.events(4))
+    assert max(e.time for e in ev()) < 28
+    base = build().run(ev()).summary
+    eng = build(checkpoint_every=10, kill_at=28)
+    with pytest.raises(SimKilled):
+        eng.run(ev())
+    assert eng.recover().summary == base
+
+
+def test_recover_without_checkpoint_raises():
+    eng, ev = _build_chaos_engine()     # checkpoint_every=None
+    eng.run(ev())
+    with pytest.raises(RuntimeError):
+        eng.recover()
+
+
+# -------------------------------------------------------- chaos storms
+STORM_POLICIES = ["pdors", "pdors_ref", "fifo", "drf", "dorm", "resilient"]
+
+
+@pytest.mark.parametrize("policy", STORM_POLICIES)
+@pytest.mark.parametrize("seed", [0, 1])
+def test_chaos_storm_invariants_and_replay(policy, seed):
+    """Under correlated machine crashes, stragglers, job failures, and
+    (for resilient) injected solver faults, every policy must finish with
+    the ledger invariant intact, and a replay must be bit-identical."""
+    tcfg = _chaos_trace(num_jobs=10, seed=seed, failure_rate=0.25)
+    plan = FaultPlan(seed=seed, until=200, solver_fault_rate=0.3,
+                     **CHAOS_PLAN)
+
+    def run():
+        cl = make_cluster(4, 12)
+        kw = {}
+        if policy in ("pdors", "pdors_ref"):
+            kw = dict(price_params=calibrate_prices(tcfg, cl, n=16),
+                      quanta=8)
+        elif policy == "resilient":
+            kw = dict(inner="pdors",
+                      price_params=calibrate_prices(tcfg, cl, n=16),
+                      quanta=8,
+                      cfg=SubproblemConfig(
+                          lp_fault_hook=plan.solver_fault_hook()))
+        eng = SimEngine(RollingWindow(make_cluster(4, 12)),
+                        make_policy(policy, **kw), seed=seed,
+                        max_slots=600, patience=tcfg.patience,
+                        check_ledger=True)
+        events = merge_event_streams(stream(tcfg), plan.events(4))
+        return eng.run(events).summary
+
+    a, b = run(), run()
+    assert a == b                       # replay is bit-identical
+    assert a["jobs_offered"] == 10
+    assert a["machine_incidents"] > 0
+    assert 0.0 < a["machine_availability"] < 1.0
+    assert 0.0 <= a["goodput_fraction"] <= 1.0
+    if a["jobs_completed"] > 0:
+        assert a["goodput_samples"] > 0.0
+
+
+def test_chaos_storm_goodput_accounting_closes():
+    """goodput + wasted covers every trained sample, and a fault-free run
+    of the same trace wastes no more than the faulted one completes."""
+    tcfg = _chaos_trace(num_jobs=10, seed=4, failure_rate=0.25)
+    plan = FaultPlan(seed=4, until=200, **CHAOS_PLAN)
+    cl = make_cluster(4, 12)
+    params = calibrate_prices(tcfg, cl, n=16)
+
+    def run(with_faults):
+        eng = SimEngine(
+            RollingWindow(make_cluster(4, 12)),
+            make_policy("pdors", price_params=params, quanta=8),
+            max_slots=600, patience=tcfg.patience,
+        )
+        events = (merge_event_streams(stream(tcfg), plan.events(4))
+                  if with_faults else stream(tcfg))
+        return eng.run(events).summary
+
+    faulted = run(True)
+    clean = run(False)
+    for s in (faulted, clean):
+        assert s["goodput_samples"] >= 0.0
+        assert s["wasted_samples"] >= 0.0
+    assert faulted["machine_incidents"] > 0
+    assert clean["machine_incidents"] == 0
+    assert clean["machine_availability"] == 1.0

@@ -397,6 +397,144 @@ def test_derived_rng_mode_is_order_independent():
             assert a.alloc.ps == b.alloc.ps
 
 
+# ------------------------------------------------- same-slot fault order
+def test_event_queue_machine_kind_ordering():
+    """MACHINE_UP pops before MACHINE_DOWN pops before job-level events —
+    a same-slot repair + crash of one machine must net to the crash."""
+    q = EventQueue()
+    q.push(Event(time=4, kind=EventKind.ARRIVAL, job=small_job(1)))
+    q.push(Event(time=4, kind=EventKind.FAILURE, job_id=1))
+    q.push(Event(time=4, kind=EventKind.MACHINE_DOWN, machine=0, incident=1))
+    q.push(Event(time=4, kind=EventKind.DEPARTURE, job_id=2))
+    q.push(Event(time=4, kind=EventKind.MACHINE_UP, machine=0, incident=0))
+    kinds = [e.kind for e in q.pop_until(4)]
+    assert kinds == [EventKind.MACHINE_UP, EventKind.MACHINE_DOWN,
+                     EventKind.FAILURE, EventKind.DEPARTURE,
+                     EventKind.ARRIVAL]
+
+
+def test_multiple_failures_one_slot_count_once():
+    """Two FAILUREs of one running job in one slot lose one slot, not two."""
+    job = small_job(V=40000, F=8)
+    for policy in ("pdors", "fifo"):
+        kw = {}
+        if policy == "pdors":
+            cl = make_cluster(4, 12)
+            kw = dict(price_params=estimate_price_params([job], cl, 12),
+                      quanta=8)
+        win = RollingWindow(make_cluster(4, 12))
+        events = [Event(time=0, kind=EventKind.ARRIVAL, job=job),
+                  Event(time=2, kind=EventKind.FAILURE, job_id=job.job_id),
+                  Event(time=2, kind=EventKind.FAILURE, job_id=job.job_id)]
+        rep = SimEngine(win, make_policy(policy, **kw), max_slots=120,
+                        patience=40).run(events)
+        assert rep.summary["preemptions"] == 1, policy
+
+
+def test_failure_of_queued_never_served_job_is_moot():
+    """A fault hitting a job that never got a slot kills nothing: no
+    preemption is counted and the job can still be served later."""
+    blocker = small_job(job_id=0, V=20000, F=4)
+    waiter = small_job(job_id=1, V=1000, F=4)
+    events = [Event(time=0, kind=EventKind.ARRIVAL, job=blocker),
+              Event(time=0, kind=EventKind.ARRIVAL, job=waiter),
+              Event(time=1, kind=EventKind.FAILURE, job_id=1)]
+    win = RollingWindow(make_cluster(1, 8))
+    # 1 machine, FIFO head-of-line: the waiter queues unserved behind the
+    # blocker (worker draw permitting); either way the moot path must not
+    # count a preemption for a job with no progress and no rows
+    rep = SimEngine(win, make_policy("fifo"), seed=3, max_slots=400,
+                    patience=200).run(events)
+    oc = rep.metrics.outcomes[1]
+    if oc.first_service is None or oc.first_service > 1:
+        assert oc.preemptions == 0
+    assert rep.summary["jobs_completed"] == 2
+
+
+def test_machine_crash_evicts_running_jobs_through_preempt():
+    """MACHINE_DOWN evicts every holder on the machine via the PREEMPT
+    path (released rows, requeued residual), and MACHINE_UP restores the
+    exact pre-fault capacity."""
+    job = small_job(V=40000, F=8)
+    cl = make_cluster(2, 12)
+    params = estimate_price_params([job], cl, 12)
+    win = RollingWindow(cl)
+    base_cap = cl.capacity_matrix.copy()
+    events = [Event(time=0, kind=EventKind.ARRIVAL, job=job),
+              Event(time=2, kind=EventKind.MACHINE_DOWN, machine=0,
+                    factor=0.0, incident=0),
+              Event(time=2, kind=EventKind.MACHINE_DOWN, machine=1,
+                    factor=0.0, incident=1),
+              Event(time=5, kind=EventKind.MACHINE_UP, machine=0,
+                    incident=0),
+              Event(time=5, kind=EventKind.MACHINE_UP, machine=1,
+                    incident=1)]
+    eng = SimEngine(win, make_policy("pdors", price_params=params, quanta=8),
+                    max_slots=120)
+    rep = eng.run(events)
+    s = rep.summary
+    assert s["machine_incidents"] == 2
+    assert s["preemptions"] >= 1           # the admitted job was evicted
+    assert s["preempt_cascade_max"] >= 1
+    assert s["mttr"] == 3.0                # both repairs took 3 slots
+    assert s["machine_availability"] < 1.0
+    # full-cluster crash: nothing may remain committed on either machine
+    assert cl._capacity_mask is None       # restored after the UPs
+    assert np.array_equal(cl.capacity_matrix, base_cap)
+
+
+def test_ledger_invariant_error_carries_post_mortem():
+    """An oversubscribing policy raises LedgerInvariantError with the
+    partial report and journal tail instead of a bare assert."""
+    from repro.core import Allocation
+    from repro.sim import LedgerInvariantError
+    from repro.sim.policy import Decision, SchedulingPolicy
+
+    class Rogue(SchedulingPolicy):
+        reoffers_on_preempt = True
+
+        def on_arrivals(self, event, view):
+            dec = Decision()
+            for job in event.jobs:
+                # 1000 workers on machine 0 cannot fit any capacity
+                view.commit(view.now, job, Allocation(workers={0: 1000},
+                                                      ps={0: 1}))
+                dec.admitted[job.job_id] = True
+            return dec
+
+    win = RollingWindow(make_cluster(2, 6))
+    eng = SimEngine(win, Rogue(), max_slots=10)
+    with pytest.raises(LedgerInvariantError) as ei:
+        eng.run([Event(time=0, kind=EventKind.ARRIVAL, job=small_job())])
+    err = ei.value
+    assert isinstance(err, AssertionError)   # drop-in for the old assert
+    assert err.slot == 0
+    assert err.report.summary["jobs_offered"] == 1
+    assert any(ev.kind == EventKind.ARRIVAL for ev in err.journal_tail)
+
+
+def test_refail_redraws_failures_for_requeued_attempts():
+    """With refail on, a survivor of one failure is mortal again; with the
+    flag off (default) the original immune behavior is preserved."""
+    job = small_job(V=60000, F=8)
+    cl = make_cluster(4, 12)
+    params = estimate_price_params([job], cl, 12)
+
+    def run(refail_rate):
+        win = RollingWindow(make_cluster(4, 12))
+        eng = SimEngine(
+            win, make_policy("pdors", price_params=params, quanta=8),
+            max_slots=200, refail_rate=refail_rate, refail_delay=(1, 2),
+        )
+        return eng.run([Event(time=0, kind=EventKind.ARRIVAL, job=job,
+                              fail_at=2)]).summary
+
+    immune = run(0.0)
+    assert immune["preemptions"] == 1      # pre-existing behavior: immortal
+    mortal = run(1.0)
+    assert mortal["preemptions"] >= 2      # every requeue fails again
+
+
 def test_derived_rng_run_pdors_deterministic():
     cfg = WorkloadConfig(num_jobs=10, horizon=10, seed=6, batch=(10, 60),
                          workload_scale=0.05)
