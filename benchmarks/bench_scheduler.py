@@ -40,6 +40,7 @@ import argparse
 import json
 import sys
 import time
+from contextlib import nullcontext
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -53,6 +54,8 @@ from repro.core import (
     synthetic_jobs,
 )
 from repro.core._reference import PDORSReference, make_cluster_reference
+from repro.obs import Tracer
+from repro.obs import trace as obs_trace
 
 # (H, T, jobs, workload_scale); acceptance point 50x40x100 runs last so
 # partial runs still produce the smaller rows first
@@ -95,26 +98,35 @@ def _decisions(records) -> List[tuple]:
 
 
 def _run_pdors_timed(jobs, cluster_factory, scheduler_cls, seed: int,
-                     repeat_best_of: int = 1) -> Dict:
+                     repeat_best_of: int = 1, profile: bool = False) -> Dict:
     """Time one scheduler run; with ``repeat_best_of > 1`` repeat the
     whole run on a FRESH cluster each time and report the best wall
     clock (latencies from the best run).  Decisions are deterministic at
     a fixed seed, so every rep produces the same records — the repeats
     only filter out scheduling noise from shared benchmark boxes (see
-    docs/BENCHMARKS.md, "noisy-box vs quiet-run methodology")."""
+    docs/BENCHMARKS.md, "noisy-box vs quiet-run methodology").
+
+    ``profile=True`` activates a fresh ``repro.obs`` tracer around each
+    rep's offer loop (decisions are unaffected — spans never touch rng
+    or decision state) and attaches the per-phase breakdown, coverage
+    (traced root time / measured wall), and — for the vectorized core —
+    the primal-dual telemetry snapshot to the row."""
     best: Optional[Dict] = None
     ordered = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
     for _ in range(max(1, repeat_best_of)):
         cluster = cluster_factory()
         params = estimate_price_params(jobs, cluster, cluster.horizon)
         sched = scheduler_cls(cluster, params, quanta=QUANTA, seed=seed)
+        tracer = Tracer() if profile else None
         lat: List[float] = []
-        t0 = time.perf_counter()
-        for job in ordered:
-            t1 = time.perf_counter()
-            sched.offer(job)
-            lat.append(time.perf_counter() - t1)
-        wall = time.perf_counter() - t0
+        with (obs_trace.activate(tracer) if tracer is not None
+              else nullcontext()):
+            t0 = time.perf_counter()
+            for job in ordered:
+                t1 = time.perf_counter()
+                sched.offer(job)
+                lat.append(time.perf_counter() - t1)
+            wall = time.perf_counter() - t0
         records = sched.records
         out = {
             "wall_s": wall,
@@ -125,6 +137,18 @@ def _run_pdors_timed(jobs, cluster_factory, scheduler_cls, seed: int,
             "admitted": sum(1 for r in records if r.admitted),
             "decisions": _decisions(records),
         }
+        if tracer is not None:
+            out["profile"] = {
+                "phases": tracer.phase_table(),
+                "coverage": (tracer.total_self_s() / wall) if wall else 0.0,
+                "spans": len(tracer.spans),
+            }
+            gap = getattr(sched, "pd_gap", None)
+            if gap is not None:
+                snap = gap.snapshot()
+                for k in ("pd_primal", "pd_dual", "duality_gap",
+                          "empirical_ratio", "ratio_bound"):
+                    out[k] = snap[k]
         if best is None or out["wall_s"] < best["wall_s"]:
             best = out
     return best
@@ -147,8 +171,8 @@ def _run_baseline_timed(name: str, jobs, cluster, seed: int) -> Dict:
 
 def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
                 with_reference: bool, baselines: List[str],
-                backend: str = "numpy", repeat_best_of: int = 1
-                ) -> List[Dict]:
+                backend: str = "numpy", repeat_best_of: int = 1,
+                profile: bool = False) -> List[Dict]:
     cfg = WorkloadConfig(num_jobs=num_jobs, horizon=T, seed=seed,
                          batch=BENCH_BATCH, workload_scale=scale)
     jobs = synthetic_jobs(cfg)
@@ -161,7 +185,7 @@ def bench_point(H: int, T: int, num_jobs: int, scale: float, seed: int,
 
     vec = _run_pdors_timed(
         jobs, lambda: make_cluster(H, T, backend=backend), PDORS, seed,
-        repeat_best_of,
+        repeat_best_of, profile=profile,
     )
     vec_decisions = vec.pop("decisions")
     rows.append({**point, "policy": "pdors", **bo, **vec})
@@ -263,6 +287,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "hint for shared boxes (decisions are "
                          "deterministic, so only timing changes; see "
                          "docs/BENCHMARKS.md)")
+    ap.add_argument("--profile", action="store_true",
+                    help="trace the pdors offer loop with the repro.obs "
+                         "tracer and attach a per-phase wall-time "
+                         "breakdown plus primal-dual telemetry "
+                         "(duality gap, empirical competitive ratio) to "
+                         "each pdors row — see docs/OBSERVABILITY.md")
     ap.add_argument("--out", default="BENCH_scheduler.json")
     args = ap.parse_args(argv)
 
@@ -288,7 +318,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         rows = bench_point(H, T, N, scale, args.seed,
                            with_reference=not args.no_reference,
                            baselines=baselines, backend=args.backend,
-                           repeat_best_of=args.repeat_best_of)
+                           repeat_best_of=args.repeat_best_of,
+                           profile=args.profile)
         for r in rows:
             extra = ""
             if "speedup_vs_reference" in r and r["policy"] == "pdors":
@@ -296,6 +327,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          f" identical={r['decisions_identical_to_reference']}")
                 if args.backend == "numpy":   # jax rows: tolerance parity
                     ok &= bool(r["decisions_identical_to_reference"])
+            if "profile" in r:
+                extra += (f" coverage={r['profile']['coverage']:.1%}"
+                          f" gap={r.get('duality_gap', float('nan')):.2f}"
+                          f" ratio={r.get('empirical_ratio') or float('nan'):.3f}")
             print(f"  {r['policy']:>16}: {r['jobs_per_sec']:8.2f} jobs/s "
                   f"p50={r['latency_p50_ms']:8.2f}ms "
                   f"p95={r['latency_p95_ms']:8.2f}ms "

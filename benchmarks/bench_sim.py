@@ -37,6 +37,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.core import SubproblemConfig, make_cluster
+from repro.obs import Tracer
 from repro.sim import (
     FaultPlan,
     ResilientPolicy,
@@ -86,6 +87,7 @@ def run_point(
     max_slots: int,
     backend: str = "numpy",
     faults: bool = False,
+    profile: bool = False,
 ) -> List[Dict]:
     tcfg = TraceConfig(
         preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
@@ -118,9 +120,10 @@ def run_point(
                                      quanta=QUANTA)
         else:
             policy = make_policy(name)
+        tracer = Tracer() if profile else None
         engine = SimEngine(
             window, policy, seed=seed, max_slots=max_slots,
-            patience=tcfg.patience,
+            patience=tcfg.patience, trace=tracer,
         )
         events = stream(tcfg)
         if plan is not None:
@@ -129,16 +132,31 @@ def run_point(
         report = engine.run(events)
         wall = time.perf_counter() - t0
         s = report.summary
-        rows.append({
+        row = {
             **point, "policy": name, "wall_s": wall,
             "jobs_per_sec": num_jobs / wall if wall else float("inf"),
             "slots_run": report.slots_run, **s,
-        })
+        }
+        if tracer is not None:
+            row["profile"] = {
+                "phases": tracer.phase_table(),
+                "coverage": (tracer.total_self_s() / wall) if wall else 0.0,
+                "spans": len(tracer.spans),
+            }
+        if report.pd_gap is not None:
+            for k in ("pd_primal", "pd_dual", "duality_gap",
+                      "empirical_ratio", "ratio_bound"):
+                row[k] = report.pd_gap[k]
+        rows.append(row)
         extra = ""
         if faults:
             extra = (f" goodput={s['goodput_fraction']:.2f} "
                      f"mttr={s['mttr']:.1f} "
                      f"avail={s['machine_availability']:.3f}")
+        if tracer is not None:
+            extra += f" coverage={row['profile']['coverage']:.1%}"
+            if "duality_gap" in row:
+                extra += f" gap={row['duality_gap']:.2f}"
         print(
             f"  {name:>10}: {num_jobs / wall:8.1f} jobs/s "
             f"done={s['jobs_completed']}/{s['jobs_offered']} "
@@ -175,6 +193,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--append", action="store_true",
                     help="merge rows into an existing --out file instead "
                          "of rewriting it")
+    ap.add_argument("--profile", action="store_true",
+                    help="run every engine with a repro.obs tracer and "
+                         "attach a per-phase wall-time breakdown to each "
+                         "row (pdors rows also carry duality-gap and "
+                         "empirical-competitive-ratio columns) — see "
+                         "docs/OBSERVABILITY.md")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args(argv)
 
@@ -197,7 +221,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         all_rows.extend(
             run_point(H, W, preset, n, rate, frate, policies, args.seed,
                       args.max_slots, backend=args.backend,
-                      faults=args.faults)
+                      faults=args.faults, profile=args.profile)
         )
         print(f"# point done in {time.time() - t0:.1f}s", flush=True)
 

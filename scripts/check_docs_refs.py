@@ -60,9 +60,17 @@ PUBLIC_SYMBOLS = {
     "src/repro/sim/engine.py": ["LedgerInvariantError", "SimKilled",
                                 "checkpoint_every", "refail_rate"],
     "src/repro/sim/policy.py": ["ResilientPolicy"],
-    "src/repro/sim/metrics.py": ["samples_trained"],
+    "src/repro/sim/metrics.py": ["samples_trained", "P2Quantile",
+                                 "job_done"],
     "src/repro/backend/__init__.py": ["lp_solver_default"],
-    "benchmarks/bench_scheduler.py": ["repeat-best-of"],
+    "benchmarks/bench_scheduler.py": ["repeat-best-of", "--profile"],
+    "src/repro/obs/trace.py": ["Tracer", "Span", "chrome_trace",
+                               "phase_table", "total_self_s", "activate"],
+    "src/repro/obs/metrics.py": ["MetricsRegistry", "Counter", "Gauge",
+                                 "Histogram", "get_registry",
+                                 "warn_once_event", "render", "snapshot"],
+    "src/repro/obs/pd_gap.py": ["PDGapTracker", "record_offer",
+                                "dual_price_term"],
 }
 
 

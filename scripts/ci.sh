@@ -44,6 +44,13 @@ else
 fi
 python -m benchmarks.bench_scheduler --smoke --repeat-best-of 2 \
   --out BENCH_scheduler_smoke.json
+# traced smoke: the same grid with observability on (REPRO_TRACE=1 +
+# --profile). The benchmark exits nonzero on any decision divergence
+# from the frozen reference, so this leg asserts the tracer's
+# zero-interference contract (instrumented decisions bit-identical) on
+# every CI run — see docs/OBSERVABILITY.md
+REPRO_TRACE=1 python -m benchmarks.bench_scheduler --smoke --profile \
+  --baselines "" --out BENCH_scheduler_trace_smoke.json
 python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
 # chaos smoke: the same trace under correlated machine crashes,
 # stragglers, and injected LP faults (pdors resilient-wrapped) — every

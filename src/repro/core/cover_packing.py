@@ -96,10 +96,13 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trace
+from ..obs.metrics import get_registry, sync_template_cache
 from .lp import (
     LPResult,
     TableauTemplate,
     _ratio_test_replay,
+    consume_pivots,
     linprog_batch_built,
 )
 
@@ -466,8 +469,13 @@ def _replay_group(
             live[left] = False
         if it >= _PH1_CAP:
             # replay budget (not the solver's): leave None -> fallback
+            get_registry().counter(
+                "repro_lp_replay_budget_exhausted_total",
+                "replay groups that hit the _PH1/_PH2 pivot budget",
+            ).inc()
             break
 
+    _trace.add("ph1_pivots", int(it))
     if not ph2.any():
         return
     # ---- phase-2 rebuild + zero-pivot certificate ---------------------
@@ -724,7 +732,12 @@ def _replay_phase2(
             break
         if it >= _PH2_CAP:
             # replay budget (not the solver's): leave None -> fallback
+            get_registry().counter(
+                "repro_lp_replay_budget_exhausted_total",
+                "replay groups that hit the _PH1/_PH2 pivot budget",
+            ).inc()
             break
+    _trace.add("ph2_pivots", int(it))
 
 
 def solve_cover_packing_batch(
@@ -777,16 +790,32 @@ def solve_lp_batch(
     parity/debug mode of ``SubproblemConfig.lp_solver="simplex"``) with
     ``lp.linprog_batch_built`` via their shared templates.  Output is
     positionally aligned with the input and bit-identical either way."""
-    if force_simplex:
-        results: List[Optional[LPResult]] = [None] * len(probs)
-    else:
-        results = solve_cover_packing_batch(probs, max_iter=max_iter)
-    todo = [i for i, r in enumerate(results) if r is None]
-    if todo:
-        built = [probs[i].materialize() for i in todo]
-        out = linprog_batch_built(built, max_iter=max_iter)
-        for i, r in zip(todo, out):
-            results[i] = r
+    with _trace.span("lp.solve", n=len(probs),
+                     force_simplex=force_simplex) as sp:
+        if force_simplex:
+            results: List[Optional[LPResult]] = [None] * len(probs)
+        else:
+            with _trace.span("lp.replay", n=len(probs)):
+                results = solve_cover_packing_batch(probs, max_iter=max_iter)
+        todo = [i for i, r in enumerate(results) if r is None]
+        if todo:
+            with _trace.span("lp.simplex", n=len(todo)) as ssp:
+                built = [probs[i].materialize() for i in todo]
+                out = linprog_batch_built(built, max_iter=max_iter)
+                ssp.set(pivots=consume_pivots())
+                for i, r in zip(todo, out):
+                    results[i] = r
+        # batch-granular instrument sync: hot loops above stay untouched
+        reg = get_registry()
+        reg.counter("repro_lp_replay_solved_total",
+                    "instances solved by exact Bland replay").inc(
+                        len(probs) - len(todo))
+        if not force_simplex:
+            reg.counter("repro_lp_simplex_fallback_total",
+                        "instances that fell back to the stacked "
+                        "simplex").inc(len(todo))
+        sync_template_cache(subset_template_cache())
+        sp.set(replay_solved=len(probs) - len(todo), fallback=len(todo))
     return results  # type: ignore[return-value]
 
 

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..kernels.minplus import minplus_step
+from ..obs import trace as _trace
 from .cluster import Cluster
 from .job import Allocation, JobSpec
 from .pricing import PriceTable
@@ -223,15 +224,16 @@ class WorkloadDP:
             backend = self.cluster.backend.minplus_default()
         self._ensure_plan(t_end)
         k = t_end - a + 1
-        C = np.full((k + 1, Q + 1), np.inf)
-        C[0, 0] = 0.0
-        choice = np.full((k + 1, Q + 1), -1, dtype=np.int64)
-        for t in range(a, t_end + 1):
-            tcost = self._theta_costs(t)
-            cur, ch = minplus_step(C[t - a], tcost, backend=backend)
-            C[t - a + 1] = cur
-            choice[t - a + 1] = ch
-        self._choice = choice
+        with _trace.span("dp.sweep", slots=k, quanta=Q, backend=backend):
+            C = np.full((k + 1, Q + 1), np.inf)
+            C[0, 0] = 0.0
+            choice = np.full((k + 1, Q + 1), -1, dtype=np.int64)
+            for t in range(a, t_end + 1):
+                tcost = self._theta_costs(t)
+                cur, ch = minplus_step(C[t - a], tcost, backend=backend)
+                C[t - a + 1] = cur
+                choice[t - a + 1] = ch
+            self._choice = choice
         return C
 
     def reconstruct(self, t_end: int, C: np.ndarray) -> Optional[DPResult]:

@@ -67,6 +67,19 @@ class LPResult:
     objective: float
 
 
+# process-wide pivot tally (observability): every pivot loop adds its
+# iterations here at batch granularity; ``consume_pivots`` reads-and-
+# resets at a solve boundary (obs spans / registry counters). A bare
+# int-in-list keeps the hot loops at one C-level add per pivot pass.
+_pivot_tally = [0]
+
+
+def consume_pivots() -> int:
+    """Pivot count accumulated since the last call (then reset)."""
+    n, _pivot_tally[0] = _pivot_tally[0], 0
+    return n
+
+
 def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
     """Scalar pivot, used only on the cold drive-artificials-out path."""
     T[row] /= T[row, col]
@@ -136,6 +149,7 @@ def _simplex_core(T: np.ndarray, basis: np.ndarray, n_total: int,
             np.multiply(colv[:, None], T[row][None, :], out=buf)
             np.subtract(T, buf, out=T)
         basis[row] = col
+        _pivot_tally[0] += 1
     return "maxiter"
 
 
@@ -517,6 +531,7 @@ def _core_single(CON: np.ndarray, OBJ: np.ndarray, basis: np.ndarray,
         if abs(oc) > 1e-12:
             OBJ -= oc * CON[row]
         basis[row] = col
+        _pivot_tally[0] += 1
     return "maxiter"
 
 
@@ -617,6 +632,7 @@ def _core_batch(CON: np.ndarray, OBJ: np.ndarray, basis: np.ndarray,
         OBJ[act] -= ocoef[:, None] * prow
         basis[act, row] = col
         it += 1
+        _pivot_tally[0] += k
         if it >= max_iter:
             for b in act:
                 status[b] = "maxiter"

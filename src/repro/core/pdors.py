@@ -21,6 +21,8 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..obs import trace as _trace
+from ..obs.pd_gap import PDGapTracker
 from .cluster import Cluster
 from .job import JobSpec
 from .pricing import PriceParams, PriceTable, estimate_price_params
@@ -78,20 +80,30 @@ class PDORS:
         self.quanta = quanta
         self.rng = np.random.default_rng(seed)
         self.records: List[AdmissionRecord] = []
+        # weak-duality telemetry (obs.pd_gap): a few float adds per offer,
+        # rng-free — decisions never read it
+        self.pd_gap = PDGapTracker(self.prices)
 
     def offer(self, job: JobSpec, plan: Optional[SolvePlan] = None
               ) -> AdmissionRecord:
-        sched = find_best_schedule(
-            job, self.cluster, self.prices, self.cluster.horizon,
-            cfg=self.cfg, quanta=self.quanta, rng=self.rng, plan=plan,
-        )
-        if sched is not None and sched.payoff > 0:
-            # Step 3: admit; commit rho updates (prices react via Q_h^r)
-            for t, alloc in sched.slots.items():
-                self.cluster.commit(t, job, alloc)
-            rec = AdmissionRecord(job, True, sched, job.utility(sched.completion - job.arrival))
-        else:
-            rec = AdmissionRecord(job, False, None, 0.0)
+        with _trace.span("offer", job=int(job.job_id)) as osp:
+            with _trace.span("offer.schedule"):
+                sched = find_best_schedule(
+                    job, self.cluster, self.prices, self.cluster.horizon,
+                    cfg=self.cfg, quanta=self.quanta, rng=self.rng, plan=plan,
+                )
+            if sched is not None and sched.payoff > 0:
+                # Step 3: admit; commit rho updates (prices react via Q_h^r)
+                with _trace.span("offer.commit", slots=len(sched.slots)):
+                    for t, alloc in sched.slots.items():
+                        self.cluster.commit(t, job, alloc)
+                rec = AdmissionRecord(job, True, sched, job.utility(sched.completion - job.arrival))
+            else:
+                rec = AdmissionRecord(job, False, None, 0.0)
+            osp.set(admitted=rec.admitted)
+        self.pd_gap.record_offer(
+            rec.admitted, sched.payoff if sched is not None else 0.0,
+            rec.utility)
         self.records.append(rec)
         return rec
 
@@ -132,16 +144,17 @@ class PDORS:
         event-driven simulator (``repro.sim``) uses the same pattern per
         arrival batch."""
         out: List[AdmissionRecord] = []
-        self.prices.prewarm()
-        plans = {}
-        if self.cfg.use_plan:
-            plans = {j.job_id: self._build_plan(j) for j in jobs}
-            solve_plans([p for p in plans.values() if p is not None])
-        for job in jobs:
-            rec = self.offer(job, plan=plans.get(job.job_id))
-            out.append(rec)
-            if rec.admitted:
-                self.prices.prewarm()
+        with _trace.span("offer.batch", jobs=len(jobs)):
+            self.prices.prewarm()
+            plans = {}
+            if self.cfg.use_plan:
+                plans = {j.job_id: self._build_plan(j) for j in jobs}
+                solve_plans([p for p in plans.values() if p is not None])
+            for job in jobs:
+                rec = self.offer(job, plan=plans.get(job.job_id))
+                out.append(rec)
+                if rec.admitted:
+                    self.prices.prewarm()
         return out
 
     def run(self, jobs: List[JobSpec]) -> PDORSResult:

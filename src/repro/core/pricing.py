@@ -19,6 +19,8 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from ..obs import trace as _trace
+from ..obs.metrics import get_registry
 from .cluster import Cluster
 from .job import JobSpec, Resource
 
@@ -211,20 +213,25 @@ class PriceTable:
             for t in range(T)
         ):
             return
-        if cl.backend.is_device:
-            mats = cl.backend.to_host(self.device_tensor())
-            for t in range(cl.horizon):
+        with _trace.span("price.prewarm", slots=T,
+                         device=cl.backend.is_device):
+            get_registry().counter(
+                "repro_price_prewarm_total",
+                "full (T,H,R) price-tensor rebuilds").inc()
+            if cl.backend.is_device:
+                mats = cl.backend.to_host(self.device_tensor())
+                for t in range(cl.horizon):
+                    self._matrix_cache[t] = (version, mats[t])
+                return
+            # NumpyBackend.price_tensor is the exact clip/divide/pow
+            # sequence this branch always ran — one shared implementation,
+            # bit-parity preserved
+            mats = cl.backend.price_tensor(
+                cl._used[:T], cl.capacity_matrix, self.ceiling_vector(),
+                self.params.L,
+            )
+            for t in range(T):
                 self._matrix_cache[t] = (version, mats[t])
-            return
-        # NumpyBackend.price_tensor is the exact clip/divide/pow sequence
-        # this branch always ran — one shared implementation, bit-parity
-        # preserved
-        mats = cl.backend.price_tensor(
-            cl._used[:T], cl.capacity_matrix, self.ceiling_vector(),
-            self.params.L,
-        )
-        for t in range(T):
-            self._matrix_cache[t] = (version, mats[t])
 
     def worker_price(self, t: int, h: int, job: JobSpec) -> float:
         """p_h^w[t] = sum_r p_h^r[t] alpha_i^r (paper, below Eq. 26)."""

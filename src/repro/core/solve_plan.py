@@ -56,6 +56,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trace
 from .cluster import Cluster
 from .cover_packing import (
     CoverPackingLP,
@@ -204,7 +205,11 @@ class SolvePlan:
         self.trivial: Dict[Tuple[int, int], Optional[ThetaResult]] = {}
         self.lp_built: List = []         # pre-built tableaus (lp._Prob)
         self.lp_results: Optional[List[LPResult]] = None
-        self._collect(prices, skip or set())
+        with _trace.span("plan.build", job=int(job.job_id),
+                         slots=t_hi - t_lo + 1, quanta=self.quanta) as sp:
+            self._collect(prices, skip or set())
+            sp.set(n_lp=len(self.lp_built), n_pending=len(self.pending),
+                   n_trivial=len(self.trivial))
 
     # ------------------------------------------------------------------
     def fresh(self) -> bool:
@@ -224,27 +229,29 @@ class SolvePlan:
         wdem, sdem = cluster.demand_vectors(job)
 
         # ---- phase 2: fused (W, H) bundle pass over every slot --------
-        if cluster.backend.is_device:
-            # full-horizon operands keep the jitted reduction at ONE
-            # static shape (a per-plan [t_lo:t_hi] slice would retrace
-            # per distinct window width); rows below t_lo are computed
-            # and ignored — device-side flops are free next to a retrace
-            price_op = prices.device_tensor()
-            free_op = cluster.device_free_tensor()
-            off = 0
-        else:
-            price_op = np.stack([prices.price_matrix(t) for t in ts])
-            free_op = np.stack([cluster.free_matrix(t) for t in ts])
-            off = self.t_lo
-        wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
-            price_op, free_op, wdem, sdem, job.gamma,
-        )
-        for t in ts:
-            i = t - off
-            self.snaps[t] = PriceSnapshot(
-                job, cluster, prices, t,
-                bundle=(wp[i], sp[i], co[i], mw[i], ms[i]),
+        with _trace.span("plan.bundle", slots=len(ts),
+                         backend=type(cluster.backend).__name__):
+            if cluster.backend.is_device:
+                # full-horizon operands keep the jitted reduction at ONE
+                # static shape (a per-plan [t_lo:t_hi] slice would retrace
+                # per distinct window width); rows below t_lo are computed
+                # and ignored — device-side flops are free next to a retrace
+                price_op = prices.device_tensor()
+                free_op = cluster.device_free_tensor()
+                off = 0
+            else:
+                price_op = np.stack([prices.price_matrix(t) for t in ts])
+                free_op = np.stack([cluster.free_matrix(t) for t in ts])
+                off = self.t_lo
+            wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
+                price_op, free_op, wdem, sdem, job.gamma,
             )
+            for t in ts:
+                i = t - off
+                self.snaps[t] = PriceSnapshot(
+                    job, cluster, prices, t,
+                    bundle=(wp[i], sp[i], co[i], mw[i], ms[i]),
+                )
 
         # ---- per-level constants (independent of t) -------------------
         vs = np.arange(1, Q + 1, dtype=np.float64) * self.unit
@@ -300,34 +307,36 @@ class SolvePlan:
                     if th is not None:
                         icost[i] = th.cost
             # vectorized dominance bound + prune stats over all levels
-            bound = snap.greedy_lb_vec(wsum_min, s_min)
-            i_w, j_s = _prune_keys(snap, W1, S1, cfg)
-            Ms = np.empty(Q, dtype=np.int64)
-            maxw_sum = np.empty(Q)
-            bundle_sum = np.empty(Q)
-            stats_by_key: Dict[Tuple[int, int], tuple] = {}
-            for i in todo:
-                key = (int(i_w[i]), int(j_s[i]))
-                hit = stats_by_key.get(key)
-                if hit is None:
-                    hit = _prune_fill(snap, key, cfg)
-                    stats_by_key[key] = hit
-                Ms[i] = len(hit[0])
-                maxw_sum[i] = hit[1]
-                bundle_sum[i] = hit[2]
-            # branch-for-branch _dominance_class as level vectors:
-            # np.select takes the FIRST matching condition, which is the
-            # scalar early-return chain verbatim
-            prune_dead = (Ms == 0) | (maxw_sum < W1 - 1e-9)
-            dom_code = np.select(
-                [hard_inf,                    # external infeasible: skip
-                 ambiguous,                   # tolerance band: solve
-                 icost > bound,               # internal might lose: solve
-                 prune_dead,                  # reference bails pre-round
-                 bundle_sum < W1 + 1e-6],     # can't certify: solve
-                [_DOM_SKIP, _DOM_SOLVE, _DOM_SOLVE, _DOM_SKIP, _DOM_SOLVE],
-                default=_DOM_SKIP_BURN,
-            )
+            with _trace.span("plan.classify", t=t, levels=len(todo)):
+                bound = snap.greedy_lb_vec(wsum_min, s_min)
+                i_w, j_s = _prune_keys(snap, W1, S1, cfg)
+                Ms = np.empty(Q, dtype=np.int64)
+                maxw_sum = np.empty(Q)
+                bundle_sum = np.empty(Q)
+                stats_by_key: Dict[Tuple[int, int], tuple] = {}
+                for i in todo:
+                    key = (int(i_w[i]), int(j_s[i]))
+                    hit = stats_by_key.get(key)
+                    if hit is None:
+                        hit = _prune_fill(snap, key, cfg)
+                        stats_by_key[key] = hit
+                    Ms[i] = len(hit[0])
+                    maxw_sum[i] = hit[1]
+                    bundle_sum[i] = hit[2]
+                # branch-for-branch _dominance_class as level vectors:
+                # np.select takes the FIRST matching condition, which is
+                # the scalar early-return chain verbatim
+                prune_dead = (Ms == 0) | (maxw_sum < W1 - 1e-9)
+                dom_code = np.select(
+                    [hard_inf,                  # external infeasible: skip
+                     ambiguous,                 # tolerance band: solve
+                     icost > bound,             # internal might lose: solve
+                     prune_dead,                # reference bails pre-round
+                     bundle_sum < W1 + 1e-6],   # can't certify: solve
+                    [_DOM_SKIP, _DOM_SOLVE, _DOM_SOLVE, _DOM_SKIP,
+                     _DOM_SOLVE],
+                    default=_DOM_SKIP_BURN,
+                )
 
             for i in todo:
                 v = i + 1
@@ -438,47 +447,51 @@ class SolvePlan:
         derived generator in "derived" mode."""
         if self.lp_results is None:
             self.solve()
-        cfg, job = self.cfg, self.job
-        S = cfg.rounding_rounds
-        # rng-free prep hoisted out of the ordered loop: Eqs. (27)-(28)'s
-        # scale/floor/frac per optimal-LP candidate, op-for-op the block
-        # round_cover_packing_structured computes before its draw
-        prep: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        for p in self.pending:
-            if p.action != _A_LP:
-                continue
-            res = self.lp_results[p.lp_index]
-            if res.status != "optimal" or res.x is None:
-                continue
-            xp = np.maximum(res.x, 0.0) * self._g_delta(p)
-            lo = np.floor(xp)
-            prep[p.lp_index] = (lo, xp - lo)
-        # rng-free grid entries first (order-free; setdefault preserves
-        # the "lazily pre-solved outside the plan" precedence)
-        for key, val in self.trivial.items():
-            memo.setdefault(key, val)
-        work: List[Tuple[_Pending, np.ndarray]] = []
-        keys: List[Tuple[int, int]] = []
-        for p in self.pending:
-            key = (p.t, p.v)
-            if key in memo:        # lazily pre-solved outside the plan
-                continue
-            if p.action == _A_INT_BURN:
-                _burn_rounding_block(cfg, rng_for(p.t, p.v), p.burn_M)
-                memo[key] = p.internal
-            else:
-                hit = prep.get(p.lp_index)
-                if hit is None:
-                    # external died pre-rounding: no draw, internal only
-                    memo[key] = p.internal
+        with _trace.span("plan.resolve", pending=len(self.pending)) as rsp:
+            cfg, job = self.cfg, self.job
+            S = cfg.rounding_rounds
+            # rng-free prep hoisted out of the ordered loop: Eqs.
+            # (27)-(28)'s scale/floor/frac per optimal-LP candidate,
+            # op-for-op the block round_cover_packing_structured computes
+            # before its draw
+            prep: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+            for p in self.pending:
+                if p.action != _A_LP:
                     continue
-                lo, frac = hit
-                X = (lo[None, :]
-                     + (rng_for(p.t, p.v).random((S, lo.size))
-                        < frac[None, :])).astype(np.int64)
-                work.append((p, X))
-                keys.append(key)
-        self._finish_batched(work, keys, memo)
+                res = self.lp_results[p.lp_index]
+                if res.status != "optimal" or res.x is None:
+                    continue
+                xp = np.maximum(res.x, 0.0) * self._g_delta(p)
+                lo = np.floor(xp)
+                prep[p.lp_index] = (lo, xp - lo)
+            # rng-free grid entries first (order-free; setdefault preserves
+            # the "lazily pre-solved outside the plan" precedence)
+            for key, val in self.trivial.items():
+                memo.setdefault(key, val)
+            work: List[Tuple[_Pending, np.ndarray]] = []
+            keys: List[Tuple[int, int]] = []
+            for p in self.pending:
+                key = (p.t, p.v)
+                if key in memo:        # lazily pre-solved outside the plan
+                    continue
+                if p.action == _A_INT_BURN:
+                    _burn_rounding_block(cfg, rng_for(p.t, p.v), p.burn_M)
+                    memo[key] = p.internal
+                else:
+                    hit = prep.get(p.lp_index)
+                    if hit is None:
+                        # external died pre-rounding: no draw, internal only
+                        memo[key] = p.internal
+                        continue
+                    lo, frac = hit
+                    X = (lo[None, :]
+                         + (rng_for(p.t, p.v).random((S, lo.size))
+                            < frac[None, :])).astype(np.int64)
+                    work.append((p, X))
+                    keys.append(key)
+            rsp.set(rounded=len(work))
+            with _trace.span("plan.finish", candidates=len(work)):
+                self._finish_batched(work, keys, memo)
 
     def _g_delta(self, p: _Pending) -> float:
         """G_delta for one candidate (Theorems 3-4) — the branch

@@ -45,6 +45,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trace
+from ..obs.metrics import get_registry
 from .cluster import Cluster
 from .job import Allocation, JobSpec
 from .lp import linprog
@@ -217,6 +219,7 @@ class PriceSnapshot:
                 if p not in self._internal_cache]
         if not todo:
             return
+        _trace.add("theta_internal_batch", len(todo))
         arr = np.array(todo, dtype=np.float64)            # (K, 2)
         wdem_a = self.wdem[self.act]
         sdem_a = self.sdem[self.act]
@@ -829,9 +832,15 @@ def solve_theta_external(
     cand = _external_candidate(job, snap, v, cfg)
     if cand is None:
         return None
-    if cfg.lp_fault_hook is not None:
-        cfg.lp_fault_hook("lp")
-    res = linprog(cand.c, A_ub=cand.A_ub, b_ub=cand.b_ub)
+    # scalar (non-plan) LP dispatch — the lazy fallback path; counted so
+    # the batched-vs-lazy split is visible in the registry
+    get_registry().counter(
+        "repro_lp_scalar_dispatch_total",
+        "external-case LPs solved one-at-a-time (non-plan lazy path)").inc()
+    with _trace.span("lp.scalar"):
+        if cfg.lp_fault_hook is not None:
+            cfg.lp_fault_hook("lp")
+        res = linprog(cand.c, A_ub=cand.A_ub, b_ub=cand.b_ub)
     return _external_finish(job, snap, cand, res, cfg, rng)
 
 

@@ -30,10 +30,11 @@ from the parity-guaranteed paths (see ``minplus_step``).
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Tuple
 
 import numpy as np
+
+from ..obs.metrics import warn_once_event
 
 _INF = float("inf")
 _pallas_broken: Optional[str] = None  # first failure reason, warn once
@@ -167,10 +168,11 @@ def minplus_pallas(
         return best, choice
     except Exception as e:  # missing jax, lowering failure, ...
         _pallas_broken = f"{type(e).__name__}: {e}"
-        warnings.warn(
+        warn_once_event(
+            "repro_pallas_fallback_total", "minplus",
             f"minplus Pallas path unavailable ({_pallas_broken}); "
             "falling back to NumPy",
-            RuntimeWarning,
+            kernel="minplus", reason=_pallas_broken,
         )
         return minplus_numpy(prev, tcost)
 

@@ -38,10 +38,11 @@ the snapshot's host sync point under the jax backend.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Tuple
 
 import numpy as np
+
+from ..obs.metrics import warn_once_event
 
 _pallas_broken: Optional[str] = None   # first failure reason, warn once
 _jnp_bundle = None                     # lazily created jit
@@ -200,10 +201,11 @@ def price_bundle_pallas(price, free, wdem: np.ndarray, sdem: np.ndarray,
         return out[0], out[1], out[2], max_w, max_s
     except Exception as e:  # missing jax, lowering failure, ...
         _pallas_broken = f"{type(e).__name__}: {e}"
-        warnings.warn(
+        warn_once_event(
+            "repro_pallas_fallback_total", "pricing.bundle",
             f"pricing Pallas path unavailable ({_pallas_broken}); "
             "falling back to jnp",
-            RuntimeWarning,
+            kernel="pricing.bundle", reason=_pallas_broken,
         )
         out = price_bundle_jnp(price, free, wdem, sdem, gamma)
         return out[0], out[1], out[2], max_w, max_s
@@ -332,10 +334,11 @@ def price_bundle_batch_pallas(price, free, wdem: np.ndarray,
         return out[0], out[1], out[2], max_w, max_s
     except Exception as e:  # missing jax, lowering failure, ...
         _pallas_broken = f"{type(e).__name__}: {e}"
-        warnings.warn(
+        warn_once_event(
+            "repro_pallas_fallback_total", "pricing.bundle_batch",
             f"pricing Pallas batch path unavailable ({_pallas_broken}); "
             "falling back to jnp",
-            RuntimeWarning,
+            kernel="pricing.bundle_batch", reason=_pallas_broken,
         )
         out = price_bundle_batch_jnp(price, free, wdem, sdem, gamma)
         return out[0], out[1], out[2], max_w, max_s

@@ -59,6 +59,8 @@ from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 import numpy as np
 
 from ..core.job import Allocation, JobSpec
+from ..obs import trace as _trace
+from ..obs.metrics import get_registry
 from .events import Event, EventKind, EventQueue
 from .metrics import MetricsCollector
 from .policy import SchedulingPolicy, derived_rng
@@ -88,6 +90,10 @@ class SimReport:
     metrics: MetricsCollector
     states: Dict[int, JobState]
     slots_run: int
+    # primal-dual telemetry snapshot (obs.pd_gap) when the policy tracks
+    # it; kept OUT of ``summary`` so cross-policy summary comparisons
+    # (e.g. pdors vs the frozen reference) stay telemetry-agnostic
+    pd_gap: Optional[Dict] = None
 
 
 class SimKilled(RuntimeError):
@@ -139,6 +145,8 @@ class SimEngine:
         kill_at: Optional[int] = None,
         refail_rate: float = 0.0,
         refail_delay: Tuple[int, int] = (1, 8),
+        trace: Optional["_trace.Tracer"] = None,
+        metrics_mode: str = "exact",
     ):
         self.window = window
         self.policy = policy
@@ -146,6 +154,11 @@ class SimEngine:
         self.max_slots = max_slots
         self.patience = patience
         self.check_ledger = check_ledger
+        # observability: an explicit Tracer is activated for the duration
+        # of the run (run()/recover()) without touching the process-global
+        # tracer installed via REPRO_TRACE; None leaves whatever is
+        # globally installed (possibly nothing) in effect
+        self._trace = trace
         # crash-consistency: snapshot every K slots (None = never) and
         # journal stream pulls between snapshots; kill_at injects a
         # SimKilled at the named slot (chaos tests / recovery drills)
@@ -158,7 +171,8 @@ class SimEngine:
         self.refail_rate = float(refail_rate)
         self.refail_delay = refail_delay
         self.metrics = MetricsCollector(
-            window.cluster.resources, window.cluster.num_machines
+            window.cluster.resources, window.cluster.num_machines,
+            mode=metrics_mode,
         )
         self.states: Dict[int, JobState] = {}
         # incremental active-set index: the slot loop touches only jobs
@@ -396,6 +410,7 @@ class SimEngine:
                 oc.completed_at = t
                 oc.utility = js.job.utility(t - js.orig_arrival)
                 self.metrics.count("completion")
+                self.metrics.job_done(oc)
                 self._notify(EventKind.COMPLETION, job_id, t)
 
     def _check_patience(self, t: int) -> None:
@@ -445,15 +460,25 @@ class SimEngine:
         point when the stream died with the process). Because every
         random decision derives from identity-keyed seeds, the recovered
         run's summary equals the uninterrupted run's bit-for-bit."""
+        if self._trace is not None:
+            with _trace.activate(self._trace):
+                return self._recover_inner(events)
+        return self._recover_inner(events)
+
+    def _recover_inner(self, events: Optional[Iterable[Event]]) -> SimReport:
         ck = self._checkpoint
         if ck is None:
             raise RuntimeError(
                 "no checkpoint to recover from (run with checkpoint_every)"
             )
+        get_registry().counter(
+            "repro_sim_recoveries_total",
+            "checkpoint restores (SimEngine.recover)").inc()
         tail = list(self.journal)
-        (self.window, self.policy, self.metrics, self.states,
-         self.queue, self._active, self._awaiting, self._incidents,
-         self._pending) = copy.deepcopy(ck.state)
+        with _trace.span("sim.recover", slot=ck.slot, consumed=ck.consumed):
+            (self.window, self.policy, self.metrics, self.states,
+             self.queue, self._active, self._awaiting, self._incidents,
+             self._pending) = copy.deepcopy(ck.state)
         self.journal = []
         self._consumed = ck.consumed
         self._t = ck.slot
@@ -462,13 +487,19 @@ class SimEngine:
             self._stream = iter(tail)
         else:
             self._stream = itertools.islice(iter(events), ck.consumed, None)
-        return self._loop()
+        return self._run_loop()
 
     # ------------------------------------------------------------------
     def run(self, events: Iterable[Event]) -> SimReport:
         self._stream = iter(events)
         self._pending = self._pull()
         self._t = 0
+        return self._run_loop()
+
+    def _run_loop(self) -> SimReport:
+        if self._trace is not None:
+            with _trace.activate(self._trace):
+                return self._loop()
         return self._loop()
 
     def _loop(self) -> SimReport:
@@ -478,7 +509,8 @@ class SimEngine:
                     and t % self.checkpoint_every == 0
                     and (self._checkpoint is None
                          or self._checkpoint.slot != t)):
-                self._take_checkpoint(t)
+                with _trace.span("sim.checkpoint", t=t):
+                    self._take_checkpoint(t)
             if self.kill_at is not None and t == self.kill_at:
                 raise SimKilled(f"engine killed at slot {t} (kill_at)")
             while self._pending is not None and self._pending.time <= t:
@@ -487,7 +519,8 @@ class SimEngine:
             busy = bool(self._active) or bool(self._awaiting)
             if not busy and not len(self.queue) and self._pending is None:
                 break
-            self.window.advance_to(t)
+            with _trace.span("sim.advance", t=t):
+                self.window.advance_to(t)
 
             batch: List[Event] = []
             departures: List[int] = []
@@ -515,7 +548,8 @@ class SimEngine:
                         f"unsupported queued event kind {ev.kind!r} at t={t}"
                     )
             if batch:
-                self._handle_arrivals(batch, t)
+                with _trace.span("sim.arrivals", t=t, jobs=len(batch)):
+                    self._handle_arrivals(batch, t)
             for job_id in departures:
                 js = self.states.get(job_id)
                 if js is None or js.finished or not js.active \
@@ -573,12 +607,63 @@ class SimEngine:
         health = getattr(self.policy, "health_stats", None)
         if callable(health):
             summary["policy_health"] = health()
+        pd_snap = None
+        pd = getattr(self.policy, "pd_gap_stats", None)
+        if callable(pd):
+            pd_snap = pd() or None
+        faults = getattr(self.policy, "fault_stats", None)
+        if callable(faults):
+            fs = faults()
+            if fs:
+                summary["solver_faults"] = fs
+        self._publish_registry(summary, pd_snap)
         return SimReport(
             summary=summary,
             metrics=self.metrics,
             states=self.states,
             slots_run=self._t,
+            pd_gap=pd_snap,
         )
+
+    def _publish_registry(self, summary: Dict,
+                          pd_snap: Optional[Dict] = None) -> None:
+        """Mirror engine-scope stats into the metrics registry at the run's
+        ONE sync point. Gauges are SET from the summary — which is computed
+        from checkpoint-restored state on a recovered run — so recovery
+        publishes bit-identical values to an uninterrupted run."""
+        reg = get_registry()
+        ph = summary.get("policy_health")
+        if isinstance(ph, dict):
+            for k, v in ph.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    reg.gauge(
+                        "repro_policy_health_" + k,
+                        "ResilientPolicy health counter (summary view)",
+                    ).set(float(v))
+        fs = summary.get("solver_faults")
+        if isinstance(fs, dict):
+            for k, v in fs.items():
+                reg.gauge(
+                    "repro_" + k,
+                    "solver-fault injector dispatch stat (summary view)",
+                ).set(float(v))
+        for k in ("pd_offers", "pd_admits", "pd_primal", "pd_dual",
+                  "duality_gap", "empirical_ratio", "ratio_bound"):
+            v = (pd_snap or {}).get(k)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                name = k if k.startswith("pd_") else "pd_" + k
+                reg.gauge(
+                    "repro_" + name,
+                    "primal-dual telemetry (summary view)",
+                ).set(float(v))
+        # jit retrace tallies (the in-trace increments in kernels.pricing
+        # fire only while jax retraces the fused bundle kernels)
+        from ..kernels.pricing import TRACE_COUNTS
+        for k, v in TRACE_COUNTS.items():
+            reg.gauge(
+                "repro_jit_retrace_" + k,
+                "jax retraces of the fused snapshot-bundle kernel",
+            ).set(float(v))
 
 
 def simulate(

@@ -14,6 +14,24 @@ Conventions: JCT and utility are measured for completed jobs only;
 Queueing delay is first-service slot minus arrival slot (0 for a job
 served in its arrival slot). Utilization averages are reported both over
 all simulated slots and over busy slots (>= 1 active job).
+
+Two collection modes behind one API (``mode=``):
+
+* ``"exact"`` (default) — every ``JobOutcome`` and per-slot row is
+  retained; percentiles are computed on the full sample. Tests and the
+  figure scripts read ``outcomes`` / ``per_slot`` / ``jct_cdf`` directly,
+  so this stays the default.
+* ``"streaming"`` — O(1) memory in trace length: the engine hands each
+  completed outcome to ``job_done``, which folds it into running sums,
+  P-squared quantile estimators (``P2Quantile``) and a deterministic
+  fixed-size reservoir (for the JCT CDF), then DROPS the record; per-slot
+  utilization keeps running sums instead of the row list. ``summary()``
+  emits the same keys; JCT/queue-delay percentiles become estimates, and
+  queue-delay percentiles cover completed jobs only (a still-running
+  served job's delay is not folded in until it completes). Jobs that
+  finish without completing (rejected/departed/evicted) stay in
+  ``outcomes`` — they carry the censoring columns and are few relative
+  to completions on the traces this mode targets.
 """
 from __future__ import annotations
 
@@ -22,6 +40,142 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+class P2Quantile:
+    """Jain & Chlamtac's P-squared algorithm: one quantile, five markers,
+    O(1) memory and O(1) per observation — no stored sample.
+
+    Until five observations arrive the estimate is the exact percentile
+    of what has been seen. Deterministic (no rng), deepcopy-safe, so a
+    checkpointed estimator replays bit-identically under
+    ``SimEngine.recover``."""
+
+    __slots__ = ("p", "n", "q", "npos", "dnpos", "_init")
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {p}")
+        self.p = float(p)
+        self.n = 0
+        self._init: List[float] = []
+        self.q: List[float] = []            # marker heights
+        self.npos: List[float] = []         # marker positions (1-based)
+        self.dnpos = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+
+    def observe(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        if len(self._init) < 5:
+            self._init.append(x)
+            if len(self._init) == 5:
+                self.q = sorted(self._init)
+                self.npos = [1.0, 2.0, 3.0, 4.0, 5.0]
+            return
+        q, npos = self.q, self.npos
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            npos[i] += 1.0
+        desired = [1.0 + self.dnpos[i] * (self.n - 1) for i in range(5)]
+        for i in (1, 2, 3):
+            d = desired[i] - npos[i]
+            if ((d >= 1.0 and npos[i + 1] - npos[i] > 1.0)
+                    or (d <= -1.0 and npos[i - 1] - npos[i] < -1.0)):
+                d = 1.0 if d > 0 else -1.0
+                qp = self._parabolic(i, d)
+                if q[i - 1] < qp < q[i + 1]:
+                    q[i] = qp
+                else:                        # parabolic left order: linear
+                    q[i] = self._linear(i, d)
+                npos[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self.q, self.npos
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+        )
+
+    def _linear(self, i: int, d: float) -> float:
+        q, n = self.q, self.npos
+        j = i + int(d)
+        return q[i] + d * (q[j] - q[i]) / (n[j] - n[i])
+
+    def value(self) -> float:
+        if len(self._init) < 5:
+            if not self._init:
+                return 0.0
+            return float(np.percentile(
+                np.asarray(self._init, dtype=float), self.p * 100.0))
+        return float(self.q[2])
+
+
+class _Reservoir:
+    """Fixed-size uniform sample (algorithm R) with a fixed-seed rng:
+    the kept sample is a pure function of the observation sequence, so a
+    deepcopied (checkpointed) reservoir replays bit-identically."""
+
+    __slots__ = ("k", "seen", "sample", "_rng")
+
+    def __init__(self, k: int = 512):
+        self.k = int(k)
+        self.seen = 0
+        self.sample: List[float] = []
+        self._rng = np.random.default_rng(0x5EED)
+
+    def observe(self, x: float) -> None:
+        self.seen += 1
+        if len(self.sample) < self.k:
+            self.sample.append(float(x))
+            return
+        j = int(self._rng.integers(0, self.seen))
+        if j < self.k:
+            self.sample[j] = float(x)
+
+
+class _StreamState:
+    """Running aggregates for ``mode="streaming"`` — everything
+    ``summary()`` needs about completed jobs and elapsed slots, in O(1)
+    memory (plus the fixed-size CDF reservoir)."""
+
+    def __init__(self, resources: List[str]):
+        self.n_completed = 0
+        self.sum_jct = 0.0
+        self.sum_utility = 0.0
+        self.sum_goodput = 0.0
+        self.sum_preempt = 0
+        self.jct_p50 = P2Quantile(0.50)
+        self.jct_p95 = P2Quantile(0.95)
+        self.delay_p50 = P2Quantile(0.50)
+        self.delay_p95 = P2Quantile(0.95)
+        self.jct_sample = _Reservoir()
+        self.slots = 0
+        self.busy_slots = 0
+        self.util_sum = {r: 0.0 for r in resources}
+        self.util_busy_sum = {r: 0.0 for r in resources}
+
+    def absorb(self, oc: "JobOutcome") -> None:
+        self.n_completed += 1
+        jct = float(oc.jct)
+        self.sum_jct += jct
+        self.sum_utility += float(oc.utility)
+        self.sum_goodput += float(oc.samples_trained)
+        self.sum_preempt += int(oc.preemptions)
+        self.jct_p50.observe(jct)
+        self.jct_p95.observe(jct)
+        self.jct_sample.observe(jct)
+        if oc.queue_delay is not None:
+            self.delay_p50.observe(float(oc.queue_delay))
+            self.delay_p95.observe(float(oc.queue_delay))
 
 
 @dataclass
@@ -64,12 +218,18 @@ class MetricsCollector:
     scripts. Policies never touch this object — identical, engine-owned
     measurement is what keeps per-policy rows comparable."""
 
-    def __init__(self, resources: List[str], num_machines: int = 0):
+    def __init__(self, resources: List[str], num_machines: int = 0,
+                 mode: str = "exact"):
+        if mode not in ("exact", "streaming"):
+            raise ValueError(f"mode must be exact|streaming, got {mode!r}")
+        self.mode = mode
         self.resources = list(resources)
         self.num_machines = int(num_machines)
         self.outcomes: Dict[int, JobOutcome] = {}
         self.per_slot: List[Dict] = []
         self.event_counts: Dict[str, int] = {}
+        self._stream = (_StreamState(self.resources)
+                        if mode == "streaming" else None)
         # fault bookkeeping (repro.sim.faults)
         self._down_slots: Dict[int, int] = {}      # machine -> degraded slots
         self._open_incidents: Dict[Tuple[int, int], Dict] = {}
@@ -82,6 +242,16 @@ class MetricsCollector:
         if oc is None:
             oc = self.outcomes[job_id] = JobOutcome(job_id, arrival)
         return oc
+
+    def job_done(self, oc: JobOutcome) -> None:
+        """Completion hook (engine-called): a no-op in exact mode; in
+        streaming mode the outcome is folded into the running aggregates
+        and its record dropped — the engine never reads a completed job's
+        outcome again (completed jobs leave the active set)."""
+        if self._stream is None:
+            return
+        self._stream.absorb(oc)
+        self.outcomes.pop(oc.job_id, None)
 
     def count(self, kind: str) -> None:
         self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
@@ -113,26 +283,44 @@ class MetricsCollector:
         self, t: int, utilization: Dict[str, float], active: int,
         queued: int, degraded: Tuple[int, ...] = (),
     ) -> None:
-        self.per_slot.append(
-            {"t": t, "util": dict(utilization), "active": active,
-             "queued": queued}
-        )
+        st = self._stream
+        if st is not None:
+            st.slots += 1
+            busy = active > 0
+            if busy:
+                st.busy_slots += 1
+            for r in self.resources:
+                v = utilization.get(r, 0.0)
+                st.util_sum[r] += v
+                if busy:
+                    st.util_busy_sum[r] += v
+        else:
+            self.per_slot.append(
+                {"t": t, "util": dict(utilization), "active": active,
+                 "queued": queued}
+            )
         for h in degraded:
             self._down_slots[h] = self._down_slots.get(h, 0) + 1
 
     # ------------------------------------------------------------ report
     def jct_cdf(self) -> Tuple[List[float], List[float]]:
         """Empirical (JCT, P[JCT <= x]) over completed jobs (Fig. 12-13
-        convention: censored jobs are excluded, not imputed)."""
-        jcts = sorted(
-            oc.jct for oc in self.outcomes.values() if oc.jct is not None
-        )
+        convention: censored jobs are excluded, not imputed). Streaming
+        mode returns the CDF of the fixed-size reservoir sample."""
+        if self._stream is not None:
+            jcts = sorted(self._stream.jct_sample.sample)
+        else:
+            jcts = sorted(
+                oc.jct for oc in self.outcomes.values() if oc.jct is not None
+            )
         n = len(jcts)
         return [float(x) for x in jcts], [(i + 1) / n for i in range(n)]
 
     def summary(self) -> Dict:
         """Fold outcomes + per-slot series into one flat benchmark row
         (schema documented in docs/BENCHMARKS.md)."""
+        if self._stream is not None:
+            return self._summary_streaming()
         ocs = list(self.outcomes.values())
         offered = len(ocs)
         completed = [oc for oc in ocs if oc.completed_at is not None]
@@ -201,6 +389,77 @@ class MetricsCollector:
             "preempt_cascade_mean": mean(
                 [float(x) for x in self.cascade_depths]),
             "slots": len(self.per_slot),
+            "events": dict(sorted(self.event_counts.items())),
+        }
+
+    def _summary_streaming(self) -> Dict:
+        """The exact-mode summary schema from the running aggregates.
+        Completed jobs live in ``_StreamState``; every still-censored job
+        (in flight, rejected, departed, evicted) is still a ``JobOutcome``
+        row, so the censoring columns stay exact — only the JCT and
+        queue-delay percentiles are P-squared estimates."""
+        st = self._stream
+        ocs = list(self.outcomes.values())   # none of these completed
+        offered = st.n_completed + len(ocs)
+        departed = sum(1 for oc in ocs if oc.departed_at is not None)
+        rejected = sum(1 for oc in ocs if oc.admitted is False)
+        # every completed job was admitted (explicitly, or implicitly by
+        # being served under a slot-driven policy)
+        admitted = st.n_completed + sum(
+            1 for oc in ocs
+            if oc.admitted is True
+            or (oc.admitted is None and oc.first_service is not None)
+        )
+        wasted = float(sum(oc.samples_trained for oc in ocs))
+        trained = st.sum_goodput + wasted
+        slots = st.slots
+        repairs = [rec["repair_slots"] for rec in self.incident_log]
+        mean = lambda xs: float(np.mean(xs)) if xs else 0.0
+        if self.num_machines > 0 and slots > 0:
+            availability = 1.0 - (
+                sum(self._down_slots.values())
+                / float(self.num_machines * slots)
+            )
+        else:
+            availability = 1.0
+        nc = st.n_completed
+        return {
+            "jobs_offered": offered,
+            "jobs_admitted": admitted,
+            "jobs_completed": nc,
+            "jobs_rejected": rejected,
+            "jobs_departed": departed,
+            "jobs_evicted": sum(1 for oc in ocs if oc.evicted_at is not None),
+            "preemptions": st.sum_preempt + sum(oc.preemptions for oc in ocs),
+            "admission_rate": admitted / offered if offered else 0.0,
+            "completion_rate": nc / offered if offered else 0.0,
+            "jct_p50": st.jct_p50.value(), "jct_p95": st.jct_p95.value(),
+            "jct_mean": st.sum_jct / nc if nc else 0.0,
+            "queue_delay_p50": st.delay_p50.value(),
+            "queue_delay_p95": st.delay_p95.value(),
+            "total_utility": st.sum_utility + float(
+                sum(oc.utility for oc in ocs)),
+            "utilization_mean": {
+                r: (st.util_sum[r] / slots if slots else 0.0)
+                for r in self.resources
+            },
+            "utilization_busy_mean": {
+                r: (st.util_busy_sum[r] / st.busy_slots
+                    if st.busy_slots else 0.0)
+                for r in self.resources
+            },
+            "goodput_samples": st.sum_goodput,
+            "wasted_samples": wasted,
+            "goodput_fraction": (st.sum_goodput / trained
+                                 if trained > 0 else 1.0),
+            "machine_incidents": (len(self.incident_log)
+                                  + len(self._open_incidents)),
+            "mttr": mean([float(x) for x in repairs]),
+            "machine_availability": float(availability),
+            "preempt_cascade_max": max(self.cascade_depths, default=0),
+            "preempt_cascade_mean": mean(
+                [float(x) for x in self.cascade_depths]),
+            "slots": slots,
             "events": dict(sorted(self.event_counts.items())),
         }
 

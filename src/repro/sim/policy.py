@@ -39,7 +39,6 @@ go through the registry.
 from __future__ import annotations
 
 import math
-import warnings
 from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Tuple
@@ -57,6 +56,9 @@ from ..core.pricing import PriceParams, PriceTable
 from ..core.schedule import find_best_schedule
 from ..core.solve_plan import SolvePlan, solve_plans
 from ..core.subproblem import SolverFault, SubproblemConfig
+from ..obs import trace as _trace
+from ..obs.metrics import warn_once_event
+from ..obs.pd_gap import PDGapTracker
 from .events import Event, EventKind
 from .window import RollingWindow
 
@@ -256,6 +258,27 @@ class PDORSPolicy(SchedulingPolicy):
     def bind(self, view: RollingWindow, seed: int) -> None:
         super().bind(view, seed)
         self.prices = PriceTable(self.params, view.cluster)
+        # weak-duality telemetry (obs.pd_gap): rng-free float accumulation
+        # per offer; decisions never read it. Rebinding (a fresh window)
+        # restarts the accumulators with the fresh price table.
+        self.pd_gap = PDGapTracker(self.prices)
+
+    def pd_gap_stats(self) -> Optional[Dict[str, object]]:
+        """Primal-dual telemetry snapshot (engine folds it into the
+        summary; ``None`` before the first bind)."""
+        gap = getattr(self, "pd_gap", None)
+        return gap.snapshot() if gap is not None else None
+
+    def fault_stats(self) -> Optional[Dict[str, int]]:
+        """Solver-fault-injector dispatch counters, when a hook with
+        injector-shaped stats is attached (``sim.faults``)."""
+        hook = self.base_cfg.lp_fault_hook
+        if hook is None or not hasattr(hook, "calls"):
+            return None
+        return {
+            "solver_hook_calls": int(hook.calls),
+            "solver_hook_raised": int(getattr(hook, "raised", 0)),
+        }
 
     def _offer_cfg(self, job: JobSpec) -> tuple:
         """(cfg, rng) for one offer — peeks the attempt counter without
@@ -281,11 +304,20 @@ class PDORSPolicy(SchedulingPolicy):
             cfg, rng = self._offer_cfg(job)
         self.attempts[job.job_id] = self.attempts.get(job.job_id, 0) + 1
         rel = view.rel_job(job)
-        sched = find_best_schedule(
-            rel, view.cluster, self.prices, view.lookahead,
-            cfg=cfg, quanta=self.quanta, rng=rng, plan=plan,
+        with _trace.span("offer", job=int(job.job_id)) as osp:
+            with _trace.span("offer.schedule"):
+                sched = find_best_schedule(
+                    rel, view.cluster, self.prices, view.lookahead,
+                    cfg=cfg, quanta=self.quanta, rng=rng, plan=plan,
+                )
+            admitted = sched is not None and sched.payoff > 0
+            osp.set(admitted=admitted)
+        self.pd_gap.record_offer(
+            admitted,
+            sched.payoff if sched is not None else 0.0,
+            rel.utility(sched.completion - rel.arrival) if admitted else 0.0,
         )
-        if sched is None or sched.payoff <= 0:
+        if not admitted:
             return None
         return {view.now + t: a for t, a in sched.slots.items()}
 
@@ -302,35 +334,38 @@ class PDORSPolicy(SchedulingPolicy):
         consumed) — re-stacking after every admission would cost O(B^2)
         plan builds on admit-heavy batches."""
         dec = Decision()
-        self.prices.prewarm()
-        plans: Dict[int, Optional[SolvePlan]] = {}
-        offer_env = {}
-        if self.base_cfg.use_plan:
-            for job in event.jobs:
-                cfg, rng = self._offer_cfg(job)
-                offer_env[job.job_id] = (cfg, rng)
-                rel = view.rel_job(job)
-                plans[job.job_id] = (
-                    SolvePlan(rel, view.cluster, self.prices, cfg,
-                              rel.arrival, view.lookahead - 1,
-                              quanta=self.quanta)
-                    if rel.arrival < view.lookahead else None
-                )
-            solve_plans([p for p in plans.values() if p is not None])
-        for job in event.jobs:
-            cfg, rng = offer_env.get(job.job_id, (None, None))
-            schedule = self._offer_one(
-                job, view, plan=plans.get(job.job_id), cfg=cfg, rng=rng,
-            )
-            if schedule is None:
-                dec.admitted[job.job_id] = False
-                continue
-            view.commit_schedule(job, schedule)
-            dec.admitted[job.job_id] = True
-            dec.schedules[job.job_id] = schedule
-            # admission repriced every committed slot: rebuild the price
-            # tensor once for the remaining jobs of the batch
+        with _trace.span("offer.batch", jobs=len(event.jobs)):
             self.prices.prewarm()
+            plans: Dict[int, Optional[SolvePlan]] = {}
+            offer_env = {}
+            if self.base_cfg.use_plan:
+                for job in event.jobs:
+                    cfg, rng = self._offer_cfg(job)
+                    offer_env[job.job_id] = (cfg, rng)
+                    rel = view.rel_job(job)
+                    plans[job.job_id] = (
+                        SolvePlan(rel, view.cluster, self.prices, cfg,
+                                  rel.arrival, view.lookahead - 1,
+                                  quanta=self.quanta)
+                        if rel.arrival < view.lookahead else None
+                    )
+                solve_plans([p for p in plans.values() if p is not None])
+            for job in event.jobs:
+                cfg, rng = offer_env.get(job.job_id, (None, None))
+                schedule = self._offer_one(
+                    job, view, plan=plans.get(job.job_id), cfg=cfg, rng=rng,
+                )
+                if schedule is None:
+                    dec.admitted[job.job_id] = False
+                    continue
+                with _trace.span("offer.commit", job=int(job.job_id),
+                                 slots=len(schedule)):
+                    view.commit_schedule(job, schedule)
+                dec.admitted[job.job_id] = True
+                dec.schedules[job.job_id] = schedule
+                # admission repriced every committed slot: rebuild the
+                # price tensor once for the remaining jobs of the batch
+                self.prices.prewarm()
         return dec
 
 
@@ -639,7 +674,6 @@ class ResilientPolicy(SchedulingPolicy):
             "retry_recoveries": 0, "fallbacks": 0, "fallback_admits": 0,
             "state": "healthy",
         }
-        self._warned: set = set()
 
     def bind(self, view: RollingWindow, seed: int) -> None:
         super().bind(view, seed)
@@ -648,10 +682,21 @@ class ResilientPolicy(SchedulingPolicy):
     def health_stats(self) -> Dict[str, object]:
         return dict(self.health)
 
+    def pd_gap_stats(self):
+        f = getattr(self.inner, "pd_gap_stats", None)
+        return f() if callable(f) else None
+
+    def fault_stats(self):
+        f = getattr(self.inner, "fault_stats", None)
+        return f() if callable(f) else None
+
     def _warn_once(self, key: str, msg: str) -> None:
-        if key not in self._warned:
-            self._warned.add(key)
-            warnings.warn(msg, RuntimeWarning, stacklevel=3)
+        # every containment increments the counter; the log record is
+        # deduplicated per fault category per process (obs.metrics)
+        warn_once_event(
+            "repro_solver_fault_contained_total",
+            f"resilient:{key}", msg, policy=self.inner.name, rung=key,
+        )
 
     @contextmanager
     def _tightened(self):
