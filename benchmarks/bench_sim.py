@@ -59,8 +59,25 @@ FULL_GRID = [
     (8, 16, "philly", 500, 4.0, 0.08),
 ]
 SMOKE_GRID = [(6, 12, "google", 60, 3.0, 0.10)]
+# stream tier: one long google stream through the batched engine with
+# streaming metrics (the interactive-scale configuration), plus a pdors
+# service-latency row through the asyncio OfferService boundary
+STREAM_GRID = [(8, 16, "google", 100_000, 4.0, 0.02)]
+STREAM_SMOKE_GRID = [(6, 12, "google", 4000, 4.0, 0.02)]
+SERVICE_JOBS_CAP = 1500
 QUANTA = 12
 CALIB_JOBS = 48
+
+
+def _peak_rss_mb() -> Optional[float]:
+    """Process peak RSS in MiB (Linux ru_maxrss is KiB); None where the
+    resource module is unavailable."""
+    try:
+        import resource
+    except ImportError:  # pragma: no cover - non-posix
+        return None
+    kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return kb / 1024.0
 
 
 def chaos_plan(seed: int, H: int, max_slots: int) -> FaultPlan:
@@ -168,10 +185,156 @@ def run_point(
     return rows
 
 
+def run_stream_point(
+    H: int,
+    W: int,
+    preset: str,
+    num_jobs: int,
+    rate: float,
+    failure_rate: float,
+    seed: int,
+    policy: str = "fifo",
+) -> Dict:
+    """Sustained-throughput row: one long stream through the batched
+    engine with streaming metrics — the configuration that holds 100k-job
+    traces at interactive speed. Records wall-clock jobs/sec, the
+    engine's admission-latency quantiles, and process peak RSS."""
+    tcfg = TraceConfig(
+        preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
+        failure_rate=failure_rate,
+    )
+    cluster = make_cluster(H, W)
+    window = RollingWindow(cluster)
+    if policy.startswith("pdors"):
+        params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
+        pol = make_policy(policy, price_params=params, quanta=QUANTA)
+    else:
+        pol = make_policy(policy)
+    # the stream outlives any fixed slot budget: bound by trace length
+    max_slots = int(num_jobs / rate * 4) + 4 * W
+    engine = SimEngine(
+        window, pol, seed=seed, max_slots=max_slots,
+        patience=tcfg.patience, metrics_mode="streaming",
+        engine_mode="batched",
+    )
+    t0 = time.perf_counter()
+    report = engine.run(stream(tcfg))
+    wall = time.perf_counter() - t0
+    s = report.summary
+    lat = engine.admission_latency()
+    row = {
+        "kind": "stream", "H": H, "W": W, "preset": preset,
+        "num_jobs": num_jobs, "arrival_rate": rate,
+        "failure_rate": failure_rate, "seed": seed, "quanta": QUANTA,
+        "backend": "numpy", "faults": False, "policy": policy,
+        "engine_mode": "batched", "metrics_mode": "streaming",
+        "wall_s": wall,
+        "jobs_per_sec": num_jobs / wall if wall else float("inf"),
+        "slots_run": report.slots_run,
+        "admission_p50_ms": lat["p50_ms"],
+        "admission_p99_ms": lat["p99_ms"],
+        "admission_mean_ms": lat["mean_ms"],
+        "peak_rss_mb": _peak_rss_mb(),
+        **s,
+    }
+    rss = row["peak_rss_mb"]
+    rss_txt = f"{rss:.0f}MB" if rss is not None else "n/a"
+    print(
+        f"  {policy:>10} [stream]: {row['jobs_per_sec']:8.1f} jobs/s "
+        f"wall={wall:.1f}s slots={report.slots_run} "
+        f"done={s['jobs_completed']}/{s['jobs_offered']} "
+        f"adm p99={lat['p99_ms']:.2f}ms rss={rss_txt}",
+        flush=True,
+    )
+    return row
+
+
+def run_service_point(
+    H: int,
+    W: int,
+    preset: str,
+    num_jobs: int,
+    rate: float,
+    seed: int,
+) -> Dict:
+    """Service-latency row: pdors offers through the asyncio
+    ``OfferService`` boundary (admission batching + long-poll grant
+    queue), measuring sustained offer throughput and the service's
+    admission-latency SLO quantiles."""
+    import asyncio
+
+    from repro.core.pdors import PDORS
+    from repro.sim import OfferService, sample_jobs
+
+    n = min(num_jobs, SERVICE_JOBS_CAP)
+    tcfg = TraceConfig(preset=preset, num_jobs=n, seed=seed,
+                       arrival_rate=rate)
+    jobs = sample_jobs(tcfg, n)
+    cluster = make_cluster(H, W)
+    params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
+    sched = PDORS(cluster, params, quanta=QUANTA, seed=seed)
+
+    async def drive():
+        svc = await OfferService(sched, batch_window=0.0005).start()
+        svc.register("bench-w0", cores=H)
+        t0 = time.perf_counter()
+        recs = []
+        chunk = 64
+        for i in range(0, len(jobs), chunk):
+            recs.extend(await asyncio.gather(
+                *[svc.submit(j) for j in jobs[i:i + chunk]]))
+        wall = time.perf_counter() - t0
+        grants = 0
+        while True:
+            more = await svc.poll("bench-w0", timeout=0.01, max_items=256)
+            if not more:
+                break
+            grants += len(more)
+        lat = svc.admission_latency()
+        batches = svc.batches_total
+        await svc.close()
+        return recs, wall, lat, grants, batches
+
+    recs, wall, lat, grants, batches = asyncio.run(drive())
+    admitted = sum(1 for r in recs if r.admitted)
+    row = {
+        "kind": "service", "H": H, "W": W, "preset": preset,
+        "num_jobs": n, "arrival_rate": rate, "seed": seed,
+        "quanta": QUANTA, "backend": "numpy", "faults": False,
+        "policy": "pdors", "wall_s": wall,
+        "jobs_per_sec": n / wall if wall else float("inf"),
+        "jobs_offered": len(recs), "jobs_admitted": admitted,
+        "grants_polled": grants, "batches": batches,
+        "admission_p50_ms": lat["p50_ms"],
+        "admission_p99_ms": lat["p99_ms"],
+        "admission_mean_ms": lat["mean_ms"],
+        "peak_rss_mb": _peak_rss_mb(),
+    }
+    print(
+        f"  {'pdors':>10} [service]: {row['jobs_per_sec']:8.1f} offers/s "
+        f"adm={admitted}/{len(recs)} grants={grants} batches={batches} "
+        f"p50={lat['p50_ms']:.2f}ms p99={lat['p99_ms']:.2f}ms",
+        flush=True,
+    )
+    return row
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (< 60 s)")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream tier: one long google stream through the "
+                         "batched engine (streaming metrics, sustained "
+                         "jobs/sec + admission-latency quantiles + peak "
+                         "RSS) plus a pdors service-latency row through "
+                         "the asyncio OfferService boundary")
+    ap.add_argument("--smoke-scale", action="store_true",
+                    help="CI-sized stream tier (same rows as --stream at "
+                         "a scaled-down job count)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="override the stream tier's job count (e.g. "
+                         "--stream --jobs 100000)")
     ap.add_argument("--policies", default=",".join(DEFAULT_POLICIES),
                     help=f"comma list from {available_policies()}")
     ap.add_argument("--presets", default=None,
@@ -201,6 +364,36 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "docs/OBSERVABILITY.md")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args(argv)
+
+    if args.stream or args.smoke_scale:
+        grid = STREAM_SMOKE_GRID if args.smoke_scale else STREAM_GRID
+        all_rows: List[Dict] = []
+        for (H, W, preset, n, rate, frate) in grid:
+            if args.jobs is not None:
+                n = args.jobs
+            print(f"# stream H={H} W={W} preset={preset} jobs={n} "
+                  f"rate={rate} failures={frate} ...", flush=True)
+            t0 = time.time()
+            all_rows.append(run_stream_point(
+                H, W, preset, n, rate, frate, args.seed))
+            all_rows.append(run_service_point(
+                H, W, preset, n, rate, args.seed))
+            print(f"# point done in {time.time() - t0:.1f}s", flush=True)
+        meta = {"quanta": QUANTA, "calib_jobs": CALIB_JOBS}
+        if args.append:
+            from .bench_scheduler import merge_rows
+            doc = merge_rows(
+                args.out, all_rows, meta,
+                key_fields=("kind", "H", "W", "preset", "num_jobs",
+                            "arrival_rate", "seed", "policy"),
+            )
+        else:
+            doc = dict(meta, rows=all_rows)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {args.out} ({len(all_rows)} fresh rows, "
+              f"{len(doc['rows'])} total)")
+        return 0
 
     grid = SMOKE_GRID if args.smoke else FULL_GRID
     if args.presets:

@@ -53,10 +53,63 @@ def _points(doc: dict, policy: str) -> dict:
     return out
 
 
+def _check_stream(rows: list, args) -> int:
+    """Stream-tier gates: absolute floors/ceilings on fresh bench_sim
+    --stream/--smoke-scale rows — no baseline file involved (the floors
+    are chosen per-runner in ci.sh). Each requested gate must match at
+    least one row; a gate that would silently enforce nothing FAILS."""
+    failed = 0
+    jps_checked = rss_checked = p99_checked = 0
+    for row in rows:
+        kind = row.get("kind")
+        label = f"{row.get('policy')} [{kind}] jobs={row.get('num_jobs')}"
+        if kind == "stream":
+            if args.stream_min_jobs_per_sec is not None:
+                jps_checked += 1
+                jps = row["jobs_per_sec"]
+                ok = jps >= args.stream_min_jobs_per_sec
+                if not ok:
+                    failed += 1
+                print(f"bench_guard: {label}: {jps:.1f} jobs/s vs floor "
+                      f"{args.stream_min_jobs_per_sec:.1f} "
+                      f"{'OK' if ok else 'REGRESSION'}")
+            if (args.stream_max_rss_mb is not None
+                    and row.get("peak_rss_mb") is not None):
+                rss_checked += 1
+                rss = row["peak_rss_mb"]
+                ok = rss <= args.stream_max_rss_mb
+                if not ok:
+                    failed += 1
+                print(f"bench_guard: {label}: peak RSS {rss:.0f}MB vs "
+                      f"ceiling {args.stream_max_rss_mb:.0f}MB "
+                      f"{'OK' if ok else 'REGRESSION'}")
+        if (args.stream_max_p99_ms is not None
+                and row.get("admission_p99_ms") is not None):
+            p99_checked += 1
+            p99 = row["admission_p99_ms"]
+            ok = p99 <= args.stream_max_p99_ms
+            if not ok:
+                failed += 1
+            print(f"bench_guard: {label}: admission p99 {p99:.2f}ms vs "
+                  f"ceiling {args.stream_max_p99_ms:.2f}ms "
+                  f"{'OK' if ok else 'REGRESSION'}")
+    for gate, n, name in (
+        (args.stream_min_jobs_per_sec, jps_checked, "jobs/sec floor"),
+        (args.stream_max_rss_mb, rss_checked, "peak-RSS ceiling"),
+        (args.stream_max_p99_ms, p99_checked, "admission-p99 ceiling"),
+    ):
+        if gate is not None and n == 0:
+            print(f"bench_guard: stream {name} set but NO matching fresh "
+                  "row — gate not enforced: FAIL")
+            failed += 1
+    return 1 if failed else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("fresh", help="just-produced smoke benchmark json")
-    ap.add_argument("baseline", help="recorded baseline json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="recorded baseline json (unused in stream mode)")
     ap.add_argument("--max-drop", type=float, default=0.30,
                     help="max tolerated fractional jobs/sec drop")
     ap.add_argument("--policy", default="pdors")
@@ -69,6 +122,17 @@ def main(argv=None) -> int:
                     help="restrict the --min-speedup gate to one HxTxJOBS "
                          "grid point (e.g. 25x20x50) — the ratio is only "
                          "stable at scale; small points are noise-bound")
+    ap.add_argument("--stream-min-jobs-per-sec", type=float, default=None,
+                    help="stream mode: min sustained jobs/sec for fresh "
+                         "kind=stream rows (bench_sim --stream/"
+                         "--smoke-scale output)")
+    ap.add_argument("--stream-max-rss-mb", type=float, default=None,
+                    help="stream mode: max process peak RSS (MiB) for "
+                         "fresh kind=stream rows")
+    ap.add_argument("--stream-max-p99-ms", type=float, default=None,
+                    help="stream mode: max admission-latency p99 (ms) for "
+                         "every fresh row carrying admission_p99_ms "
+                         "(stream AND service rows)")
     ap.add_argument("--allow-missing-baseline", action="store_true",
                     help="downgrade a fresh grid point with no baseline "
                          "row from FAIL to a skip notice (for machines "
@@ -78,6 +142,14 @@ def main(argv=None) -> int:
     if os.environ.get("BENCH_GUARD_SKIP"):
         print("bench_guard: BENCH_GUARD_SKIP set, skipping")
         return 0
+    stream_gates = (args.stream_min_jobs_per_sec, args.stream_max_rss_mb,
+                    args.stream_max_p99_ms)
+    if any(g is not None for g in stream_gates):
+        with open(args.fresh) as f:
+            rows = json.load(f).get("rows", [])
+        return _check_stream(rows, args)
+    if args.baseline is None:
+        ap.error("baseline json required outside stream mode")
     with open(args.fresh) as f:
         fresh = _points(json.load(f), args.policy)
     with open(args.baseline) as f:

@@ -48,20 +48,27 @@ PUBLIC_SYMBOLS = {
         "TableauTemplate",
         "lazy_rhs",
     ],
-    "src/repro/core/solve_plan.py": ["SolvePlan", "solve_plans"],
+    "src/repro/core/solve_plan.py": ["SolvePlan", "solve_plans",
+                                    "patch"],
     "src/repro/core/subproblem.py": ["SubproblemConfig", "rng_mode",
                                      "lp_solver", "SolverFault",
                                      "SolverTimeout", "lp_fault_hook"],
     "src/repro/core/cluster.py": ["set_capacity_mask",
-                                  "machine_overcommitted"],
+                                  "machine_overcommitted",
+                                  "slot_version", "release_group"],
     "src/repro/sim/faults.py": ["FaultPlan", "FaultIncident",
                                 "SolverFaultInjector",
                                 "merge_event_streams"],
     "src/repro/sim/engine.py": ["LedgerInvariantError", "SimKilled",
-                                "checkpoint_every", "refail_rate"],
+                                "checkpoint_every", "refail_rate",
+                                "engine_mode", "admission_latency"],
     "src/repro/sim/policy.py": ["ResilientPolicy"],
     "src/repro/sim/metrics.py": ["samples_trained", "P2Quantile",
-                                 "job_done"],
+                                 "job_done", "job_closed"],
+    "src/repro/sim/events.py": ["pop_slot"],
+    "src/repro/sim/window.py": ["release_many", "holders_at", "regrant"],
+    "src/repro/sim/service.py": ["OfferService", "poll", "heartbeat",
+                                 "metrics_text", "start_http"],
     "src/repro/backend/__init__.py": ["lp_solver_default"],
     "benchmarks/bench_scheduler.py": ["repeat-best-of", "--profile"],
     "src/repro/obs/trace.py": ["Tracer", "Span", "chrome_trace",

@@ -58,6 +58,17 @@ python -m benchmarks.bench_sim --smoke --out BENCH_sim_smoke.json
 # always on in the engine; a violation raises LedgerInvariantError)
 python -m benchmarks.bench_sim --smoke --faults \
   --out BENCH_sim_chaos_smoke.json
+# stream smoke: the scaled-down 100k-job configuration — one long google
+# stream through the batched engine (streaming metrics) plus a pdors
+# service-latency row through the asyncio OfferService boundary. The
+# guard enforces absolute floors on the fresh rows: sustained jobs/sec,
+# process peak RSS (the streaming-metrics O(1)-rows contract), and the
+# admission-latency p99 SLO (see docs/BENCHMARKS.md)
+python -m benchmarks.bench_sim --smoke-scale \
+  --out BENCH_sim_stream_smoke.json
+python scripts/bench_guard.py BENCH_sim_stream_smoke.json \
+  --stream-min-jobs-per-sec 400 --stream-max-rss-mb 1024 \
+  --stream-max-p99-ms 2000
 python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json \
   --max-drop 0.30 --min-speedup 2.5 --min-speedup-scale 0.3 \
   --min-speedup-point 25x20x50

@@ -90,6 +90,16 @@ class Cluster:
         # bumped on every commit/release; lets PriceTable & snapshots cache
         # per-slot derived matrices between ledger mutations
         self.version = 0
+        # per-slot version stamps: _slot_versions[t] is the ledger version
+        # of the last mutation that could have changed row t's derived
+        # tensors (commit/release on t, a capacity-mask change, or the row
+        # sliding in on advance). A slot whose stamp is unchanged since a
+        # SolvePlan was built has bit-identical free/price content, which
+        # is what plan patching and warm bundle reuse key on.
+        self._slot_versions = np.zeros(self.horizon, dtype=np.int64)
+        # counts advance() calls: plan patching is only valid while the
+        # window has not slid (relative slot indices keep their meaning)
+        self.advances = 0
         # job -> (alpha vec, beta vec) on the cluster's resource axis
         self._demand_cache: Dict[int, Tuple[JobSpec, np.ndarray, np.ndarray]] = {}
         # t -> (version, C - rho[t]) cache for free_matrix
@@ -209,6 +219,8 @@ class Cluster:
                 and np.array_equal(mask, self._capacity_mask)):
             return  # unchanged: don't invalidate caches for nothing
         self.version += 1
+        # every slot's free/price tensors derive from capacity_matrix
+        self._slot_versions[:] = self.version
         if clean:
             self._capacity_mask = None
             self.capacity_matrix = self._base_capacity
@@ -270,11 +282,20 @@ class Cluster:
                 return False
         return True
 
+    def slot_version(self, t: int) -> int:
+        """Version stamp of the last mutation affecting slot ``t``'s
+        derived tensors (0 = untouched since construction). Out-of-horizon
+        slots return -1 so they never compare equal to a recorded stamp."""
+        if not (0 <= t < self.horizon):
+            return -1
+        return int(self._slot_versions[t])
+
     def commit(self, t: int, job: JobSpec, alloc: Allocation) -> None:
         """rho update of Algorithm 1 step 3."""
         if not (0 <= t < self.horizon):
             return
         self.version += 1
+        self._slot_versions[t] = self.version
         self._used = self.backend.ledger_add(
             self._used, t, self._alloc_need(job, alloc)
         )
@@ -286,9 +307,30 @@ class Cluster:
         if not (0 <= t < self.horizon):
             return
         self.version += 1
+        self._slot_versions[t] = self.version
         self._used = self.backend.ledger_sub_clamped(
             self._used, t, self._alloc_need(job, alloc)
         )
+
+    def release_group(self, items: List[Tuple[int, JobSpec, Allocation]]) -> None:
+        """Release a batch of (slot, job, alloc) grants under one version
+        bump. The per-item ledger subtractions run in list order through
+        the exact same backend op as ``release``, so the resulting ledger
+        bit patterns equal a sequence of individual releases — only the
+        number of version bumps differs, which every derived-tensor cache
+        is indifferent to (they compare stamps for equality, not deltas).
+        The batched sim engine uses this to fold a slot's completion and
+        failure cascades into one grouped release."""
+        live = [(t, job, alloc) for t, job, alloc in items
+                if 0 <= t < self.horizon]
+        if not live:
+            return
+        self.version += 1
+        for t, job, alloc in live:
+            self._slot_versions[t] = self.version
+            self._used = self.backend.ledger_sub_clamped(
+                self._used, t, self._alloc_need(job, alloc)
+            )
 
     def advance(self, steps: int = 1) -> None:
         """Slide the ledger left by ``steps`` slots (rolling-horizon mode).
@@ -301,6 +343,15 @@ class Cluster:
         if steps <= 0:
             return
         self.version += 1
+        self.advances += 1
+        # stamps slide with their row content: index k now refers to the
+        # slot that was k+steps, so a warm-store entry keyed by absolute
+        # slot + stamp stays valid across the slide. Fresh back rows are
+        # stamped with the current version (their zero content is new).
+        k = min(steps, self.horizon)
+        if k < self.horizon:
+            self._slot_versions[:-k] = self._slot_versions[k:]
+        self._slot_versions[self.horizon - k:] = self.version
         self._used = self.backend.ledger_advance(self._used, steps)
 
     def oversubscribed(self, tol: float = 1e-6) -> bool:

@@ -179,11 +179,23 @@ class WorkloadDP:
         theta() falls back per (t, v)."""
         a = self.job.arrival
         if self._plan is not None and (
-            not self._plan.fresh()
-            or self._plan.quanta != self.quanta
+            self._plan.quanta != self.quanta
             or not self._plan.covers(a, t_end)
         ):
-            self._plan = None           # stale injection: fall back
+            self._plan = None           # wrong shape: fall back
+        if self._plan is not None and not self._plan.fresh():
+            # stale plan (the ledger moved since build — e.g. an earlier
+            # admission in a batched offer): reconcile it in place. Only
+            # the slots whose rows actually changed are re-collected and
+            # re-solved; decision-identical to a cold rebuild
+            # (tests/test_solve_plan.py). Falls back to the rebuild when
+            # the window slid underneath the plan.
+            skip = set(self._theta) | {
+                (t, v) for t in range(a, t_end + 1)
+                for v in self._infeasible_v
+            }
+            if not self._plan.patch(skip=skip):
+                self._plan = None       # window slid: rebuild from scratch
         if self._plan is None:
             if not self.cfg.use_plan:
                 return

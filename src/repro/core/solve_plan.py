@@ -57,6 +57,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..obs import trace as _trace
+from ..obs.metrics import get_registry
 from .cluster import Cluster
 from .cover_packing import (
     CoverPackingLP,
@@ -185,9 +186,11 @@ class SolvePlan:
         t_hi: int,
         quanta: int = 32,
         skip: Optional[set] = None,
+        warm: Optional[Dict[int, tuple]] = None,
     ):
         self.job = job
         self.cluster = cluster
+        self.prices = prices
         self.cfg = cfg
         self.t_lo = t_lo
         self.t_hi = t_hi
@@ -195,6 +198,12 @@ class SolvePlan:
         self.quanta = max(1, min(quanta, int(math.ceil(V))))
         self.unit = V / self.quanta
         self.version = cluster.version   # staleness guard (see ``fresh``)
+        # per-slot staleness bookkeeping for ``patch``: the stamp of each
+        # slot's last ledger mutation at build time, and the window-slide
+        # counter (a slide shifts what relative index t means, so a
+        # patched plan would splice rows from the wrong slots)
+        self.advances = cluster.advances
+        self.slot_versions: Dict[int, int] = {}
         self.snaps: Dict[int, PriceSnapshot] = {}
         self.pending: List[_Pending] = []
         # (t, v) -> ThetaResult|None for grid entries whose resolution
@@ -207,7 +216,7 @@ class SolvePlan:
         self.lp_results: Optional[List[LPResult]] = None
         with _trace.span("plan.build", job=int(job.job_id),
                          slots=t_hi - t_lo + 1, quanta=self.quanta) as sp:
-            self._collect(prices, skip or set())
+            self._collect(prices, skip or set(), warm=warm)
             sp.set(n_lp=len(self.lp_built), n_pending=len(self.pending),
                    n_trivial=len(self.trivial))
 
@@ -220,10 +229,97 @@ class SolvePlan:
         return self.t_lo <= t_lo and t_hi <= self.t_hi
 
     # ------------------------------------------------------------------
-    def _collect(self, prices: PriceTable, skip: set) -> None:
+    def patch(self, skip: Optional[set] = None) -> bool:
+        """Reconcile a stale plan against the current ledger instead of
+        rebuilding it, slot by slot. Returns True when the plan is fresh
+        again; False when patching is impossible (the window slid —
+        relative indices changed meaning — so the caller must rebuild).
+
+        Per-slot version stamps (``Cluster.slot_version``) identify
+        exactly the slots whose ledger rows mutated since build. Clean
+        slots keep their snapshots, classified grid entries, and SOLVED
+        LP results (prices and free capacities are pure functions of the
+        slot's own row, and each LP's pivot trajectory is independent of
+        batch composition); dirty slots are dropped and re-collected
+        against the current ledger with the caller's ``skip`` set —
+        byte-for-byte what a cold rebuild would produce for them. The
+        pending walk is re-sorted to the reference's (t asc, v asc)
+        order, so ``resolve_into`` consumes the rng exactly as a rebuilt
+        plan would in both rng modes. Decision-identity to the cold
+        rebuild is property-tested in ``tests/test_solve_plan.py``."""
+        cluster = self.cluster
+        if self.fresh():
+            return True
+        if cluster.advances != self.advances:
+            return False
+        ts = range(self.t_lo, self.t_hi + 1)
+        dirty = [t for t in ts
+                 if cluster.slot_version(t) != self.slot_versions.get(t)]
+        with _trace.span("plan.patch", job=int(self.job.job_id),
+                         dirty=len(dirty)) as sp:
+            get_registry().counter(
+                "repro_plan_patches_total",
+                "stale SolvePlans reconciled in place (vs rebuilt)").inc()
+            dirty_set = set(dirty)
+            for t in dirty:
+                self.snaps.pop(t, None)
+            if dirty_set:
+                self.trivial = {k: v for k, v in self.trivial.items()
+                                if k[0] not in dirty_set}
+            keep = [p for p in self.pending if p.t not in dirty_set]
+            new_built: List = []
+            old_results = self.lp_results
+            kept_results: List[LPResult] = []
+            for p in keep:
+                if p.action == _A_LP:
+                    old_idx = p.lp_index
+                    if old_results is not None:
+                        kept_results.append(old_results[old_idx])
+                    p.lp_index = len(new_built)
+                    new_built.append(self.lp_built[old_idx])
+            self.pending = keep
+            self.lp_built = new_built
+            self.lp_results = None
+            solved_n = len(new_built)
+            if dirty:
+                self._collect(self.prices, skip or set(), ts=dirty)
+                self.pending.sort(key=lambda p: (p.t, p.v))
+            if old_results is not None:
+                # the clean entries keep their solved results; only the
+                # re-collected tail is solved — per-problem results are
+                # independent of batch composition, so this equals a
+                # full re-solve of the rebuilt plan
+                tail = self.lp_built[solved_n:]
+                if tail:
+                    if self.cfg.lp_fault_hook is not None:
+                        self.cfg.lp_fault_hook("lp_batch")
+                    force = (_resolve_lp_solver(self.cfg, cluster)
+                             == "simplex")
+                    tail_res = solve_lp_batch(tail, force_simplex=force)
+                else:
+                    tail_res = []
+                self.lp_results = kept_results + tail_res
+            self.version = cluster.version
+            sp.set(n_lp=len(self.lp_built), kept=len(keep))
+        return True
+
+    # ------------------------------------------------------------------
+    def _collect(self, prices: PriceTable, skip: set,
+                 ts: Optional[List[int]] = None,
+                 warm: Optional[Dict[int, tuple]] = None) -> None:
+        """Collect + classify the (slot, level) grid for slots ``ts``
+        (default: the plan's full [t_lo, t_hi] range — ``patch`` passes
+        just the dirty subset). ``warm`` maps a slot to a previously
+        computed decision bundle for an identical (ledger row, demand)
+        pair; on the numpy backend each slot's bundle is computed
+        independently of the others (``price_bundle_batch_numpy`` is a
+        per-(t, h) map), so splicing a warm row is bit-identical to
+        recomputing it. The device backend ignores ``warm`` — its fused
+        reduction is one full-horizon dispatch either way."""
         job, cluster, cfg = self.job, self.cluster, self.cfg
         Q = self.quanta
-        ts = list(range(self.t_lo, self.t_hi + 1))
+        if ts is None:
+            ts = list(range(self.t_lo, self.t_hi + 1))
         if not ts:
             return
         wdem, sdem = cluster.demand_vectors(job)
@@ -231,6 +327,7 @@ class SolvePlan:
         # ---- phase 2: fused (W, H) bundle pass over every slot --------
         with _trace.span("plan.bundle", slots=len(ts),
                          backend=type(cluster.backend).__name__):
+            bundles: Dict[int, tuple] = {}
             if cluster.backend.is_device:
                 # full-horizon operands keep the jitted reduction at ONE
                 # static shape (a per-plan [t_lo:t_hi] slice would retrace
@@ -238,19 +335,29 @@ class SolvePlan:
                 # and ignored — device-side flops are free next to a retrace
                 price_op = prices.device_tensor()
                 free_op = cluster.device_free_tensor()
-                off = 0
+                wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
+                    price_op, free_op, wdem, sdem, job.gamma,
+                )
+                for t in ts:
+                    bundles[t] = (wp[t], sp[t], co[t], mw[t], ms[t])
             else:
-                price_op = np.stack([prices.price_matrix(t) for t in ts])
-                free_op = np.stack([cluster.free_matrix(t) for t in ts])
-                off = self.t_lo
-            wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
-                price_op, free_op, wdem, sdem, job.gamma,
-            )
+                if warm:
+                    bundles.update((t, warm[t]) for t in ts if t in warm)
+                cold = [t for t in ts if t not in bundles]
+                if cold:
+                    price_op = np.stack(
+                        [prices.price_matrix(t) for t in cold])
+                    free_op = np.stack(
+                        [cluster.free_matrix(t) for t in cold])
+                    wp, sp, co, mw, ms = cluster.backend.snapshot_bundle_batch(
+                        price_op, free_op, wdem, sdem, job.gamma,
+                    )
+                    for i, t in enumerate(cold):
+                        bundles[t] = (wp[i], sp[i], co[i], mw[i], ms[i])
             for t in ts:
-                i = t - off
+                self.slot_versions[t] = cluster.slot_version(t)
                 self.snaps[t] = PriceSnapshot(
-                    job, cluster, prices, t,
-                    bundle=(wp[i], sp[i], co[i], mw[i], ms[i]),
+                    job, cluster, prices, t, bundle=bundles[t],
                 )
 
         # ---- per-level constants (independent of t) -------------------

@@ -81,6 +81,7 @@ Public API
     MetricsCollector                      — metrics pipeline
     SimEngine, simulate, SimReport,
     SimKilled, LedgerInvariantError       — the engine
+    OfferService                          — asyncio offer-service boundary
 """
 from .events import Event, EventKind, EventQueue
 from .window import RollingWindow
@@ -107,8 +108,10 @@ from .engine import (
     SimReport,
     simulate,
 )
+from .service import OfferService
 
 __all__ = [
+    "OfferService",
     "Event", "EventKind", "EventQueue",
     "RollingWindow",
     "Decision", "SchedulingPolicy", "ResilientPolicy",

@@ -50,9 +50,12 @@ instead of vaporized.
 """
 from __future__ import annotations
 
+import bisect
 import copy
+import heapq
 import itertools
 import math
+import time as _time
 from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
@@ -62,7 +65,7 @@ from ..core.job import Allocation, JobSpec
 from ..obs import trace as _trace
 from ..obs.metrics import get_registry
 from .events import Event, EventKind, EventQueue
-from .metrics import MetricsCollector
+from .metrics import MetricsCollector, P2Quantile
 from .policy import SchedulingPolicy, derived_rng
 from .window import RollingWindow
 
@@ -147,13 +150,26 @@ class SimEngine:
         refail_delay: Tuple[int, int] = (1, 8),
         trace: Optional["_trace.Tracer"] = None,
         metrics_mode: str = "exact",
+        engine_mode: str = "event",
     ):
+        if engine_mode not in ("event", "batched"):
+            raise ValueError(
+                f"engine_mode must be event|batched, got {engine_mode!r}"
+            )
         self.window = window
         self.policy = policy
         self.seed = seed
         self.max_slots = max_slots
         self.patience = patience
         self.check_ledger = check_ledger
+        # "event" walks the heap one event at a time and scans the active
+        # set per slot — the parity oracle. "batched" drains a slot's
+        # events in one pull, groups completion/failure releases into one
+        # ledger op, fast-forwards idle gaps, and keeps incremental
+        # queued/patience/ordering indexes — bit-identical reports,
+        # ledgers, and journals by construction (tests/test_sim_batch.py)
+        self.engine_mode = engine_mode
+        self._batched = engine_mode == "batched"
         # observability: an explicit Tracer is activated for the duration
         # of the run (run()/recover()) without touching the process-global
         # tracer installed via REPRO_TRACE; None leaves whatever is
@@ -181,6 +197,27 @@ class SimEngine:
         # majority never re-enters either set)
         self._active: set = set()
         self._awaiting: set = set()
+        # batched-mode incremental indexes (mirrors of _active-derived
+        # scans the oracle recomputes per slot):
+        #   _never_served — active jobs with no first service yet (the
+        #       per-slot "queued" count becomes len())
+        #   _active_order — (arrival, job_id) keys kept sorted by bisect;
+        #       the SLOT tick's active tuple without a per-slot sort
+        #   _order_key    — job_id -> its key in _active_order
+        #   _patience_heap — (orig_arrival + patience, job_id) min-heap;
+        #       patience checks pop due entries instead of scanning
+        self._never_served: set = set()
+        self._active_order: List[Tuple[int, int]] = []
+        self._order_key: Dict[int, Tuple[int, int]] = {}
+        self._patience_heap: List[Tuple[int, int]] = []
+        self._patience_seen: set = set()
+        # admission-latency SLO accounting: wall-clock seconds spent in
+        # the policy's ARRIVAL-batch offer, observed once per arriving job
+        # (observational only — never folded into summary/report parity)
+        self._adm_p50 = P2Quantile(0.50)
+        self._adm_p99 = P2Quantile(0.99)
+        self._adm_n = 0
+        self._adm_sum = 0.0
         self.queue = EventQueue()
         # machine -> {incident id -> capacity factor} for active incidents
         self._incidents: Dict[int, Dict[int, float]] = {}
@@ -196,10 +233,30 @@ class SimEngine:
     # -- active-set index maintenance ----------------------------------
     def _set_active(self, js: JobState, active: bool) -> None:
         js.active = active
+        jid = js.job.job_id
         if active:
-            self._active.add(js.job.job_id)
+            self._active.add(jid)
+            if self._batched:
+                if jid not in self._order_key:
+                    key = (js.job.arrival, jid)
+                    self._order_key[jid] = key
+                    bisect.insort(self._active_order, key)
+                if self.metrics.outcome(
+                        jid, js.orig_arrival).first_service is None:
+                    self._never_served.add(jid)
+                if (self.patience is not None and js.attempt == 0
+                        and jid not in self._patience_seen):
+                    self._patience_seen.add(jid)
+                    heapq.heappush(self._patience_heap,
+                                   (js.orig_arrival + self.patience, jid))
         else:
-            self._active.discard(js.job.job_id)
+            self._active.discard(jid)
+            if self._batched:
+                key = self._order_key.pop(jid, None)
+                if key is not None:
+                    i = bisect.bisect_left(self._active_order, key)
+                    del self._active_order[i]
+                self._never_served.discard(jid)
 
     def _set_awaiting(self, js: JobState, awaiting: bool) -> None:
         js.awaiting_requeue = awaiting
@@ -256,6 +313,46 @@ class SimEngine:
                                   job=residual, requeue=True))
         # slot-driven: the job stays active; the policy dropped any held
         # allocation in on_preempt and will re-place it next tick
+
+    def _fail_group(self, job_ids: List[int], t: int) -> None:
+        """Batched-mode fold of a slot's plain FAILURE events: eligibility
+        is decided in event order with an explicit in-group duplicate
+        check (the oracle's second same-slot failure of one job sees
+        ``down_at == t``), the eligible jobs' rows come off in one grouped
+        release (``release_many`` preserves the per-(job, slot) ledger op
+        order), and the preempt notifications/requeues run in the same
+        order afterwards. Machine-crash eviction cascades are NOT grouped
+        — they interleave releases with overcommit checks and stay on the
+        per-event ``_fail`` path in both modes."""
+        elig: List[Tuple[int, JobState]] = []
+        seen: set = set()
+        for job_id in job_ids:
+            js = self.states.get(job_id)
+            if js is None or js.finished or not js.active:
+                continue
+            if js.down_at == t or job_id in seen:
+                continue
+            seen.add(job_id)
+            elig.append((job_id, js))
+        if not elig:
+            return
+        counts = self.window.release_many([(jid, t) for jid, _ in elig])
+        for job_id, js in elig:
+            if counts[job_id] == 0 and js.progress <= 0:
+                continue  # never served: the fault hit a queued job
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            oc.preemptions += 1
+            js.down_at = t
+            self.metrics.count("preempt")
+            self._notify(EventKind.PREEMPT, job_id, t)
+            if self.policy.reoffers_on_preempt:
+                residual = self._residual(js, t)
+                if residual is None:
+                    continue
+                self._set_active(js, False)
+                self._set_awaiting(js, True)
+                self.queue.push(Event(time=t + 1, kind=EventKind.ARRIVAL,
+                                      job=residual, requeue=True))
 
     # -- machine fault domains -----------------------------------------
     def _apply_capacity_mask(self) -> None:
@@ -319,6 +416,7 @@ class SimEngine:
         oc = self.metrics.outcome(job_id, js.orig_arrival)
         oc.departed_at = t
         self.metrics.count("departure")
+        self.metrics.job_closed(oc)
         self._notify(EventKind.DEPARTURE, job_id, t)
 
     def _handle_arrivals(self, batch: List[Event], t: int) -> None:
@@ -356,10 +454,19 @@ class SimEngine:
                                           job_id=job.job_id))
             jobs.append(job)
         jobs.sort(key=lambda j: j.job_id)
+        t0 = _time.perf_counter()
         dec = self.policy.offer(
             Event(time=t, kind=EventKind.ARRIVAL, jobs=tuple(jobs)),
             self.window,
         )
+        elapsed = _time.perf_counter() - t0
+        # each job in the batch waited the whole batch offer: observe the
+        # latency once per job so the SLO percentiles are job-weighted
+        for _ in jobs:
+            self._adm_p50.observe(elapsed)
+            self._adm_p99.observe(elapsed)
+        self._adm_n += len(jobs)
+        self._adm_sum += elapsed * len(jobs)
         for job in jobs:
             js = self.states[job.job_id]
             oc = self.metrics.outcome(job.job_id, js.orig_arrival)
@@ -376,6 +483,7 @@ class SimEngine:
                 self._set_active(js, False)
                 js.finished = True
                 self.metrics.count("rejection")
+                self.metrics.job_closed(oc)
             else:
                 # a preempted job whose residual re-offer was rejected: it
                 # WAS admitted, trained, and then left incomplete — surfaced
@@ -384,6 +492,44 @@ class SimEngine:
                 js.finished = True
                 oc.evicted_at = t
                 self.metrics.count("eviction")
+                self.metrics.job_closed(oc)
+
+    def _account_progress_batched(self, t: int) -> None:
+        """Progress accounting over the window's per-slot holder index:
+        only jobs committed at slot ``t`` are visited (jobs without an
+        allocation are exact no-ops in the oracle's scan), in the same
+        ascending-job-id order. Completions defer their tail release and
+        COMPLETION notification past the loop: the releases fold into one
+        grouped ledger op with per-(job, slot) order preserved, and
+        nothing in the loop body reads the ledger, so the resulting state
+        is bit-identical to the oracle's interleaved releases."""
+        done: List[int] = []
+        for job_id in sorted(self.window.holders_at(t)):
+            js = self.states[job_id]
+            if js.finished or not js.active:
+                continue
+            alloc = self.window.alloc_at(job_id, t)
+            if alloc is None or alloc.empty():
+                continue
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            if oc.first_service is None:
+                oc.first_service = t
+                self._never_served.discard(job_id)
+            earned = alloc.samples_trained(js.job)
+            js.progress += earned
+            oc.samples_trained += earned
+            if js.progress >= js.job.total_workload() - 1e-6:
+                self._set_active(js, False)
+                js.finished = True
+                done.append(job_id)
+                oc.completed_at = t
+                oc.utility = js.job.utility(t - js.orig_arrival)
+                self.metrics.count("completion")
+                self.metrics.job_done(oc)
+        if done:
+            self.window.release_many([(jid, t + 1) for jid in done])
+            for job_id in done:
+                self._notify(EventKind.COMPLETION, job_id, t)
 
     def _account_progress(self, t: int) -> None:
         # per-job accounting is independent (progress reads the job's own
@@ -413,6 +559,28 @@ class SimEngine:
                 self.metrics.job_done(oc)
                 self._notify(EventKind.COMPLETION, job_id, t)
 
+    def _check_patience_batched(self, t: int) -> None:
+        """Pop due entries off the patience heap instead of scanning the
+        active set. Every entry was pushed at first activation with
+        due = orig_arrival + patience; a job still active and never
+        served at its due slot departs exactly there (the oracle, which
+        checks every slot, fires at the same slot), and due-slot ties pop
+        in ascending job id — the oracle's sorted-scan order. Entries for
+        jobs that were served, admitted (schedule contract), or already
+        gone drop silently: those exemptions are permanent."""
+        if self.patience is None:
+            return
+        heap = self._patience_heap
+        while heap and heap[0][0] <= t:
+            due, job_id = heapq.heappop(heap)
+            js = self.states.get(job_id)
+            if js is None or js.finished or not js.active:
+                continue
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            if oc.admitted is True or oc.first_service is not None:
+                continue
+            self._depart(job_id, t)
+
     def _check_patience(self, t: int) -> None:
         if self.patience is None:
             return
@@ -428,11 +596,20 @@ class SimEngine:
 
     # -- crash consistency ---------------------------------------------
     def _pull(self) -> Optional[Event]:
-        """Pull the next trace event, journaling it for recovery."""
+        """Pull the next trace event, journaling it for recovery.
+
+        Without checkpoints the journal only ever serves the debugging
+        tail of ``LedgerInvariantError`` (its last 64 entries), so it is
+        trimmed instead of retaining the whole trace — the stream-scale
+        O(n) memory fix. With ``checkpoint_every`` set the journal IS the
+        recovery log and is kept in full between snapshots (a snapshot
+        resets it)."""
         ev = next(self._stream, None)
         if ev is not None:
             self._consumed += 1
             self.journal.append(ev)
+            if self.checkpoint_every is None and len(self.journal) > 192:
+                del self.journal[:128]
         return ev
 
     def _take_checkpoint(self, t: int) -> None:
@@ -444,6 +621,8 @@ class SimEngine:
             self.window, self.policy, self.metrics, self.states,
             self.queue, self._active, self._awaiting, self._incidents,
             self._pending,
+            (self._never_served, self._active_order, self._order_key,
+             self._patience_heap, self._patience_seen),
         ))
         self._checkpoint = Checkpoint(slot=t, consumed=self._consumed,
                                       state=state)
@@ -478,7 +657,10 @@ class SimEngine:
         with _trace.span("sim.recover", slot=ck.slot, consumed=ck.consumed):
             (self.window, self.policy, self.metrics, self.states,
              self.queue, self._active, self._awaiting, self._incidents,
-             self._pending) = copy.deepcopy(ck.state)
+             self._pending,
+             (self._never_served, self._active_order, self._order_key,
+              self._patience_heap, self._patience_seen),
+             ) = copy.deepcopy(ck.state)
         self.journal = []
         self._consumed = ck.consumed
         self._t = ck.slot
@@ -519,18 +701,56 @@ class SimEngine:
             busy = bool(self._active) or bool(self._awaiting)
             if not busy and not len(self.queue) and self._pending is None:
                 break
+            if self._batched and not busy and self.queue.peek_time() != t:
+                # idle fast-forward: nothing is active or awaiting and the
+                # next event lies beyond this slot, so every intervening
+                # slot is an exact no-op except its metrics row (the
+                # ledger is empty — completed/preempted/departed jobs all
+                # released their rows — so utilization and the ledger
+                # check are constant across the gap). Jump to the next
+                # event, stopping at checkpoint boundaries and kill_at so
+                # snapshot slots and the kill slot match the oracle.
+                nt = self.queue.peek_time()
+                if nt is None:
+                    nt = self._pending.time  # pending exists or we broke
+                elif self._pending is not None:
+                    nt = min(nt, self._pending.time)
+                target = min(nt, self.max_slots)
+                if self.kill_at is not None and t < self.kill_at:
+                    target = min(target, self.kill_at)
+                if self.checkpoint_every is not None:
+                    k = self.checkpoint_every
+                    target = min(target, (t // k + 1) * k)
+                if target > t:
+                    with _trace.span("sim.advance", t=t):
+                        self.window.advance_to(t)
+                    util = self.window.utilization_now()
+                    degraded = tuple(sorted(
+                        h for h, incs in self._incidents.items() if incs
+                    ))
+                    for ts in range(t, target):
+                        self.metrics.record_slot(ts, util, 0, 0,
+                                                 degraded=degraded)
+                    self._t = target
+                    continue
             with _trace.span("sim.advance", t=t):
                 self.window.advance_to(t)
 
             batch: List[Event] = []
             departures: List[int] = []
-            for ev in self.queue.pop_until(t):
+            failures: List[int] = []
+            evs = (self.queue.pop_slot(t) if self._batched
+                   else self.queue.pop_until(t))
+            for ev in evs:
                 if ev.kind == EventKind.MACHINE_UP:
                     self._machine_up(ev, t)
                 elif ev.kind == EventKind.MACHINE_DOWN:
                     self._machine_down(ev, t)
                 elif ev.kind == EventKind.FAILURE:
-                    self._fail(ev.subject(), t)
+                    if self._batched:
+                        failures.append(ev.subject())
+                    else:
+                        self._fail(ev.subject(), t)
                 elif ev.kind == EventKind.ARRIVAL:
                     batch.append(ev)
                 elif ev.kind == EventKind.DEPARTURE:
@@ -547,6 +767,11 @@ class SimEngine:
                     raise ValueError(
                         f"unsupported queued event kind {ev.kind!r} at t={t}"
                     )
+            if failures:
+                # all of a slot's plain FAILUREs pop before its ARRIVALs
+                # (kind priority), so the grouped fold sits exactly where
+                # the oracle's per-event _fail calls were
+                self._fail_group(failures, t)
             if batch:
                 with _trace.span("sim.arrivals", t=t, jobs=len(batch)):
                     self._handle_arrivals(batch, t)
@@ -559,20 +784,39 @@ class SimEngine:
                     continue
                 self._depart(job_id, t)
             if self.policy.slot_driven:
-                actives = sorted(
-                    (self.states[jid].job for jid in self._active
-                     if not self.states[jid].finished
-                     and self.states[jid].down_at != t),
-                    key=lambda j: (j.arrival, j.job_id),
-                )
+                sts = self.states
+                if self._batched:
+                    # _active_order is the oracle's sorted() result kept
+                    # incrementally: keys are (arrival, job_id) fixed at
+                    # activation, and a job's arrival only changes on a
+                    # requeue, which happens while deactivated
+                    actives = [
+                        sts[jid].job for _, jid in self._active_order
+                        if not sts[jid].finished and sts[jid].down_at != t
+                    ]
+                else:
+                    actives = sorted(
+                        (sts[jid].job for jid in self._active
+                         if not sts[jid].finished
+                         and sts[jid].down_at != t),
+                        key=lambda j: (j.arrival, j.job_id),
+                    )
                 if actives:
+                    # the progress payload is only read by fairness-aware
+                    # slot policies (Dorm); the batched engine skips
+                    # building it for policies that declare wants_progress
+                    # False — the Event differs but no decision can
+                    progress = None
+                    if not self._batched or getattr(
+                            self.policy, "wants_progress", True):
+                        progress = {
+                            j.job_id: sts[j.job_id].progress
+                            for j in actives
+                        }
                     self.policy.offer(
                         Event(
                             time=t, kind=EventKind.SLOT, jobs=tuple(actives),
-                            progress={
-                                j.job_id: self.states[j.job_id].progress
-                                for j in actives
-                            },
+                            progress=progress,
                         ),
                         self.window,
                     )
@@ -587,14 +831,22 @@ class SimEngine:
                     ),
                     journal_tail=tuple(self.journal[-64:]),
                 )
-            self._account_progress(t)
-            self._check_patience(t)
+            if self._batched:
+                self._account_progress_batched(t)
+                self._check_patience_batched(t)
+            else:
+                self._account_progress(t)
+                self._check_patience(t)
             active = len(self._active)
-            queued = sum(
-                1 for jid in self._active
-                if self.metrics.outcome(
-                    jid, self.states[jid].orig_arrival).first_service is None
-            )
+            if self._batched:
+                queued = len(self._never_served)
+            else:
+                queued = sum(
+                    1 for jid in self._active
+                    if self.metrics.outcome(
+                        jid, self.states[jid].orig_arrival,
+                    ).first_service is None
+                )
             degraded = tuple(sorted(
                 h for h, incs in self._incidents.items() if incs
             ))
@@ -624,6 +876,20 @@ class SimEngine:
             slots_run=self._t,
             pd_gap=pd_snap,
         )
+
+    def admission_latency(self) -> Dict[str, float]:
+        """Wall-clock SLO accounting of the ARRIVAL-batch offer path:
+        per-job admission latency count/mean/p50/p99 in milliseconds
+        (P-squared estimates). Observational — never part of the report
+        parity surface — and the basis of the stream-scale benchmark's
+        SLO columns."""
+        n = self._adm_n
+        return {
+            "count": float(n),
+            "mean_ms": (self._adm_sum / n * 1e3) if n else 0.0,
+            "p50_ms": self._adm_p50.value() * 1e3,
+            "p99_ms": self._adm_p99.value() * 1e3,
+        }
 
     def _publish_registry(self, summary: Dict,
                           pd_snap: Optional[Dict] = None) -> None:
@@ -656,6 +922,13 @@ class SimEngine:
                     "repro_" + name,
                     "primal-dual telemetry (summary view)",
                 ).set(float(v))
+        if self._adm_n:
+            adm = self.admission_latency()
+            for k in ("p50_ms", "p99_ms", "mean_ms"):
+                reg.gauge(
+                    "repro_admission_latency_" + k,
+                    "per-job ARRIVAL-offer wall latency (P-squared)",
+                ).set(adm[k])
         # jit retrace tallies (the in-trace increments in kernels.pricing
         # fire only while jax retraces the fused bundle kernels)
         from ..kernels.pricing import TRACE_COUNTS

@@ -129,3 +129,15 @@ class EventQueue:
         """Pop every event with time <= t, in deterministic order."""
         while self._heap and self._heap[0][0] <= t:
             yield heapq.heappop(self._heap)[3]
+
+    def pop_slot(self, t: int) -> List[Event]:
+        """Drain every event with time <= t in one pull, in the identical
+        (time, kind priority, push order) sequence ``pop_until`` yields.
+        The batched engine uses this to dispatch a slot's whole event group
+        from a single list instead of re-entering the heap generator per
+        event."""
+        heap = self._heap
+        out: List[Event] = []
+        while heap and heap[0][0] <= t:
+            out.append(heapq.heappop(heap)[3])
+        return out

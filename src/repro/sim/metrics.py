@@ -29,9 +29,13 @@ Two collection modes behind one API (``mode=``):
   emits the same keys; JCT/queue-delay percentiles become estimates, and
   queue-delay percentiles cover completed jobs only (a still-running
   served job's delay is not folded in until it completes). Jobs that
-  finish without completing (rejected/departed/evicted) stay in
-  ``outcomes`` — they carry the censoring columns and are few relative
-  to completions on the traces this mode targets.
+  finish without completing (rejected/departed/evicted) are folded the
+  same way through ``job_closed`` — their censoring columns become exact
+  running counters and the rows drop, so ``outcomes`` holds only jobs
+  still in flight: memory stays bounded by the concurrent-job count on a
+  100k-job stream, not the stream length. (Censored float sums
+  accumulate in close-event order, which can differ from exact mode's
+  arrival-order summation by float rounding — count columns are exact.)
 """
 from __future__ import annotations
 
@@ -162,6 +166,32 @@ class _StreamState:
         self.busy_slots = 0
         self.util_sum = {r: 0.0 for r in resources}
         self.util_busy_sum = {r: 0.0 for r in resources}
+        # censored closures (rejected / departed / evicted) folded by
+        # job_closed — exact counters, so summary() columns match the
+        # retained-row accounting they replace
+        self.n_closed = 0
+        self.closed_rejected = 0
+        self.closed_departed = 0
+        self.closed_evicted = 0
+        self.closed_admitted = 0
+        self.closed_preempt = 0
+        self.closed_wasted = 0.0
+        self.closed_utility = 0.0
+
+    def absorb_censored(self, oc: "JobOutcome") -> None:
+        self.n_closed += 1
+        if oc.admitted is False:
+            self.closed_rejected += 1
+        if oc.departed_at is not None:
+            self.closed_departed += 1
+        if oc.evicted_at is not None:
+            self.closed_evicted += 1
+        if oc.admitted is True or (oc.admitted is None
+                                   and oc.first_service is not None):
+            self.closed_admitted += 1
+        self.closed_preempt += int(oc.preemptions)
+        self.closed_wasted += float(oc.samples_trained)
+        self.closed_utility += float(oc.utility)
 
     def absorb(self, oc: "JobOutcome") -> None:
         self.n_completed += 1
@@ -251,6 +281,18 @@ class MetricsCollector:
         if self._stream is None:
             return
         self._stream.absorb(oc)
+        self.outcomes.pop(oc.job_id, None)
+
+    def job_closed(self, oc: JobOutcome) -> None:
+        """Censored-closure hook (engine-called when a job finishes
+        without completing: rejection, patience/exogenous departure, or
+        eviction of a residual re-offer). A no-op in exact mode; in
+        streaming mode the outcome folds into exact running counters and
+        the row drops, so ``outcomes`` stays bounded by the number of
+        jobs still in flight — the stream-scale leak fix."""
+        if self._stream is None:
+            return
+        self._stream.absorb_censored(oc)
         self.outcomes.pop(oc.job_id, None)
 
     def count(self, kind: str) -> None:
@@ -399,18 +441,21 @@ class MetricsCollector:
         row, so the censoring columns stay exact — only the JCT and
         queue-delay percentiles are P-squared estimates."""
         st = self._stream
-        ocs = list(self.outcomes.values())   # none of these completed
-        offered = st.n_completed + len(ocs)
-        departed = sum(1 for oc in ocs if oc.departed_at is not None)
-        rejected = sum(1 for oc in ocs if oc.admitted is False)
+        ocs = list(self.outcomes.values())   # in flight: not yet closed
+        offered = st.n_completed + st.n_closed + len(ocs)
+        departed = st.closed_departed + sum(
+            1 for oc in ocs if oc.departed_at is not None)
+        rejected = st.closed_rejected + sum(
+            1 for oc in ocs if oc.admitted is False)
         # every completed job was admitted (explicitly, or implicitly by
         # being served under a slot-driven policy)
-        admitted = st.n_completed + sum(
+        admitted = st.n_completed + st.closed_admitted + sum(
             1 for oc in ocs
             if oc.admitted is True
             or (oc.admitted is None and oc.first_service is not None)
         )
-        wasted = float(sum(oc.samples_trained for oc in ocs))
+        wasted = st.closed_wasted + float(
+            sum(oc.samples_trained for oc in ocs))
         trained = st.sum_goodput + wasted
         slots = st.slots
         repairs = [rec["repair_slots"] for rec in self.incident_log]
@@ -429,15 +474,17 @@ class MetricsCollector:
             "jobs_completed": nc,
             "jobs_rejected": rejected,
             "jobs_departed": departed,
-            "jobs_evicted": sum(1 for oc in ocs if oc.evicted_at is not None),
-            "preemptions": st.sum_preempt + sum(oc.preemptions for oc in ocs),
+            "jobs_evicted": st.closed_evicted + sum(
+                1 for oc in ocs if oc.evicted_at is not None),
+            "preemptions": (st.sum_preempt + st.closed_preempt
+                            + sum(oc.preemptions for oc in ocs)),
             "admission_rate": admitted / offered if offered else 0.0,
             "completion_rate": nc / offered if offered else 0.0,
             "jct_p50": st.jct_p50.value(), "jct_p95": st.jct_p95.value(),
             "jct_mean": st.sum_jct / nc if nc else 0.0,
             "queue_delay_p50": st.delay_p50.value(),
             "queue_delay_p95": st.delay_p95.value(),
-            "total_utility": st.sum_utility + float(
+            "total_utility": st.sum_utility + st.closed_utility + float(
                 sum(oc.utility for oc in ocs)),
             "utilization_mean": {
                 r: (st.util_sum[r] / slots if slots else 0.0)

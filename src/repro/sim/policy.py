@@ -57,7 +57,7 @@ from ..core.schedule import find_best_schedule
 from ..core.solve_plan import SolvePlan, solve_plans
 from ..core.subproblem import SolverFault, SubproblemConfig
 from ..obs import trace as _trace
-from ..obs.metrics import warn_once_event
+from ..obs.metrics import get_registry, warn_once_event
 from ..obs.pd_gap import PDGapTracker
 from .events import Event, EventKind
 from .window import RollingWindow
@@ -109,6 +109,11 @@ class SchedulingPolicy:
     # re-offered as a fresh ARRIVAL; slot-driven ones just keep the job in
     # the active set and re-place it on the next tick
     reoffers_on_preempt: bool = False
+    # whether the SLOT tick's per-job progress payload is read (Dorm's
+    # fairness order). Policies that never read it declare False so the
+    # batched engine can skip building the dict each slot — the Event
+    # payload differs, decisions cannot
+    wants_progress: bool = True
 
     def bind(self, view: RollingWindow, seed: int) -> None:
         self.view = view
@@ -262,6 +267,70 @@ class PDORSPolicy(SchedulingPolicy):
         # per offer; decisions never read it. Rebinding (a fresh window)
         # restarts the accumulators with the fresh price table.
         self.pd_gap = PDGapTracker(self.prices)
+        # warm decision-bundle store for re-offers: (absolute slot, the
+        # slot's ledger-version stamp, demand signature) -> the fused
+        # (wprice, sprice, coloc, max_w, max_s) bundle row. A requeued or
+        # preempt-re-offered job has the same demand vectors as its
+        # original offer, so every slot whose ledger row is untouched
+        # since then reuses the already-computed bundle bit-for-bit
+        # (numpy backend only — the device bundle pass is one fused
+        # dispatch either way and its floats are tolerance-, not
+        # bit-stable).
+        self._warm_bundles: Dict[tuple, tuple] = {}
+        self._warm_now = 0
+
+    # -- warm bundle store ---------------------------------------------
+    def _bundle_sig(self, view: RollingWindow, job: JobSpec) -> tuple:
+        wdem, sdem = view.cluster.demand_vectors(job)
+        return (wdem.tobytes(), sdem.tobytes(), float(job.gamma))
+
+    def _warm_for(self, view: RollingWindow,
+                  rel: JobSpec) -> Optional[Dict[int, tuple]]:
+        """Collect warm bundles for one job's plan slots. Keys carry the
+        slot's version stamp, so a stale row can never hit."""
+        cl = view.cluster
+        if cl.backend.is_device:
+            return None
+        if view.now != self._warm_now:
+            self._warm_bundles = {
+                k: v for k, v in self._warm_bundles.items()
+                if k[0] >= view.now
+            }
+            self._warm_now = view.now
+        sig = self._bundle_sig(view, rel)
+        warm = {
+            t: hit
+            for t in range(rel.arrival, view.lookahead)
+            if (hit := self._warm_bundles.get(
+                (view.now + t, cl.slot_version(t), sig))) is not None
+        }
+        if warm:
+            get_registry().counter(
+                "repro_warm_bundle_hits_total",
+                "plan bundle rows reused from the warm store",
+            ).inc(len(warm))
+        return warm or None
+
+    def _harvest_bundles(self, view: RollingWindow, rel: JobSpec,
+                         plan: SolvePlan) -> None:
+        """Store the freshly built plan's bundle rows (called right after
+        the build, before any admission can mutate the ledger)."""
+        cl = view.cluster
+        if cl.backend.is_device:
+            return
+        sig = self._bundle_sig(view, rel)
+        for t, snap in plan.snaps.items():
+            self._warm_bundles[(view.now + t, cl.slot_version(t), sig)] = (
+                snap.wprice, snap.sprice, snap.coloc,
+                snap.max_w, snap.max_s,
+            )
+        if len(self._warm_bundles) > 16384:
+            # bounded store: evict the oldest absolute slots first
+            drop = sorted({k[0] for k in self._warm_bundles})
+            cut = drop[len(drop) // 2]
+            self._warm_bundles = {
+                k: v for k, v in self._warm_bundles.items() if k[0] >= cut
+            }
 
     def pd_gap_stats(self) -> Optional[Dict[str, object]]:
         """Primal-dual telemetry snapshot (engine folds it into the
@@ -343,12 +412,16 @@ class PDORSPolicy(SchedulingPolicy):
                     cfg, rng = self._offer_cfg(job)
                     offer_env[job.job_id] = (cfg, rng)
                     rel = view.rel_job(job)
-                    plans[job.job_id] = (
-                        SolvePlan(rel, view.cluster, self.prices, cfg,
-                                  rel.arrival, view.lookahead - 1,
-                                  quanta=self.quanta)
-                        if rel.arrival < view.lookahead else None
-                    )
+                    if rel.arrival < view.lookahead:
+                        plan = SolvePlan(rel, view.cluster, self.prices,
+                                         cfg, rel.arrival,
+                                         view.lookahead - 1,
+                                         quanta=self.quanta,
+                                         warm=self._warm_for(view, rel))
+                        self._harvest_bundles(view, rel, plan)
+                    else:
+                        plan = None
+                    plans[job.job_id] = plan
                 solve_plans([p for p in plans.values() if p is not None])
             for job in event.jobs:
                 cfg, rng = offer_env.get(job.job_id, (None, None))
@@ -489,6 +562,8 @@ class FIFOPolicy(_SlotPolicy):
     the job's derived rng), strict head-of-line blocking, resources held
     until completion (the held allocation is re-granted every slot)."""
 
+    wants_progress = False
+
     def __init__(self, max_workers: int = 30):
         self.max_workers = max_workers
         self.fixed: Dict[int, int] = {}
@@ -512,8 +587,9 @@ class FIFOPolicy(_SlotPolicy):
         for job in event.jobs:  # engine supplies (arrival, job_id) order
             held = self.held.get(job.job_id)
             if held is not None:
-                if view.cluster.fits(0, job, held):
-                    view.commit(view.now, job, held)
+                # regrant = the fits(0,...)+commit(now,...) pair fused
+                # (bit-identical decision and ledger; see RollingWindow)
+                if view.regrant(job, held):
                     dec.grants[job.job_id] = held
                 else:
                     # a fault shrank capacity under the lease (machine
@@ -548,6 +624,8 @@ class DRFPolicy(_SlotPolicy):
     ``drf_grant_loop`` the static ``DRFScheduler`` runs — only the
     placement substrate differs (a rolling-window free map instead of the
     fixed-horizon cluster)."""
+
+    wants_progress = False
 
     def on_slot(self, event: Event, view: RollingWindow) -> Decision:
         actives = list(event.jobs)
@@ -592,8 +670,7 @@ class DormPolicy(_SlotPolicy):
         for job in actives:          # re-grant held allocations first
             held = self.held.get(job.job_id)
             if held is not None:
-                if view.cluster.fits(0, job, held):
-                    view.commit(view.now, job, held)
+                if view.regrant(job, held):
                     dec.grants[job.job_id] = held
                 else:
                     # capacity shrank under the lease (fault domain):

@@ -47,6 +47,14 @@ class RollingWindow:
         # job_id -> {absolute slot -> Allocation}
         self.commitments: Dict[int, Dict[int, Allocation]] = {}
         self.jobs: Dict[int, JobSpec] = {}
+        # absolute slot -> {job_id}: inverse of commitments, so the batched
+        # engine's progress accounting walks only the jobs that actually
+        # hold a row in the current slot instead of scanning every active
+        # job (jobs without an allocation are exact no-ops in that scan)
+        self._slot_jobs: Dict[int, set] = {}
+        # job_id -> (job, alloc, need items, machines array, need matrix):
+        # identity-validated demand cache for the re-grant fast path
+        self._regrant_cache: Dict[int, tuple] = {}
 
     # ------------------------------------------------------------------
     @property
@@ -87,6 +95,8 @@ class RollingWindow:
             if not slots:
                 del self.commitments[jid]
                 self.jobs.pop(jid, None)
+        for ta in [ta for ta in self._slot_jobs if ta < t_abs]:
+            del self._slot_jobs[ta]
 
     # ------------------------------------------------------------------
     def commit(self, t_abs: int, job: JobSpec, alloc: Allocation) -> None:
@@ -111,6 +121,7 @@ class RollingWindow:
             for h, s in alloc.ps.items():
                 prev.ps[h] = prev.ps.get(h, 0) + s
         self.jobs[job.job_id] = job
+        self._slot_jobs.setdefault(t_abs, set()).add(job.job_id)
 
     def commit_schedule(
         self, job: JobSpec, schedule: Dict[int, Allocation]
@@ -120,6 +131,59 @@ class RollingWindow:
 
     def alloc_at(self, job_id: int, t_abs: int) -> Optional[Allocation]:
         return self.commitments.get(job_id, {}).get(t_abs)
+
+    def holders_at(self, t_abs: int):
+        """Job ids holding a committed row at ``t_abs`` (unordered)."""
+        return self._slot_jobs.get(t_abs, ())
+
+    def regrant(self, job: JobSpec, alloc: Allocation) -> bool:
+        """Fused fits+commit for the slot-driven re-grant hot path.
+
+        Equivalent (decision- and bit-identical) to
+        ``cluster.fits(0, job, alloc) and (commit(now, job, alloc) or True)``
+        but computes the per-machine demand vectors once per (job, alloc)
+        object pair and touches only the machines the allocation uses: the
+        free rows are ``capacity_matrix[hs] - used[0][hs]`` — elementwise
+        the same cells ``free_matrix(0)`` would produce — and the feasible
+        branch applies the exact ``ledger_add`` op ``commit`` would. Slot
+        policies (FIFO/Dorm) re-grant every held allocation every slot, so
+        this path dominates stream-scale wall time."""
+        cl = self.cluster
+        ent = self._regrant_cache.get(job.job_id)
+        if ent is None or ent[0] is not job or ent[1] is not alloc:
+            items = cl._alloc_need(job, alloc)
+            hs = np.array([h for h, _ in items], dtype=np.intp)
+            need = np.stack([n for _, n in items]) if items else \
+                np.zeros((0, len(cl.resources)))
+            ent = (job, alloc, items, hs, need)
+            self._regrant_cache[job.job_id] = ent
+        _, _, items, hs, need = ent
+        if cl.backend.is_device:
+            free_rows = cl.free_matrix(0)[hs]
+        else:
+            free_rows = cl.capacity_matrix[hs] - cl._used[0][hs]
+        if (need > free_rows + 1e-9).any():
+            return False
+        if alloc.empty():
+            return True
+        # inlined cluster.commit(0, ...) reusing the cached need items
+        cl.version += 1
+        cl._slot_versions[0] = cl.version
+        cl._used = cl.backend.ledger_add(cl._used, 0, items)
+        t_abs = self.now
+        slots = self.commitments.setdefault(job.job_id, {})
+        prev = slots.get(t_abs)
+        if prev is None:
+            slots[t_abs] = Allocation(workers=dict(alloc.workers),
+                                      ps=dict(alloc.ps))
+        else:
+            for h, w in alloc.workers.items():
+                prev.workers[h] = prev.workers.get(h, 0) + w
+            for h, s in alloc.ps.items():
+                prev.ps[h] = prev.ps.get(h, 0) + s
+        self.jobs[job.job_id] = job
+        self._slot_jobs.setdefault(t_abs, set()).add(job.job_id)
+        return True
 
     def release_from(self, job_id: int, from_abs: int) -> int:
         """Release every commitment of ``job_id`` at slots >= ``from_abs``
@@ -134,10 +198,49 @@ class RollingWindow:
             if self.in_window(ta):
                 self.cluster.release(self.rel(ta), job, slots[ta])
             del slots[ta]
+            sj = self._slot_jobs.get(ta)
+            if sj is not None:
+                sj.discard(job_id)
+                if not sj:
+                    del self._slot_jobs[ta]
         if not slots:
             self.commitments.pop(job_id, None)
             self.jobs.pop(job_id, None)
+            self._regrant_cache.pop(job_id, None)
         return len(hit)
+
+    def release_many(self, pairs: List[Tuple[int, int]]) -> Dict[int, int]:
+        """Grouped ``release_from``: pairs of (job_id, from_abs), applied
+        in list order under a single ledger version bump
+        (``Cluster.release_group``). Returns {job_id: slots released}.
+        The per-(job, slot) subtraction order is exactly the order a
+        sequence of ``release_from`` calls would produce, so the ledger
+        bit patterns match the per-event oracle."""
+        group = []
+        counts: Dict[int, int] = {}
+        for job_id, from_abs in pairs:
+            slots = self.commitments.get(job_id)
+            if not slots:
+                counts[job_id] = 0
+                continue
+            job = self.jobs[job_id]
+            hit = [ta for ta in slots if ta >= from_abs]
+            for ta in hit:
+                if self.in_window(ta):
+                    group.append((self.rel(ta), job, slots[ta]))
+                del slots[ta]
+                sj = self._slot_jobs.get(ta)
+                if sj is not None:
+                    sj.discard(job_id)
+                    if not sj:
+                        del self._slot_jobs[ta]
+            if not slots:
+                self.commitments.pop(job_id, None)
+                self.jobs.pop(job_id, None)
+                self._regrant_cache.pop(job_id, None)
+            counts[job_id] = len(hit)
+        self.cluster.release_group(group)
+        return counts
 
     def jobs_on_machine(self, h: int) -> List[int]:
         """Job ids holding any committed row that touches machine ``h``,

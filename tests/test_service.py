@@ -1,0 +1,220 @@
+"""OfferService integration tests (ISSUE 8 tentpole c).
+
+Covers the service-shaped boundary around ``PDORS.offer_batch``:
+long-poll grant round-trips, heartbeat-expiry eviction, concurrent-batch
+admission determinism (byte-identical to a single ``offer_batch`` over
+the same jobs), the ``/metrics`` exposition, and graceful shutdown with
+no dropped offers. Everything runs on a plain asyncio loop — no server
+framework, no sockets except the minimal-HTTP test."""
+from __future__ import annotations
+
+import asyncio
+import json
+
+import pytest
+
+from repro.core import make_cluster
+from repro.core.pdors import PDORS
+from repro.core.pricing import estimate_price_params
+from repro.sim import OfferService, TraceConfig, sample_jobs
+
+
+def _jobs(n=24, seed=5):
+    return sample_jobs(
+        TraceConfig(num_jobs=n, seed=seed, arrival_rate=4.0), n)
+
+
+def _scheduler(jobs, H=6, W=24, quanta=8):
+    cl = make_cluster(H, W)
+    params = estimate_price_params(jobs, cl, cl.horizon)
+    return PDORS(cl, params, quanta=quanta)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+# ----------------------------------------------------------------------
+def test_long_poll_round_trip():
+    async def main():
+        jobs = _jobs()
+        svc = await OfferService(_scheduler(jobs),
+                                 batch_window=0.001).start()
+        svc.register("w0", cores=4)
+        # poller parks BEFORE any grant exists, then wakes on admission
+        poller = asyncio.create_task(svc.poll("w0", timeout=5.0))
+        await asyncio.sleep(0.01)
+        assert not poller.done()
+        recs = await asyncio.gather(*[svc.submit(j) for j in jobs])
+        admitted = sum(r.admitted for r in recs)
+        assert admitted > 0
+        grants = list(await poller)
+        while True:
+            more = await svc.poll("w0", timeout=0.05)
+            if not more:
+                break
+            grants.extend(more)
+        assert len(grants) == admitted
+        granted_ids = {g["job_id"] for g in grants}
+        assert granted_ids == {r.job.job_id for r in recs if r.admitted}
+        for g in grants:
+            assert g["schedule"], "admitted grant carries its schedule"
+        await svc.close()
+
+    asyncio.run(main())
+
+
+def test_heartbeat_expiry_eviction():
+    async def main():
+        clock = FakeClock()
+        svc = await OfferService(_scheduler(_jobs()), heartbeat_timeout=10.0,
+                                 clock=clock).start()
+        svc.register("w0", cores=2)
+        svc.register("w1", cores=2)
+        clock.t += 8.0
+        assert svc.heartbeat("w0")           # w0 stays fresh
+        clock.t += 4.0                       # w1 lapsed (12s > 10s)
+        assert svc.evict_expired() == ["w1"]
+        snap = svc.workers_snapshot()
+        assert [w["worker_id"] for w in snap["workers"]] == ["w0"]
+        with pytest.raises(LookupError):
+            await svc.poll("w1", timeout=0.01)
+        assert not svc.heartbeat("w1")       # evicted: must re-register
+        assert svc.evictions_total == 1
+        await svc.close()
+
+    asyncio.run(main())
+
+
+def test_concurrent_batch_admission_determinism():
+    """Concurrent submissions land in one batch, sorted by job_id — the
+    admissions and schedules are byte-identical to a single
+    ``offer_batch`` call over the same jobs on a fresh ledger."""
+    async def main():
+        jobs = _jobs(n=20, seed=9)
+        svc = await OfferService(_scheduler(jobs),
+                                 batch_window=0.002).start()
+        # submit in scrambled order; the service must impose its own
+        recs = await asyncio.gather(
+            *[svc.submit(j) for j in reversed(jobs)])
+        await svc.close()
+        assert svc.batches_total == 1
+        via_service = {r.job.job_id: (r.admitted,
+                                      dict(r.schedule.slots) if r.schedule
+                                      else None)
+                       for r in recs}
+        ref = _scheduler(jobs)
+        ref_recs = ref.offer_batch(sorted(jobs, key=lambda j: j.job_id))
+        via_batch = {r.job.job_id: (r.admitted,
+                                    dict(r.schedule.slots) if r.schedule
+                                    else None)
+                     for r in ref_recs}
+        assert via_service == via_batch
+
+    asyncio.run(main())
+
+
+def test_metrics_exposition_schema():
+    async def main():
+        jobs = _jobs(n=12, seed=2)
+        svc = await OfferService(_scheduler(jobs),
+                                 batch_window=0.001).start()
+        svc.register("w0")
+        await asyncio.gather(*[svc.submit(j) for j in jobs])
+        text = svc.metrics_text()
+        for series in (
+            "repro_service_offers_total",
+            "repro_service_admitted_total",
+            "repro_service_batches_total",
+            "repro_service_workers_alive",
+            "repro_service_grants_pending",
+            "repro_service_admission_latency_p50_ms",
+            "repro_service_admission_latency_p99_ms",
+        ):
+            assert f"\n{series} " in text or text.startswith(f"{series} "), \
+                series
+        # prometheus exposition shape: HELP/TYPE comments + value lines
+        assert "# HELP repro_service_offers_total" in text
+        lat = svc.admission_latency()
+        assert lat["count"] == len(jobs)
+        assert lat["p99_ms"] >= lat["p50_ms"] >= 0.0
+        await svc.close()
+
+    asyncio.run(main())
+
+
+def test_graceful_shutdown_no_dropped_offers():
+    """``close()`` flushes queued submissions through a final batch;
+    every future resolves and every admitted grant stays pollable."""
+    async def main():
+        jobs = _jobs(n=16, seed=7)
+        # huge batch window: submissions are still queued when close()
+        # lands, so the final flush is what offers them
+        svc = await OfferService(_scheduler(jobs), batch_window=30.0).start()
+        svc.register("w0", cores=2)
+        subs = [asyncio.create_task(svc.submit(j)) for j in jobs]
+        await asyncio.sleep(0.01)
+        assert not any(t.done() for t in subs)
+        await svc.close()
+        recs = await asyncio.gather(*subs)
+        assert len(recs) == len(jobs)
+        admitted = sum(r.admitted for r in recs)
+        assert admitted > 0
+        assert svc.offers_total == len(jobs)
+        # grants queued before/at close remain pollable after close
+        grants = []
+        while True:
+            more = await svc.poll("w0", timeout=0.05)
+            if not more:
+                break
+            grants.extend(more)
+        assert len(grants) == admitted
+        with pytest.raises(RuntimeError):
+            await svc.submit(jobs[0])
+
+    asyncio.run(main())
+
+
+def test_minimal_http_front_end():
+    async def main():
+        svc = await OfferService(_scheduler(_jobs())).start()
+        server = await svc.start_http("127.0.0.1", 0)
+        port = server.sockets[0].getsockname()[1]
+
+        async def req(method, path, body=None):
+            reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                           port)
+            payload = json.dumps(body).encode() if body is not None else b""
+            writer.write(
+                f"{method} {path} HTTP/1.1\r\nHost: x\r\n"
+                f"Content-Length: {len(payload)}\r\n\r\n".encode()
+                + payload)
+            await writer.drain()
+            raw = await reader.read()
+            writer.close()
+            head, _, data = raw.partition(b"\r\n\r\n")
+            return head.split(b" ", 2)[1].decode(), data
+
+        status, _ = await req("POST", "/register",
+                              {"worker_id": "w0", "cores": 3})
+        assert status == "200"
+        status, body = await req("GET", "/workers")
+        assert status == "200"
+        snap = json.loads(body)
+        assert snap["total_slots"] == 3
+        status, _ = await req("POST", "/heartbeat", {"worker_id": "w0"})
+        assert status == "200"
+        status, body = await req("GET", "/metrics")
+        assert status == "200"
+        assert b"repro_service_workers_alive" in body
+        status, _ = await req("GET", "/nope")
+        assert status == "404"
+        server.close()
+        await server.wait_closed()
+        await svc.close()
+
+    asyncio.run(main())

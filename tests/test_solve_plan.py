@@ -219,3 +219,152 @@ def test_plan_lp_results_stackable_across_jobs():
             assert a.status == b.status
             if a.x is not None:
                 assert np.array_equal(a.x, b.x)
+
+
+# ======================================================================
+# ISSUE 8 tentpole b: warm-started re-offers — SolvePlan.patch parity
+# ======================================================================
+def _theta_equal(a, b):
+    if a is None or b is None:
+        return a is b
+    return (a.cost == b.cost and a.mode == b.mode
+            and a.alloc.workers == b.alloc.workers
+            and a.alloc.ps == b.alloc.ps)
+
+
+def _plan_fixture(seed=3, H=8, T=8, N=10, scale=0.08):
+    cfgw = WorkloadConfig(num_jobs=N, horizon=T, seed=seed,
+                          batch=(50, 200), workload_scale=scale)
+    jobs = sorted(synthetic_jobs(cfgw), key=lambda j: (j.arrival, j.job_id))
+    cluster = make_cluster(H, T)
+    params = estimate_price_params(jobs, cluster, T)
+    prices = PriceTable(params, cluster)
+    return jobs, cluster, prices
+
+
+@pytest.mark.parametrize("rng_mode", ["compat", "derived"])
+@pytest.mark.parametrize("solve_first", [False, True])
+def test_patched_plan_matches_cold_rebuild(rng_mode, solve_first):
+    """Build a plan, mutate a couple of ledger slots underneath it, patch
+    it — then compare the resolved theta memo against a cold rebuild at
+    the mutated ledger: bit-identical in BOTH rng modes, whether the LP
+    batch was solved before or after going stale (a pre-solved plan keeps
+    its clean slots' LP results)."""
+    from repro.core.job import Allocation
+
+    jobs, cluster, prices = _plan_fixture()
+    T = cluster.horizon
+    job = jobs[1]
+    cfg = SubproblemConfig(rng_mode=rng_mode, seed=11)
+    plan = SolvePlan(job, cluster, prices, cfg, job.arrival, T - 1,
+                     quanta=32)
+    if solve_first:
+        plan.solve()
+    # dirty two slots (an admission-shaped mutation), leave the rest
+    other = jobs[0]
+    cluster.commit(1, other, Allocation(workers={0: 2}, ps={1: 1}))
+    cluster.commit(3, other, Allocation(workers={2: 1}, ps={2: 1}))
+    assert not plan.fresh()
+    assert plan.patch(skip=set())
+    assert plan.fresh()
+
+    cold = SolvePlan(job, cluster, prices, cfg, job.arrival, T - 1,
+                     quanta=32)
+    plan.solve()
+    cold.solve()
+    assert len(plan.lp_results) == len(cold.lp_results)
+
+    memo_p, memo_c = {}, {}
+    rng_p = np.random.default_rng(99)
+    rng_c = np.random.default_rng(99)
+    plan.resolve_into(memo_p, lambda t, v: rng_p)
+    cold.resolve_into(memo_c, lambda t, v: rng_c)
+    assert set(memo_p) == set(memo_c)
+    for k in memo_p:
+        assert _theta_equal(memo_p[k], memo_c[k]), k
+    if rng_mode == "compat":
+        # the shared stream positions must match exactly too
+        assert rng_p.integers(1 << 30) == rng_c.integers(1 << 30)
+
+
+def test_patch_noop_when_fresh_and_refuses_after_slide():
+    """Staleness drill: a fresh plan patches trivially; a window slide
+    (Cluster.advance) shifts what relative indices mean, so patch must
+    refuse and force the rebuild path."""
+    jobs, cluster, prices = _plan_fixture()
+    T = cluster.horizon
+    job = jobs[1]
+    plan = SolvePlan(job, cluster, prices, SubproblemConfig(),
+                     job.arrival, T - 1, quanta=32)
+    assert plan.patch() is True          # fresh: nothing to do
+    cluster.advance(1)
+    assert not plan.fresh()
+    assert plan.patch() is False         # slid: caller must rebuild
+
+
+@pytest.mark.parametrize("rng_mode", ["compat", "derived"])
+def test_offer_with_stale_plan_patches_decision_identical(rng_mode):
+    """End-to-end through the DP drop site (_ensure_plan): offering with
+    a stale injected plan now patches it in place — decisions must equal
+    a replay that never saw the stale plan. The patch really runs (the
+    registry counter moves)."""
+    from repro.obs.metrics import get_registry
+
+    jobs, cluster, prices = _plan_fixture(seed=6, scale=0.3, H=10, N=12)
+    params = estimate_price_params(jobs, cluster, cluster.horizon)
+    cfg = SubproblemConfig(rng_mode=rng_mode)
+    sched = PDORS(cluster, params, cfg=cfg, quanta=32, seed=6)
+    stale = sched._build_plan(jobs[1])
+    assert stale is not None
+    before = get_registry().value("repro_plan_patches_total")
+    rec0 = sched.offer(jobs[0])
+    rec1 = sched.offer(jobs[1], plan=stale)
+    if rec0.admitted:
+        assert get_registry().value("repro_plan_patches_total") > before
+
+    cluster2 = make_cluster(10, cluster.horizon)
+    sched2 = PDORS(cluster2, params, cfg=cfg, quanta=32, seed=6)
+    sched2.offer(jobs[0])
+    rec1b = sched2.offer(jobs[1])
+    assert _decisions([rec1]) == _decisions([rec1b])
+
+
+def test_warm_bundle_reoffers_bit_identical():
+    """Sim-level requeue/preempt re-offers: the PDORS policy's warm
+    bundle store (slot-version-keyed reuse of the fused decision
+    bundles) must leave every decision bit-identical to a run with the
+    store disabled — and must actually get hits on a faulty trace."""
+    from repro.obs.metrics import get_registry
+    from repro.sim import (
+        RollingWindow, SimEngine, TraceConfig,
+        calibrate_prices, make_policy, stream,
+    )
+
+    def run(disable_warm):
+        # clean trace, heavy job-failure/re-fail churn: machine incidents
+        # stamp every ledger row (set_capacity_mask), so chaos traces
+        # rarely reuse bundles — job-level re-offers are the hit path
+        tcfg = TraceConfig(num_jobs=60, seed=4, arrival_rate=5.0,
+                           failure_rate=0.4)
+        cl = make_cluster(6, 12)
+        win = RollingWindow(cl)
+        pol = make_policy("pdors",
+                          price_params=calibrate_prices(tcfg, cl, n=16),
+                          quanta=8)
+        if disable_warm:
+            pol._warm_for = lambda view, rel: None
+            pol._harvest_bundles = lambda view, rel, plan: None
+        eng = SimEngine(win, pol, seed=4, max_slots=2000,
+                        patience=tcfg.patience, engine_mode="batched",
+                        refail_rate=0.4)
+        rep = eng.run(stream(tcfg))
+        return rep, eng
+
+    before = get_registry().value("repro_warm_bundle_hits_total")
+    r_warm, e_warm = run(disable_warm=False)
+    assert get_registry().value("repro_warm_bundle_hits_total") > before
+    r_cold, e_cold = run(disable_warm=True)
+    assert r_warm.summary == r_cold.summary
+    assert np.array_equal(np.asarray(e_warm.window.cluster._used),
+                          np.asarray(e_cold.window.cluster._used))
+    assert e_warm.journal == e_cold.journal
