@@ -64,6 +64,17 @@ SMOKE_GRID = [(6, 12, "google", 60, 3.0, 0.10)]
 # service-latency row through the asyncio OfferService boundary
 STREAM_GRID = [(8, 16, "google", 100_000, 4.0, 0.02)]
 STREAM_SMOKE_GRID = [(6, 12, "google", 4000, 4.0, 0.02)]
+# elastic tier: a reshape storm (most jobs elastic, both the SLAQ shrink
+# and adadamp grow triggers armed, deadlines + loss SLOs riding along);
+# each row also replays the identical trace through the per-event oracle
+# and records batched-vs-event bit-parity (engine_parity)
+ELASTIC_GRID = [(8, 16, "google", 300, 4.0, 0.05)]
+ELASTIC_SMOKE_GRID = [(6, 12, "google", 60, 3.0, 0.10)]
+ELASTIC_KNOBS = dict(
+    elastic_frac=0.7, elastic_levels=(0.5, 1.0, 1.5),
+    marginal_floor=0.15, damper_loss=0.6,
+    deadline_frac=0.5, slo_frac=0.5,
+)
 SERVICE_JOBS_CAP = 1500
 QUANTA = 12
 CALIB_JOBS = 48
@@ -249,6 +260,73 @@ def run_stream_point(
     return row
 
 
+def run_elastic_point(
+    H: int,
+    W: int,
+    preset: str,
+    num_jobs: int,
+    rate: float,
+    failure_rate: float,
+    policies: List[str],
+    seed: int,
+    max_slots: int,
+) -> List[Dict]:
+    """Elastic-tier rows: a reshape storm replayed per policy through the
+    batched engine (throughput + quality columns) AND the per-event
+    oracle, recording ``engine_parity`` — bit-identical summary and slot
+    count across engine modes on the same elastic trace."""
+    tcfg = TraceConfig(
+        preset=preset, num_jobs=num_jobs, seed=seed, arrival_rate=rate,
+        failure_rate=failure_rate, **ELASTIC_KNOBS,
+    )
+    rows = []
+    for name in policies:
+        reports = {}
+        for mode in ("batched", "event"):
+            cluster = make_cluster(H, W)
+            window = RollingWindow(cluster)
+            if name.startswith("pdors"):
+                params = calibrate_prices(tcfg, cluster, n=CALIB_JOBS)
+                policy = make_policy(name, price_params=params,
+                                     quanta=QUANTA)
+            else:
+                policy = make_policy(name)
+            engine = SimEngine(
+                window, policy, seed=seed, max_slots=max_slots,
+                patience=tcfg.patience, engine_mode=mode,
+            )
+            t0 = time.perf_counter()
+            report = engine.run(stream(tcfg))
+            reports[mode] = (report, time.perf_counter() - t0)
+        rb, wall = reports["batched"]
+        re_, _ = reports["event"]
+        parity = (rb.summary == re_.summary
+                  and rb.slots_run == re_.slots_run)
+        s = rb.summary
+        rows.append({
+            "kind": "elastic", "H": H, "W": W, "preset": preset,
+            "num_jobs": num_jobs, "arrival_rate": rate,
+            "failure_rate": failure_rate, "seed": seed, "quanta": QUANTA,
+            "backend": "numpy", "faults": False, "policy": name,
+            "engine_mode": "batched", "engine_parity": parity,
+            **{f"elastic_{k}": (list(v) if isinstance(v, tuple) else v)
+               for k, v in ELASTIC_KNOBS.items()},
+            "wall_s": wall,
+            "jobs_per_sec": num_jobs / wall if wall else float("inf"),
+            "slots_run": rb.slots_run, **s,
+        })
+        print(
+            f"  {name:>10} [elastic]: {num_jobs / wall:8.1f} jobs/s "
+            f"reshapes={s['reshapes']} "
+            f"ddl={s['deadline_hits']}/{s['deadline_jobs']} "
+            f"slo={s['slo_hits']}/{s['slo_jobs']} "
+            f"loss={s['final_loss_mean']:.3f} "
+            f"parity={'OK' if parity else 'BROKEN'}",
+            flush=True,
+        )
+    return rows
+
+
 def run_service_point(
     H: int,
     W: int,
@@ -332,6 +410,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--smoke-scale", action="store_true",
                     help="CI-sized stream tier (same rows as --stream at "
                          "a scaled-down job count)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="elastic tier: replay a reshape storm (SLAQ "
+                         "shrink + adadamp grow triggers armed, deadlines "
+                         "and loss SLOs attached) per policy; rows carry "
+                         "kind=elastic, the quality/SLO columns, and an "
+                         "engine_parity bool (batched vs per-event oracle "
+                         "bit-identity on the same elastic trace)")
     ap.add_argument("--jobs", type=int, default=None,
                     help="override the stream tier's job count (e.g. "
                          "--stream --jobs 100000)")
@@ -386,6 +471,39 @@ def main(argv: Optional[List[str]] = None) -> int:
                 args.out, all_rows, meta,
                 key_fields=("kind", "H", "W", "preset", "num_jobs",
                             "arrival_rate", "seed", "policy"),
+            )
+        else:
+            doc = dict(meta, rows=all_rows)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {args.out} ({len(all_rows)} fresh rows, "
+              f"{len(doc['rows'])} total)")
+        return 0
+
+    if args.elastic:
+        grid = ELASTIC_SMOKE_GRID if args.smoke else ELASTIC_GRID
+        policies = [p for p in args.policies.split(",") if p]
+        for p in policies:
+            if p not in available_policies():
+                ap.error(f"unknown policy {p!r}; available: "
+                         f"{available_policies()}")
+        all_rows = []
+        for (H, W, preset, n, rate, frate) in grid:
+            print(f"# elastic H={H} W={W} preset={preset} jobs={n} "
+                  f"rate={rate} failures={frate} ...", flush=True)
+            t0 = time.time()
+            all_rows.extend(run_elastic_point(
+                H, W, preset, n, rate, frate, policies, args.seed,
+                args.max_slots))
+            print(f"# point done in {time.time() - t0:.1f}s", flush=True)
+        meta = {"quanta": QUANTA, "calib_jobs": CALIB_JOBS}
+        if args.append:
+            from .bench_scheduler import merge_rows
+            doc = merge_rows(
+                args.out, all_rows, meta,
+                key_fields=("kind", "H", "W", "preset", "num_jobs",
+                            "arrival_rate", "failure_rate", "seed",
+                            "policy"),
             )
         else:
             doc = dict(meta, rows=all_rows)

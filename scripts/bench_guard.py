@@ -105,6 +105,56 @@ def _check_stream(rows: list, args) -> int:
     return 1 if failed else 0
 
 
+def _check_elastic(rows: list, args) -> int:
+    """Elastic-tier gates on fresh bench_sim --elastic rows: batched-vs-
+    event bit-parity must hold per row, reshapes must actually fire (a
+    storm that never reshapes is a dead trigger, not a pass), and the
+    loss-SLO attainment floor holds. Same convention as the stream gates:
+    a requested gate matching NO row fails loudly."""
+    failed = 0
+    par_checked = resh_checked = slo_checked = 0
+    for row in rows:
+        if row.get("kind") != "elastic":
+            continue
+        label = f"{row.get('policy')} [elastic] jobs={row.get('num_jobs')}"
+        if args.elastic_require_parity:
+            par_checked += 1
+            ok = bool(row.get("engine_parity"))
+            if not ok:
+                failed += 1
+            print(f"bench_guard: {label}: batched-vs-event parity "
+                  f"{'OK' if ok else 'BROKEN: FAIL'}")
+        if args.elastic_min_reshapes is not None:
+            resh_checked += 1
+            n = row.get("reshapes", 0)
+            ok = n >= args.elastic_min_reshapes
+            if not ok:
+                failed += 1
+            print(f"bench_guard: {label}: {n} reshapes vs floor "
+                  f"{args.elastic_min_reshapes} "
+                  f"{'OK' if ok else 'REGRESSION'}")
+        if args.elastic_min_slo_attainment is not None:
+            slo_checked += 1
+            att = row.get("slo_attainment", 0.0)
+            ok = att >= args.elastic_min_slo_attainment
+            if not ok:
+                failed += 1
+            print(f"bench_guard: {label}: SLO attainment {att:.2f} vs "
+                  f"floor {args.elastic_min_slo_attainment:.2f} "
+                  f"{'OK' if ok else 'REGRESSION'}")
+    for gate, n, name in (
+        (args.elastic_require_parity or None, par_checked, "parity gate"),
+        (args.elastic_min_reshapes, resh_checked, "reshape floor"),
+        (args.elastic_min_slo_attainment, slo_checked,
+         "SLO-attainment floor"),
+    ):
+        if gate is not None and n == 0:
+            print(f"bench_guard: elastic {name} set but NO kind=elastic "
+                  "fresh row — gate not enforced: FAIL")
+            failed += 1
+    return 1 if failed else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("fresh", help="just-produced smoke benchmark json")
@@ -133,6 +183,19 @@ def main(argv=None) -> int:
                     help="stream mode: max admission-latency p99 (ms) for "
                          "every fresh row carrying admission_p99_ms "
                          "(stream AND service rows)")
+    ap.add_argument("--elastic-require-parity", action="store_true",
+                    help="elastic mode: every fresh kind=elastic row must "
+                         "report engine_parity=true (batched engine "
+                         "bit-identical to the per-event oracle on the "
+                         "same reshape storm)")
+    ap.add_argument("--elastic-min-reshapes", type=int, default=None,
+                    help="elastic mode: min reshape count per fresh "
+                         "kind=elastic row (the storm's triggers must "
+                         "actually fire)")
+    ap.add_argument("--elastic-min-slo-attainment", type=float,
+                    default=None,
+                    help="elastic mode: min loss-SLO attainment per fresh "
+                         "kind=elastic row")
     ap.add_argument("--allow-missing-baseline", action="store_true",
                     help="downgrade a fresh grid point with no baseline "
                          "row from FAIL to a skip notice (for machines "
@@ -144,10 +207,18 @@ def main(argv=None) -> int:
         return 0
     stream_gates = (args.stream_min_jobs_per_sec, args.stream_max_rss_mb,
                     args.stream_max_p99_ms)
-    if any(g is not None for g in stream_gates):
+    elastic_gates = (args.elastic_require_parity or None,
+                     args.elastic_min_reshapes,
+                     args.elastic_min_slo_attainment)
+    if any(g is not None for g in stream_gates + elastic_gates):
         with open(args.fresh) as f:
             rows = json.load(f).get("rows", [])
-        return _check_stream(rows, args)
+        rc = 0
+        if any(g is not None for g in stream_gates):
+            rc |= _check_stream(rows, args)
+        if any(g is not None for g in elastic_gates):
+            rc |= _check_elastic(rows, args)
+        return rc
     if args.baseline is None:
         ap.error("baseline json required outside stream mode")
     with open(args.fresh) as f:

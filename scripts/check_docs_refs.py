@@ -56,16 +56,24 @@ PUBLIC_SYMBOLS = {
     "src/repro/core/cluster.py": ["set_capacity_mask",
                                   "machine_overcommitted",
                                   "slot_version", "release_group"],
+    "src/repro/core/job.py": ["QualityCurve", "ElasticProfile",
+                              "at_level", "marginal_floor",
+                              "damper_loss"],
     "src/repro/sim/faults.py": ["FaultPlan", "FaultIncident",
                                 "SolverFaultInjector",
                                 "merge_event_streams"],
     "src/repro/sim/engine.py": ["LedgerInvariantError", "SimKilled",
                                 "checkpoint_every", "refail_rate",
-                                "engine_mode", "admission_latency"],
-    "src/repro/sim/policy.py": ["ResilientPolicy"],
+                                "engine_mode", "admission_latency",
+                                "reshape_cooldown", "ElasticState"],
+    "src/repro/sim/policy.py": ["ResilientPolicy", "use_warm_bundles",
+                                "on_reshape"],
     "src/repro/sim/metrics.py": ["samples_trained", "P2Quantile",
-                                 "job_done", "job_closed"],
-    "src/repro/sim/events.py": ["pop_slot"],
+                                 "job_done", "job_closed",
+                                 "deadline_hit", "slo_hit"],
+    "src/repro/sim/events.py": ["pop_slot", "RESHAPE"],
+    "src/repro/sim/traces.py": ["elastic_frac", "deadline_frac",
+                                "slo_frac"],
     "src/repro/sim/window.py": ["release_many", "holders_at", "regrant"],
     "src/repro/sim/service.py": ["OfferService", "poll", "heartbeat",
                                  "metrics_text", "start_http"],

@@ -69,6 +69,15 @@ python -m benchmarks.bench_sim --smoke-scale \
 python scripts/bench_guard.py BENCH_sim_stream_smoke.json \
   --stream-min-jobs-per-sec 400 --stream-max-rss-mb 1024 \
   --stream-max-p99-ms 2000
+# elastic smoke: a reshape storm (SLAQ shrink + adadamp grow triggers,
+# deadlines and loss SLOs) replayed per policy; every row must report
+# batched-vs-event bit-parity on the elastic trace, reshapes actually
+# firing, and the loss-SLO attainment floor (see docs/BENCHMARKS.md)
+python -m benchmarks.bench_sim --smoke --elastic \
+  --out BENCH_sim_elastic_smoke.json
+python scripts/bench_guard.py BENCH_sim_elastic_smoke.json \
+  --elastic-require-parity --elastic-min-reshapes 1 \
+  --elastic-min-slo-attainment 0.5
 python scripts/bench_guard.py BENCH_scheduler_smoke.json BENCH_scheduler.json \
   --max-drop 0.30 --min-speedup 2.5 --min-speedup-scale 0.3 \
   --min-speedup-point 25x20x50

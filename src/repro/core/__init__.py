@@ -3,6 +3,7 @@ distributed ML jobs with locality-aware worker/PS placement.
 
 Public API:
     JobSpec, SigmoidUtility, Allocation      — job model (paper §3)
+    QualityCurve, ElasticProfile             — elastic/quality annotations
     Cluster, Machine, make_cluster           — cluster model
     PriceParams, PriceTable, estimate_price_params — Q_h^r pricing (Eq. 12)
     solve_theta                              — Algorithm 4
@@ -15,7 +16,13 @@ Public API:
     offline_optimum                          — Fig. 10 offline OPT
     synthetic_jobs, trace_jobs, arch_jobs    — §5 workload generators
 """
-from .job import JobSpec, SigmoidUtility, Allocation
+from .job import (
+    Allocation,
+    ElasticProfile,
+    JobSpec,
+    QualityCurve,
+    SigmoidUtility,
+)
 from .cluster import Cluster, Machine, make_cluster
 from .pricing import PriceParams, PriceTable, estimate_price_params
 from .subproblem import SubproblemConfig, ThetaResult, solve_theta
@@ -37,6 +44,7 @@ from .rounding import (
 
 __all__ = [
     "JobSpec", "SigmoidUtility", "Allocation",
+    "QualityCurve", "ElasticProfile",
     "Cluster", "Machine", "make_cluster",
     "PriceParams", "PriceTable", "estimate_price_params",
     "SubproblemConfig", "ThetaResult", "solve_theta",

@@ -9,10 +9,104 @@ Units are abstract but consistent: time in "slots", bandwidth in
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple
 
 Resource = str  # e.g. "gpu", "cpu", "mem", "storage" | "chips", "hbm", ...
+
+
+@dataclass(frozen=True)
+class QualityCurve:
+    """SLAQ-style predicted-loss curve: l(e) = c + 1 / (a * e + b).
+
+    ``e`` counts epochs trained (fractional epochs allowed). ``c`` is the
+    asymptotic floor, ``a`` the convergence rate, ``b`` the intercept
+    (l(0) = c + 1/b). The simulator uses one instance as a job's ground
+    truth and refits a second one online from observed (epoch, loss)
+    points — the fit is closed-form least squares on the linearised
+    1/(l - c_hat) = a*e + b, so it is deterministic and rng-free."""
+
+    a: float
+    b: float
+    c: float = 0.0
+
+    def loss(self, epochs: float) -> float:
+        return self.c + 1.0 / max(1e-9, self.a * max(0.0, epochs) + self.b)
+
+    def marginal(self, epochs: float) -> float:
+        """Predicted loss improvement from one more epoch at ``epochs``."""
+        return self.loss(epochs) - self.loss(epochs + 1.0)
+
+    @classmethod
+    def fit(cls, points: Sequence[Tuple[float, float]]) -> Optional["QualityCurve"]:
+        """Least-squares refit from >= 3 observed (epochs, loss) points.
+
+        The floor c is profiled out over a fixed candidate grid (fractions
+        of the observed loss span below the smallest observation — the
+        transform 1/(l - c_hat) must stay finite); each candidate gets a
+        closed-form linear fit of 1/(l - c_hat) = a*e + b, and the
+        candidate with the smallest squared error in the ORIGINAL loss
+        space wins. Fully deterministic. Degenerate point sets (no epoch
+        spread, no loss spread, non-improving losses) return None and the
+        caller keeps its previous fit."""
+        if len(points) < 3:
+            return None
+        es = [float(e) for e, _ in points]
+        ls = [float(l) for _, l in points]
+        if max(es) - min(es) <= 1e-9:
+            return None
+        l_min = min(ls)
+        span = max(ls) - l_min
+        if span <= 1e-12:
+            return None
+        n = float(len(es))
+        se, sy_e = sum(es), sum(e * e for e in es)
+        denom = n * sy_e - se * se
+        if abs(denom) <= 1e-12:
+            return None
+        best: Optional[Tuple[float, float, float, float]] = None
+        for frac in (0.02, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2):
+            c_hat = l_min - max(1e-4, frac * span)
+            ys = [1.0 / max(1e-9, l - c_hat) for l in ls]
+            sy = sum(ys)
+            sey = sum(e * y for e, y in zip(es, ys))
+            a = (n * sey - se * sy) / denom
+            b = (sy - a * se) / n
+            if a <= 1e-9 or b <= 1e-9:
+                continue  # non-improving fit — useless for marginal decisions
+            sse = sum(
+                (c_hat + 1.0 / (a * e + b) - l) ** 2
+                for e, l in zip(es, ls)
+            )
+            if best is None or sse < best[0]:
+                best = (sse, a, b, c_hat)
+        if best is None:
+            return None
+        return cls(a=best[1], b=best[2], c=best[3])
+
+
+@dataclass(frozen=True)
+class ElasticProfile:
+    """Elastic / quality-driven annotations for a :class:`JobSpec`.
+
+    ``levels`` are demand multipliers (applied to per-worker demands and
+    the global batch size via :meth:`JobSpec.at_level`); ``level`` indexes
+    the current one. ``curve`` is the job's ground-truth loss curve.
+    ``marginal_floor`` > 0 arms the SLAQ shrink trigger (reshape down when
+    the fitted marginal loss improvement per epoch drops below it);
+    ``damper_loss`` > 0 arms the adadamp grow trigger (reshape up — larger
+    batch — once observed loss falls to the damper threshold). ``deadline``
+    is a completion SLO in slots after arrival; ``loss_slo`` a final-loss
+    SLO. All triggers default off, so attaching a profile without arming
+    them is metadata-only and cannot change scheduling decisions."""
+
+    levels: Tuple[float, ...] = (1.0,)
+    level: int = 0
+    curve: Optional[QualityCurve] = None
+    marginal_floor: float = 0.0
+    damper_loss: float = 0.0
+    deadline: Optional[int] = None
+    loss_slo: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -53,6 +147,7 @@ class JobSpec:
     ps_demand: Dict[Resource, float]       # beta_i^r
     utility: SigmoidUtility
     arch: str = "generic"             # architecture tag (configs registry id)
+    elastic: Optional[ElasticProfile] = None  # quality/elastic annotations
 
     # ---- paper Eq. (1)-(3) helpers -------------------------------------
     def total_workload(self) -> float:
@@ -87,6 +182,29 @@ class JobSpec:
         """ceil(E K (tau + 2 g gamma/(b_ext F))): single worker at external
         rate — the slowest-possible completion, used in L (Eq. 14)."""
         return math.ceil(self.total_workload() * self.time_per_sample(internal=False))
+
+    def at_level(self, level: int) -> "JobSpec":
+        """Reshaped copy of this spec at elastic demand level ``level``.
+
+        The new level's multiplier is applied *relative to the current
+        level* (ratio-based), scaling per-worker demands and the global
+        batch size; PS demands and gamma are untouched so the paper's
+        worker:PS coupling survives. Raises if the job is not elastic."""
+        el = self.elastic
+        if el is None:
+            raise ValueError(f"job {self.job_id} has no elastic profile")
+        if not (0 <= level < len(el.levels)):
+            raise ValueError(f"level {level} out of range for {el.levels}")
+        if level == el.level:
+            return replace(self, elastic=replace(el, level=level))
+        ratio = el.levels[level] / el.levels[el.level]
+        wdem = {r: a * ratio for r, a in self.worker_demand.items()}
+        return replace(
+            self,
+            worker_demand=wdem,
+            batch_size=max(1, int(round(self.batch_size * ratio))),
+            elastic=replace(el, level=level),
+        )
 
     def demand(self, n_workers: float, n_ps: float) -> Dict[Resource, float]:
         out: Dict[Resource, float] = {}

@@ -10,11 +10,12 @@ substrate that closes that gap.
 
 Event model
 -----------
-A heap-ordered clock (``events.EventQueue``) drives seven event kinds:
+A heap-ordered clock (``events.EventQueue``) drives the event kinds:
 ARRIVAL, COMPLETION, DEPARTURE, FAILURE, PREEMPT, MACHINE_DOWN,
-MACHINE_UP. Within one slot the processing order is fixed (machine
-recoveries -> machine crashes/degradations -> job failures -> arrival
-batch -> exogenous departures -> slot tick -> progress accounting), and
+MACHINE_UP, RESHAPE. Within one slot the processing order is fixed
+(machine recoveries -> machine crashes/degradations -> job failures ->
+arrival batch -> exogenous departures -> slot tick -> progress
+accounting -> elastic reshape triggers), and
 ties break by insertion order, so a trace replays to the identical event
 log on every run. Same-slot arrivals are
 offered to the policy as ONE batch, which lets the PD-ORS adapter amortize

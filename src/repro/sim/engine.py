@@ -24,7 +24,11 @@ One slot of simulated time is processed as:
      throughput model for every policy); jobs crossing V_i complete, their
      remaining rows are released, utility u_i(actual JCT) is realized;
   6. patience: queued-but-never-served jobs depart after ``patience``
-     slots; metrics record the slot's utilization/active/queued counts.
+     slots; then the elastic reshape scan — running quality-driven jobs
+     whose SLAQ marginal-loss floor or adadamp batch damper tripped get
+     their residual released and re-offered at the new demand level
+     (RESHAPE) — and metrics record the slot's utilization/active/queued
+     counts.
 
 The engine owns ALL accounting (progress, completions, utility, metrics);
 policies only decide allocations. That is what makes the per-policy
@@ -61,7 +65,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.job import Allocation, JobSpec
+from ..core.job import Allocation, JobSpec, QualityCurve
 from ..obs import trace as _trace
 from ..obs.metrics import get_registry
 from .events import Event, EventKind, EventQueue
@@ -70,6 +74,22 @@ from .policy import SchedulingPolicy, derived_rng
 from .window import RollingWindow
 
 _TAG_REFAIL = 13  # derived-seed tag for per-(job, attempt) failure redraws
+
+
+@dataclass
+class ElasticState:
+    """Engine-owned quality accounting for one elastic job (SLAQ's online
+    curve fit lives HERE, not on the frozen spec): observed (epochs, loss)
+    points, the current refit, and the reshape damper state. Progress is
+    read from the job's outcome (cumulative samples across attempts), so
+    the epoch clock survives preempt/requeue cycles."""
+
+    samples_per_epoch: float          # K_i of the original attempt-0 spec
+    observations: List[Tuple[float, float]] = field(default_factory=list)
+    fitted: Optional[QualityCurve] = None
+    last_samples: float = 0.0         # progress watermark (new-point gate)
+    reshapes: int = 0
+    cooldown_until: int = -1          # no reshape before this slot
 
 
 @dataclass
@@ -148,6 +168,7 @@ class SimEngine:
         kill_at: Optional[int] = None,
         refail_rate: float = 0.0,
         refail_delay: Tuple[int, int] = (1, 8),
+        reshape_cooldown: int = 2,
         trace: Optional["_trace.Tracer"] = None,
         metrics_mode: str = "exact",
         engine_mode: str = "event",
@@ -186,6 +207,10 @@ class SimEngine:
         # traces reproducible
         self.refail_rate = float(refail_rate)
         self.refail_delay = refail_delay
+        # elastic jobs: minimum slots between consecutive reshapes of one
+        # job (damper against level flapping); per-job quality state
+        self._reshape_cooldown = int(reshape_cooldown)
+        self._elastic: Dict[int, ElasticState] = {}
         self.metrics = MetricsCollector(
             window.cluster.resources, window.cluster.num_machines,
             mode=metrics_mode,
@@ -416,6 +441,7 @@ class SimEngine:
         oc = self.metrics.outcome(job_id, js.orig_arrival)
         oc.departed_at = t
         self.metrics.count("departure")
+        self._finalize_quality(js, oc)
         self.metrics.job_closed(oc)
         self._notify(EventKind.DEPARTURE, job_id, t)
 
@@ -446,8 +472,16 @@ class SimEngine:
                 js = self.states[job.job_id] = JobState(
                     job=job, orig_arrival=job.arrival
                 )
-                self.metrics.outcome(job.job_id, job.arrival)
+                oc = self.metrics.outcome(job.job_id, job.arrival)
                 self.metrics.count("arrival")
+                el = job.elastic
+                if el is not None:
+                    self._elastic[job.job_id] = ElasticState(
+                        samples_per_epoch=float(max(1, job.num_samples))
+                    )
+                    if el.deadline is not None:
+                        oc.deadline = job.arrival + int(el.deadline)
+                    oc.loss_slo = el.loss_slo
                 if ev.fail_at is not None and ev.fail_at > t:
                     self.queue.push(Event(time=ev.fail_at,
                                           kind=EventKind.FAILURE,
@@ -483,6 +517,7 @@ class SimEngine:
                 self._set_active(js, False)
                 js.finished = True
                 self.metrics.count("rejection")
+                self._finalize_quality(js, oc)
                 self.metrics.job_closed(oc)
             else:
                 # a preempted job whose residual re-offer was rejected: it
@@ -492,6 +527,7 @@ class SimEngine:
                 js.finished = True
                 oc.evicted_at = t
                 self.metrics.count("eviction")
+                self._finalize_quality(js, oc)
                 self.metrics.job_closed(oc)
 
     def _account_progress_batched(self, t: int) -> None:
@@ -525,6 +561,7 @@ class SimEngine:
                 oc.completed_at = t
                 oc.utility = js.job.utility(t - js.orig_arrival)
                 self.metrics.count("completion")
+                self._finalize_quality(js, oc)
                 self.metrics.job_done(oc)
         if done:
             self.window.release_many([(jid, t + 1) for jid in done])
@@ -556,6 +593,7 @@ class SimEngine:
                 oc.completed_at = t
                 oc.utility = js.job.utility(t - js.orig_arrival)
                 self.metrics.count("completion")
+                self._finalize_quality(js, oc)
                 self.metrics.job_done(oc)
                 self._notify(EventKind.COMPLETION, job_id, t)
 
@@ -594,6 +632,105 @@ class SimEngine:
             if oc.first_service is None and t - js.orig_arrival >= self.patience:
                 self._depart(job_id, t)
 
+    # -- elastic / quality-driven jobs ---------------------------------
+    def _finalize_quality(self, js: JobState, oc) -> None:
+        """Stamp the job's final loss from its ground-truth curve at its
+        cumulative epoch count. MUST run before the outcome is folded
+        (``job_done``/``job_closed``): streaming metrics drop the row at
+        the fold, so late writes would be lost. Never-served jobs keep
+        ``final_loss=None`` — they trained nothing, so a loss claim would
+        be fiction (and an automatic SLO miss keeps attribution honest)."""
+        es = self._elastic.pop(js.job.job_id, None)
+        el = js.job.elastic
+        if es is None or el is None or el.curve is None:
+            return
+        if oc.samples_trained > 0:
+            oc.final_loss = el.curve.loss(
+                oc.samples_trained / es.samples_per_epoch
+            )
+
+    def _check_reshapes(self, t: int) -> None:
+        """The RESHAPE trigger scan, shared verbatim by both engine modes
+        (one code path = bit-identical decisions by construction). For
+        every live elastic job with new progress this slot: observe the
+        ground-truth loss at its cumulative epoch count, refresh the SLAQ
+        online fit from the observation history, and — outside the
+        per-job cooldown — fire the adadamp grow trigger (observed loss
+        reached ``damper_loss``: larger batches are safe, scale demand up)
+        or the SLAQ shrink trigger (predicted marginal loss improvement
+        per epoch fell under ``marginal_floor``: free the excess for
+        steeper jobs). Everything here derives from engine-owned progress
+        accounting — no rng — so replay and recovery redo it exactly."""
+        if not self._elastic:
+            return
+        for job_id in sorted(self._elastic):
+            js = self.states.get(job_id)
+            if js is None or js.finished:
+                continue
+            if not js.active or js.awaiting_requeue or js.down_at == t:
+                continue
+            el = js.job.elastic
+            if el is None or el.curve is None:
+                continue
+            es = self._elastic[job_id]
+            oc = self.metrics.outcome(job_id, js.orig_arrival)
+            total = oc.samples_trained
+            if total <= es.last_samples + 1e-9:
+                continue  # no new progress this slot — no new observation
+            es.last_samples = total
+            epochs = total / es.samples_per_epoch
+            obs_loss = el.curve.loss(epochs)
+            es.observations.append((epochs, obs_loss))
+            if len(es.observations) > 64:
+                del es.observations[0]
+            if len(es.observations) >= 3:
+                fitted = QualityCurve.fit(es.observations)
+                if fitted is not None:
+                    es.fitted = fitted
+            if t < es.cooldown_until:
+                continue
+            if (el.damper_loss > 0.0 and obs_loss <= el.damper_loss
+                    and el.level < len(el.levels) - 1):
+                self._reshape(js, oc, t, el.level + 1, es)
+                continue
+            pred = es.fitted if es.fitted is not None else el.curve
+            if (el.marginal_floor > 0.0 and el.level > 0
+                    and pred.marginal(epochs) < el.marginal_floor):
+                self._reshape(js, oc, t, el.level - 1, es)
+
+    def _reshape(self, js: JobState, oc, t: int, new_level: int,
+                 es: ElasticState) -> None:
+        """Mid-run demand change: release the job's residual commitment
+        through the preempt-release machinery and re-enter it with the
+        updated demand signature. Slot ``t``'s earnings stand (the release
+        starts at ``t + 1`` — completion-style, unlike a failure's
+        lost-slot release at ``t``). Arrival-driven policies get the
+        reshaped residual as a next-slot re-offer (the warm bundle store
+        sees a NEW signature and must recompute); slot-driven policies get
+        the spec swapped in place — arrival preserved, so the per-slot
+        ordering key fixed at activation stays identical in both engine
+        modes — and re-place the new demands at the next tick."""
+        job_id = js.job.job_id
+        residual = self._residual(js, t)
+        if residual is None:
+            return  # workload effectively done; completion will handle it
+        reshaped = residual.at_level(new_level)
+        self.window.release_from(job_id, t + 1)
+        oc.reshapes += 1
+        es.reshapes += 1
+        es.cooldown_until = t + 1 + self._reshape_cooldown
+        self.metrics.count("reshape")
+        self._notify(EventKind.RESHAPE, job_id, t)
+        if self.policy.reoffers_on_preempt:
+            self._set_active(js, False)
+            self._set_awaiting(js, True)
+            self.queue.push(Event(time=t + 1, kind=EventKind.ARRIVAL,
+                                  job=reshaped, requeue=True))
+        else:
+            js.job = replace(reshaped, arrival=js.job.arrival)
+            js.attempt += 1
+            js.progress = 0.0
+
     # -- crash consistency ---------------------------------------------
     def _pull(self) -> Optional[Event]:
         """Pull the next trace event, journaling it for recovery.
@@ -620,7 +757,7 @@ class SimEngine:
         state = copy.deepcopy((
             self.window, self.policy, self.metrics, self.states,
             self.queue, self._active, self._awaiting, self._incidents,
-            self._pending,
+            self._pending, self._elastic,
             (self._never_served, self._active_order, self._order_key,
              self._patience_heap, self._patience_seen),
         ))
@@ -657,7 +794,7 @@ class SimEngine:
         with _trace.span("sim.recover", slot=ck.slot, consumed=ck.consumed):
             (self.window, self.policy, self.metrics, self.states,
              self.queue, self._active, self._awaiting, self._incidents,
-             self._pending,
+             self._pending, self._elastic,
              (self._never_served, self._active_order, self._order_key,
               self._patience_heap, self._patience_seen),
              ) = copy.deepcopy(ck.state)
@@ -837,6 +974,10 @@ class SimEngine:
             else:
                 self._account_progress(t)
                 self._check_patience(t)
+            # elastic reshape triggers run AFTER progress/patience in both
+            # modes, through the one shared scan — mode parity by
+            # construction
+            self._check_reshapes(t)
             active = len(self._active)
             if self._batched:
                 queued = len(self._never_served)
@@ -921,6 +1062,14 @@ class SimEngine:
                 reg.gauge(
                     "repro_" + name,
                     "primal-dual telemetry (summary view)",
+                ).set(float(v))
+        for k in ("reshapes", "deadline_jobs", "deadline_attainment",
+                  "slo_jobs", "slo_attainment", "final_loss_mean"):
+            v = summary.get(k)
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                reg.gauge(
+                    "repro_quality_" + k,
+                    "elastic-job quality/SLO stat (summary view)",
                 ).set(float(v))
         if self._adm_n:
             adm = self.admission_latency()

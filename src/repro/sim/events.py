@@ -1,6 +1,6 @@
 """Discrete-event vocabulary and the heap-ordered clock for ``repro.sim``.
 
-Seven event kinds drive the simulation:
+These event kinds drive the simulation:
 
   ARRIVAL      — a job (or same-slot batch of jobs) enters the system and
                  is offered to the policy. Queue input (traces yield
@@ -26,6 +26,12 @@ Seven event kinds drive the simulation:
                  sits out the failed slot, and admission-driven policies
                  get the residual re-offered. Engine-emitted notification
                  only.
+  RESHAPE      — a running elastic job's quality dynamics crossed a
+                 trigger (SLAQ marginal-loss floor or adadamp batch-size
+                 damper): the engine releases its residual commitment
+                 through the preempt-release machinery and re-enters it as
+                 a re-offer with the *updated* demand signature.
+                 Engine-emitted notification only.
 
 The engine raises on queued kinds outside {ARRIVAL, FAILURE, DEPARTURE,
 MACHINE_DOWN, MACHINE_UP}.
@@ -63,6 +69,7 @@ class EventKind(IntEnum):
     COMPLETION = 5
     ARRIVAL = 6
     SLOT = 7          # the per-slot scheduling tick (slot-driven policies)
+    RESHAPE = 8       # elastic demand change (engine-emitted notification)
 
 
 @dataclass(frozen=True)

@@ -177,6 +177,29 @@ class _StreamState:
         self.closed_preempt = 0
         self.closed_wasted = 0.0
         self.closed_utility = 0.0
+        # elastic / quality counters (exact; folded from BOTH hooks, so a
+        # deadline job that departs still counts as a deadline miss)
+        self.reshapes = 0
+        self.deadline_jobs = 0
+        self.deadline_hits = 0
+        self.slo_jobs = 0
+        self.slo_hits = 0
+        self.final_loss_sum = 0.0
+        self.final_loss_n = 0
+
+    def _absorb_quality(self, oc: "JobOutcome") -> None:
+        self.reshapes += int(oc.reshapes)
+        if oc.deadline is not None:
+            self.deadline_jobs += 1
+            if oc.deadline_hit:
+                self.deadline_hits += 1
+        if oc.loss_slo is not None:
+            self.slo_jobs += 1
+            if oc.slo_hit:
+                self.slo_hits += 1
+        if oc.final_loss is not None:
+            self.final_loss_sum += float(oc.final_loss)
+            self.final_loss_n += 1
 
     def absorb_censored(self, oc: "JobOutcome") -> None:
         self.n_closed += 1
@@ -192,6 +215,7 @@ class _StreamState:
         self.closed_preempt += int(oc.preemptions)
         self.closed_wasted += float(oc.samples_trained)
         self.closed_utility += float(oc.utility)
+        self._absorb_quality(oc)
 
     def absorb(self, oc: "JobOutcome") -> None:
         self.n_completed += 1
@@ -206,6 +230,7 @@ class _StreamState:
         if oc.queue_delay is not None:
             self.delay_p50.observe(float(oc.queue_delay))
             self.delay_p95.observe(float(oc.queue_delay))
+        self._absorb_quality(oc)
 
 
 @dataclass
@@ -220,6 +245,12 @@ class JobOutcome:
     preemptions: int = 0
     utility: float = 0.0
     samples_trained: float = 0.0       # across ALL attempts (goodput basis)
+    # elastic / quality-driven columns (engine-written; every field is set
+    # BEFORE the outcome is folded — streaming mode drops the row at fold)
+    reshapes: int = 0                  # mid-run demand-level changes
+    final_loss: Optional[float] = None  # ground-truth loss at close
+    deadline: Optional[int] = None     # absolute completion-SLO slot
+    loss_slo: Optional[float] = None   # final-loss SLO threshold
 
     @property
     def jct(self) -> Optional[int]:
@@ -232,6 +263,21 @@ class JobOutcome:
         if self.first_service is None:
             return None
         return self.first_service - self.arrival
+
+    @property
+    def deadline_hit(self) -> Optional[bool]:
+        """None when no deadline; a non-completed deadline job is a miss."""
+        if self.deadline is None:
+            return None
+        return self.completed_at is not None and self.completed_at <= self.deadline
+
+    @property
+    def slo_hit(self) -> Optional[bool]:
+        """None when no loss SLO; a job that closed without a measured
+        final loss (never served) is a miss."""
+        if self.loss_slo is None:
+            return None
+        return self.final_loss is not None and self.final_loss <= self.loss_slo
 
 
 def _pct(xs: List[float], q: float) -> float:
@@ -344,6 +390,25 @@ class MetricsCollector:
         for h in degraded:
             self._down_slots[h] = self._down_slots.get(h, 0) + 1
 
+    @staticmethod
+    def _quality_columns(reshapes: int, dl_jobs: int, dl_hits: int,
+                         slo_jobs: int, slo_hits: int,
+                         loss_sum: float, loss_n: int) -> Dict:
+        """The elastic quality/SLO column block, shared by both summary
+        paths so the exact and streaming schemas cannot drift. Attainment
+        over zero SLO jobs is vacuously 1.0 (same convention as
+        ``goodput_fraction`` with nothing trained)."""
+        return {
+            "reshapes": int(reshapes),
+            "deadline_jobs": int(dl_jobs),
+            "deadline_hits": int(dl_hits),
+            "deadline_attainment": (dl_hits / dl_jobs if dl_jobs else 1.0),
+            "slo_jobs": int(slo_jobs),
+            "slo_hits": int(slo_hits),
+            "slo_attainment": (slo_hits / slo_jobs if slo_jobs else 1.0),
+            "final_loss_mean": (loss_sum / loss_n if loss_n else 0.0),
+        }
+
     # ------------------------------------------------------------ report
     def jct_cdf(self) -> Tuple[List[float], List[float]]:
         """Empirical (JCT, P[JCT <= x]) over completed jobs (Fig. 12-13
@@ -423,6 +488,16 @@ class MetricsCollector:
             "goodput_samples": goodput,
             "wasted_samples": wasted,
             "goodput_fraction": goodput / trained if trained > 0 else 1.0,
+            **self._quality_columns(
+                sum(oc.reshapes for oc in ocs),
+                sum(1 for oc in ocs if oc.deadline is not None),
+                sum(1 for oc in ocs if oc.deadline_hit),
+                sum(1 for oc in ocs if oc.loss_slo is not None),
+                sum(1 for oc in ocs if oc.slo_hit),
+                float(sum(oc.final_loss for oc in ocs
+                          if oc.final_loss is not None)),
+                sum(1 for oc in ocs if oc.final_loss is not None),
+            ),
             "machine_incidents": (len(self.incident_log)
                                   + len(self._open_incidents)),
             "mttr": mean([float(x) for x in repairs]),
@@ -499,6 +574,20 @@ class MetricsCollector:
             "wasted_samples": wasted,
             "goodput_fraction": (st.sum_goodput / trained
                                  if trained > 0 else 1.0),
+            **self._quality_columns(
+                st.reshapes + sum(oc.reshapes for oc in ocs),
+                st.deadline_jobs + sum(
+                    1 for oc in ocs if oc.deadline is not None),
+                st.deadline_hits + sum(1 for oc in ocs if oc.deadline_hit),
+                st.slo_jobs + sum(
+                    1 for oc in ocs if oc.loss_slo is not None),
+                st.slo_hits + sum(1 for oc in ocs if oc.slo_hit),
+                st.final_loss_sum + float(sum(
+                    oc.final_loss for oc in ocs
+                    if oc.final_loss is not None)),
+                st.final_loss_n + sum(
+                    1 for oc in ocs if oc.final_loss is not None),
+            ),
             "machine_incidents": (len(self.incident_log)
                                   + len(self._open_incidents)),
             "mttr": mean([float(x) for x in repairs]),

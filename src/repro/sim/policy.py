@@ -173,6 +173,8 @@ class SchedulingPolicy:
             self.on_complete(event.subject(), event.time, view)
         elif event.kind == EventKind.PREEMPT:
             self.on_preempt(event.subject(), event.time, view)
+        elif event.kind == EventKind.RESHAPE:
+            self.on_reshape(event.subject(), event.time, view)
         elif event.kind == EventKind.DEPARTURE:
             self.on_depart(event.subject(), event.time, view)
         return Decision()
@@ -189,6 +191,15 @@ class SchedulingPolicy:
 
     def on_preempt(self, job_id: int, t: int, view: RollingWindow) -> None:
         pass
+
+    def on_reshape(self, job_id: int, t: int, view: RollingWindow) -> None:
+        """An elastic job's demand level changed mid-run: the engine has
+        already released its residual rows, exactly like a preemption, so
+        by default policies drop internal state the same way (slot-driven
+        policies discard the held allocation and re-place the job's NEW
+        demands next tick; arrival-driven policies see the reshaped spec
+        as a requeued ARRIVAL)."""
+        self.on_preempt(job_id, t, view)
 
     def on_depart(self, job_id: int, t: int, view: RollingWindow) -> None:
         pass
@@ -251,6 +262,7 @@ class PDORSPolicy(SchedulingPolicy):
         quanta: int = 16,
         cfg: Optional[SubproblemConfig] = None,
         rng_mode: str = "derived",
+        use_warm_bundles: bool = True,
     ):
         if rng_mode not in ("derived", "compat"):
             raise ValueError(f"rng_mode must be derived|compat, got {rng_mode!r}")
@@ -258,6 +270,12 @@ class PDORSPolicy(SchedulingPolicy):
         self.quanta = quanta
         self.base_cfg = cfg or SubproblemConfig()
         self.rng_mode = rng_mode
+        # warm-vs-cold parity switch: False disables the warm bundle store
+        # entirely (every plan rebuilds its bundles from the live ledger).
+        # Decisions MUST be bit-identical either way — the warm store is a
+        # cache, never an approximation — and the elastic property suite
+        # asserts exactly that under signature churn.
+        self.use_warm_bundles = bool(use_warm_bundles)
         self.attempts: Dict[int, int] = {}
 
     def bind(self, view: RollingWindow, seed: int) -> None:
@@ -289,7 +307,7 @@ class PDORSPolicy(SchedulingPolicy):
         """Collect warm bundles for one job's plan slots. Keys carry the
         slot's version stamp, so a stale row can never hit."""
         cl = view.cluster
-        if cl.backend.is_device:
+        if cl.backend.is_device or not self.use_warm_bundles:
             return None
         if view.now != self._warm_now:
             self._warm_bundles = {
@@ -316,7 +334,7 @@ class PDORSPolicy(SchedulingPolicy):
         """Store the freshly built plan's bundle rows (called right after
         the build, before any admission can mutate the ledger)."""
         cl = view.cluster
-        if cl.backend.is_device:
+        if cl.backend.is_device or not self.use_warm_bundles:
             return
         sig = self._bundle_sig(view, rel)
         for t, snap in plan.snaps.items():

@@ -35,12 +35,13 @@ from typing import Iterator, List, Optional, Tuple
 import numpy as np
 
 from ..core.cluster import Cluster
-from ..core.job import JobSpec
+from ..core.job import ElasticProfile, JobSpec, QualityCurve
 from ..core.pricing import PriceParams, estimate_price_params
 from ..core.workload import WorkloadConfig, draw_job
 from .events import Event, EventKind
 
 _TAG_TRACE = 7
+_TAG_ELASTIC = 14  # separate per-job stream for elastic annotations
 PRESETS = ("google", "philly", "alternating")
 
 
@@ -60,6 +61,18 @@ class TraceConfig:
     # philly heavy-tail knobs
     tail_sigma: float = 1.2          # lognormal sigma on job size
     tail_cap: float = 40.0           # cap on the size multiplier
+    # elastic / quality-driven scenario band. All fractions default 0 and
+    # all annotation draws come from a SEPARATE per-job derived stream
+    # ((seed, _TAG_ELASTIC, i)), so the base trace — arrivals, job
+    # parameters, failure slots — is byte-identical to a non-elastic
+    # config at equal knobs.
+    elastic_frac: float = 0.0        # fraction of jobs given a profile
+    elastic_levels: Tuple[float, ...] = (0.5, 1.0, 1.5)
+    marginal_floor: float = 0.0      # SLAQ shrink trigger (0 = off)
+    damper_loss: float = 0.0         # adadamp grow trigger (0 = off)
+    deadline_frac: float = 0.0       # elastic jobs ALSO given a deadline
+    deadline_slack: Tuple[float, float] = (1.5, 4.0)  # x min_completion
+    slo_frac: float = 0.0            # elastic jobs ALSO given a loss SLO
 
     def workload_config(self) -> WorkloadConfig:
         """The per-job parameter ranges backing this preset."""
@@ -103,6 +116,42 @@ def _philly_tail(job: JobSpec, rng: np.random.Generator,
     )
 
 
+def _annotate_elastic(job: JobSpec, rng: np.random.Generator,
+                      cfg: TraceConfig) -> JobSpec:
+    """Attach an ElasticProfile drawn from the job's dedicated elastic
+    stream. Draw order is frozen (curve a, b, c; start level; deadline
+    gate + slack; SLO gate + epoch fraction) — append-only, like
+    ``draw_job``, so recorded elastic traces stay reproducible."""
+    a = float(rng.uniform(0.3, 1.5))
+    b = float(rng.uniform(0.5, 2.0))
+    c = float(rng.uniform(0.02, 0.2))
+    curve = QualityCurve(a=a, b=b, c=c)
+    level = int(rng.integers(0, len(cfg.elastic_levels)))
+    deadline: Optional[int] = None
+    if cfg.deadline_frac > 0 and rng.random() < cfg.deadline_frac:
+        lo, hi = cfg.deadline_slack
+        deadline = max(1, int(math.ceil(
+            job.min_completion_slots() * float(rng.uniform(lo, hi)))))
+    loss_slo: Optional[float] = None
+    if cfg.slo_frac > 0 and rng.random() < cfg.slo_frac:
+        # achievable iff the job trains most of its epochs: the SLO is the
+        # true curve's loss at a drawn fraction of the full epoch budget
+        frac = float(rng.uniform(0.5, 1.0))
+        loss_slo = curve.loss(frac * job.epochs)
+    profile = ElasticProfile(
+        levels=tuple(cfg.elastic_levels),
+        level=level,
+        curve=curve,
+        marginal_floor=float(cfg.marginal_floor),
+        damper_loss=float(cfg.damper_loss),
+        deadline=deadline,
+        loss_slo=loss_slo,
+    )
+    # the drawn spec IS the start level's shape: later level changes scale
+    # relative to it (JobSpec.at_level is ratio-based)
+    return replace(job, elastic=profile)
+
+
 def job_stream(cfg: TraceConfig) -> Iterator[Tuple[JobSpec, Optional[int]]]:
     """Yield (job, fail_at) pairs in arrival order."""
     wcfg = cfg.workload_config()
@@ -124,6 +173,12 @@ def job_stream(cfg: TraceConfig) -> Iterator[Tuple[JobSpec, Optional[int]]]:
         if cfg.failure_rate > 0 and rng.random() < cfg.failure_rate:
             lo, hi = cfg.failure_delay
             fail_at = arrival + int(rng.integers(lo, hi + 1))
+        if cfg.elastic_frac > 0:
+            ern = np.random.default_rng(
+                np.random.SeedSequence((seed, _TAG_ELASTIC, i))
+            )
+            if ern.random() < cfg.elastic_frac:
+                job = _annotate_elastic(job, ern, cfg)
         yield job, fail_at
 
 

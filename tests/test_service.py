@@ -13,7 +13,9 @@ import json
 
 import pytest
 
-from repro.core import make_cluster
+from dataclasses import replace
+
+from repro.core import ElasticProfile, QualityCurve, make_cluster
 from repro.core.pdors import PDORS
 from repro.core.pricing import estimate_price_params
 from repro.sim import OfferService, TraceConfig, sample_jobs
@@ -175,6 +177,163 @@ def test_graceful_shutdown_no_dropped_offers():
         assert len(grants) == admitted
         with pytest.raises(RuntimeError):
             await svc.submit(jobs[0])
+
+    asyncio.run(main())
+
+
+# ---------------------------------- reshape / requeue churn (ISSUE 10)
+def _elastify(job, level=1):
+    """Attach a mid-level elastic profile so ``at_level`` re-offers are
+    legal (the service itself never inspects the profile — it only sees
+    the reshaped demand vectors)."""
+    return replace(job, elastic=ElasticProfile(
+        levels=(0.5, 1.0, 1.5), level=level,
+        curve=QualityCurve(a=0.8, b=1.0, c=0.1)))
+
+
+def _gauge(text, name):
+    for line in text.splitlines():
+        if line.startswith(f"{name} "):
+            return float(line.split()[1])
+    raise AssertionError(f"gauge {name} missing from exposition")
+
+
+def test_reshape_reoffer_changed_signature_round_trip():
+    """A reshaped re-offer (same job_id, demands scaled by ``at_level``)
+    flows through the service as an ordinary submission: it gets its own
+    admission decision against the current ledger and its grant carries
+    the *reshaped* schedule — the service never caches by job_id."""
+    async def main():
+        jobs = [_elastify(j) for j in _jobs(n=8, seed=13)]
+        svc = await OfferService(_scheduler(jobs, W=48),
+                                 batch_window=0.001).start()
+        svc.register("w0", cores=4)
+        first = await asyncio.gather(*[svc.submit(j) for j in jobs])
+        admitted = [r.job for r in first if r.admitted]
+        assert admitted, "need at least one admitted job to reshape"
+        # reshape every admitted job down a level and re-offer it
+        reoffers = [j.at_level(0) for j in admitted]
+        for orig, down in zip(admitted, reoffers):
+            assert down.job_id == orig.job_id
+            assert down.worker_demand != orig.worker_demand
+        second = await asyncio.gather(*[svc.submit(j) for j in reoffers])
+        assert len(second) == len(reoffers)       # every future resolved
+        for rec in second:
+            assert rec.job.elastic.level == 0     # decision is on the twin
+        assert svc.offers_total == len(jobs) + len(reoffers)
+        # grants: one per admission, re-offered job_ids may appear twice
+        grants = []
+        while True:
+            more = await svc.poll("w0", timeout=0.05)
+            if not more:
+                break
+            grants.extend(more)
+        assert len(grants) == sum(r.admitted for r in first + second)
+        await svc.close()
+
+    asyncio.run(main())
+
+
+def test_long_poll_grant_ordering_under_requeue_churn():
+    """Grants drain in batch order, job_id-ascending within each batch —
+    a requeue storm (second batch re-offering the first batch's jobs in
+    scrambled order) must not interleave or reorder them."""
+    async def main():
+        jobs = [_elastify(j) for j in _jobs(n=10, seed=21)]
+        svc = await OfferService(_scheduler(jobs, W=48),
+                                 batch_window=0.002).start()
+        svc.register("w0", cores=4)
+        first = await asyncio.gather(*[svc.submit(j) for j in jobs])
+        batch1 = [r.job.job_id for r in first if r.admitted]
+        assert batch1 == sorted(batch1)
+        reoffers = [r.job.at_level(0) for r in first if r.admitted]
+        second = await asyncio.gather(
+            *[svc.submit(j) for j in reversed(reoffers)])
+        batch2 = sorted(r.job.job_id for r in second if r.admitted)
+        assert svc.batches_total == 2
+        drained = []
+        while True:
+            more = await svc.poll("w0", timeout=0.05, max_items=3)
+            if not more:
+                break
+            drained.extend(g["job_id"] for g in more)
+        assert drained == batch1 + batch2
+        await svc.close()
+
+    asyncio.run(main())
+
+
+def test_shutdown_flush_with_pending_reoffers():
+    """``close()`` while reshaped re-offers are still queued: the final
+    flush offers them, every future resolves, and their grants stay
+    pollable — a requeue in flight at shutdown is never dropped."""
+    async def main():
+        jobs = [_elastify(j) for j in _jobs(n=8, seed=3)]
+        svc = await OfferService(_scheduler(jobs, W=48),
+                                 batch_window=0.001).start()
+        svc.register("w0", cores=2)
+        first = await asyncio.gather(*[svc.submit(j) for j in jobs])
+        admitted = [r.job for r in first if r.admitted]
+        assert admitted
+        # drain the first round so only re-offer grants remain afterwards
+        while await svc.poll("w0", timeout=0.05):
+            pass
+        # re-offers park in the (now huge) batch window until close()
+        svc.batch_window = 30.0
+        pending = [asyncio.create_task(svc.submit(j.at_level(2)))
+                   for j in admitted]
+        await asyncio.sleep(0.01)
+        assert not any(t.done() for t in pending)
+        await svc.close()
+        recs = await asyncio.gather(*pending)
+        assert len(recs) == len(admitted)
+        assert svc.offers_total == len(jobs) + len(admitted)
+        grants = []
+        while True:
+            more = await svc.poll("w0", timeout=0.05)
+            if not more:
+                break
+            grants.extend(more)
+        assert len(grants) == sum(r.admitted for r in recs)
+        with pytest.raises(RuntimeError):
+            await svc.submit(admitted[0])
+
+    asyncio.run(main())
+
+
+def test_metrics_slo_gauges_consistent_under_churn():
+    """The ``/metrics`` SLO gauges (admission latency, offer counters,
+    pending grants) must track the live counters exactly through a
+    submit/reshape/poll churn cycle."""
+    async def main():
+        jobs = [_elastify(j) for j in _jobs(n=10, seed=6)]
+        svc = await OfferService(_scheduler(jobs, W=48),
+                                 batch_window=0.001).start()
+        svc.register("w0", cores=4)
+        first = await asyncio.gather(*[svc.submit(j) for j in jobs])
+        reoffers = [r.job.at_level(0) for r in first if r.admitted]
+        await asyncio.gather(*[svc.submit(j) for j in reoffers])
+        text = svc.metrics_text()
+        lat = svc.admission_latency()
+        assert _gauge(text, "repro_service_offers_total") == svc.offers_total
+        assert (_gauge(text, "repro_service_admitted_total")
+                == svc.admitted_total)
+        assert (_gauge(text, "repro_service_batches_total")
+                == svc.batches_total)
+        assert (_gauge(text, "repro_service_grants_pending")
+                == len(svc._grants) > 0)
+        for k in ("p50_ms", "p99_ms", "mean_ms"):
+            assert _gauge(
+                text, f"repro_service_admission_latency_{k}"
+            ) == pytest.approx(lat[k])
+        assert lat["count"] == svc.offers_total
+        assert lat["p99_ms"] >= lat["p50_ms"] >= 0.0
+        # draining the long-poll queue must move the pending gauge to 0
+        while await svc.poll("w0", timeout=0.05):
+            pass
+        assert _gauge(svc.metrics_text(),
+                      "repro_service_grants_pending") == 0
+        await svc.close()
 
     asyncio.run(main())
 

@@ -16,82 +16,32 @@ bounded by the in-flight job count on arbitrarily long streams.
 """
 from __future__ import annotations
 
-import numpy as np
 import pytest
 from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.sim import (
-    FaultPlan,
-    RollingWindow,
-    SimEngine,
-    TraceConfig,
-    calibrate_prices,
-    make_policy,
-    merge_event_streams,
-    stream,
-)
+from repro.sim import RollingWindow, SimEngine, make_policy
 from repro.core import make_cluster
 from repro.sim.metrics import MetricsCollector
 
-
-# ----------------------------------------------------------------------
-def _chaos_plan(seed: int, H: int) -> FaultPlan:
-    return FaultPlan(
-        seed=seed, until=200, crash_rate=0.02, straggler_rate=0.02,
-        downtime=(2, 6),
-        domains=[(h, h + 1) for h in range(0, H - 1, 2)],
-        domain_correlation=0.5,
-    )
-
-
-def _run(policy_name: str, mode: str, seed: int, *, num_jobs: int = 60,
-         rate: float = 3.0, faults: bool = False, metrics_mode="exact",
-         backend=None, refail: float = 0.1, H: int = 6, W: int = 12,
-         checkpoint_every=None):
-    tcfg = TraceConfig(num_jobs=num_jobs, seed=seed, arrival_rate=rate,
-                       failure_rate=0.1)
-    cl = make_cluster(H, W, backend=backend)
-    win = RollingWindow(cl)
-    if policy_name == "pdors":
-        params = calibrate_prices(tcfg, cl, n=16)
-        pol = make_policy("pdors", price_params=params, quanta=8)
-    else:
-        pol = make_policy(policy_name)
-    eng = SimEngine(win, pol, seed=seed, max_slots=2500,
-                    patience=tcfg.patience, metrics_mode=metrics_mode,
-                    engine_mode=mode, refail_rate=refail,
-                    checkpoint_every=checkpoint_every)
-    ev = stream(tcfg)
-    if faults:
-        ev = merge_event_streams(ev, _chaos_plan(seed, H).events(H))
-    rep = eng.run(ev)
-    return rep, eng
-
-
-def _assert_equivalent(policy, seed, **kw):
-    r1, e1 = _run(policy, "event", seed, **kw)
-    r2, e2 = _run(policy, "batched", seed, **kw)
-    assert r1.summary == r2.summary
-    assert r1.slots_run == r2.slots_run
-    assert np.array_equal(np.asarray(e1.window.cluster._used),
-                          np.asarray(e2.window.cluster._used))
-    assert e1.journal == e2.journal
-    # per-job outcome rows agree too (exact mode retains them all)
-    if kw.get("metrics_mode", "exact") == "exact":
-        assert e1.metrics.outcomes == e2.metrics.outcomes
+from strategies import (
+    SLOT_POLICIES,
+    assert_equivalent as _assert_equivalent,
+    policies,
+    run_sim as _run,
+    seeds,
+)
 
 
 # ------------------------------------------------------------ property
 @settings(max_examples=8)
-@given(st.integers(0, 10**6), st.sampled_from(["fifo", "drf", "dorm"]))
+@given(seeds(), policies(SLOT_POLICIES))
 def test_batched_equiv_clean_event_soup(seed, policy):
     """Randomized clean streams: batched == oracle bit-for-bit."""
     _assert_equivalent(policy, seed)
 
 
 @settings(max_examples=6)
-@given(st.integers(0, 10**6), st.sampled_from(["fifo", "drf", "dorm"]))
+@given(seeds(), policies(SLOT_POLICIES))
 def test_batched_equiv_chaos_event_soup(seed, policy):
     """Chaos soups (machine incidents + failures + re-fail cascades)
     force same-slot collisions across every event kind."""
@@ -99,7 +49,7 @@ def test_batched_equiv_chaos_event_soup(seed, policy):
 
 
 @settings(max_examples=4)
-@given(st.integers(0, 10**6))
+@given(seeds())
 def test_batched_equiv_same_slot_collisions(seed):
     """Very high arrival rate: most slots carry multi-event groups."""
     _assert_equivalent("fifo", seed, rate=8.0, num_jobs=80)
